@@ -1,0 +1,52 @@
+"""Shared benchmark helpers: timing + the v5e resource model."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+# v5e per-chip constants (same as analysis.roofline.V5E)
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+
+# MXU passes per wide multiply and relative pass rate (int8 = 2x bf16)
+POLICY_MODEL = {
+    # name: (passes, rate_vs_bf16)
+    "native_bf16": (1, 1.0),
+    "bf16x3": (3, 1.0),
+    "bf16x6": (6, 1.0),
+    "kom_int14": (3, 2.0),       # the paper's multiplier
+    "schoolbook_int16": (4, 2.0),
+    "fp32": (6, 1.0),            # modeled via bf16x6 emulation
+}
+
+
+def time_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall microseconds per call (jit-compiled, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def v5e_matmul_delay_ns(m: int, k: int, n: int, policy: str) -> float:
+    """Roofline compute delay of one (m,k)x(k,n) under a pass model,
+    including MXU 128x128 tile padding (the paper's tiny 3x3..11x11 matrices
+    occupy one heavily-padded tile each)."""
+    passes, rate = POLICY_MODEL[policy]
+    tiles_m = -(-m // 128)
+    tiles_n = -(-n // 128)
+    tiles_k = -(-k // 128)
+    flops = tiles_m * tiles_n * tiles_k * (128 * 128 * 128 * 2)
+    return passes * flops / (PEAK_BF16 * rate) * 1e9
+
+
+def mxu_utilization(n: int) -> float:
+    """Useful fraction of the padded MXU tile for an n x n matmul."""
+    return (n * n * n) / (128.0 * 128.0 * min(n, 128))

@@ -1,0 +1,153 @@
+"""Hillclimb instrumentation: per-op cost breakdown + variant runner.
+
+Usage (must run in a fresh process; sets the 512-device flag):
+  PYTHONPATH=src python -m benchmarks.hillclimb_tools breakdown <arch> <shape> [k=v ...]
+  PYTHONPATH=src python -m benchmarks.hillclimb_tools variant <arch> <shape> <tag> [k=v ...]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json
+import pathlib
+import re
+import sys
+from collections import Counter
+
+
+def _parse_overrides(args):
+    ov = {}
+    for a in args:
+        k, v = a.split("=", 1)
+        if k == "act_dp":
+            ov[k] = tuple(x for x in v.split(",") if x)
+            continue
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "true"):
+            v = True
+        if v in ("False", "false"):
+            v = False
+        ov[k] = v
+    return ov
+
+
+def compile_cell(arch, shape_name, overrides):
+    import jax
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs
+    from repro.launch.step_fns import make_prefill_step, make_serve_step, make_train_step
+    from repro.models.config import SHAPES
+
+    ov = dict(act_dp=("data",), param_dtype="bfloat16")
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        ov.update(remat=True, seq_shard=True)
+    elif shape.kind == "prefill":
+        ov.update(seq_shard=True)
+    ov.update(overrides)
+    cfg = get_config(arch, **ov)
+    mesh = make_production_mesh()
+    specs = input_specs(cfg, shape_name, mesh)
+    with mesh:
+        if shape.kind == "train":
+            lowered = jax.jit(make_train_step(cfg), donate_argnums=(0, 1)).lower(
+                specs["params"], specs["opt_state"], specs["batch"])
+        elif shape.kind == "prefill":
+            lowered = jax.jit(make_prefill_step(cfg)).lower(
+                specs["params"], specs["batch"])
+        else:
+            lowered = jax.jit(make_serve_step(cfg), donate_argnums=(1,)).lower(
+                specs["params"], specs["cache"], specs["tokens"], specs["pos"])
+        compiled = lowered.compile()
+    return cfg, compiled
+
+
+def breakdown(arch, shape_name, overrides):
+    from repro.analysis import hlo_stats as H
+    cfg, compiled = compile_cell(arch, shape_name, overrides)
+    comps = H.parse_hlo(compiled.as_text())
+    byte_ctr, coll_ctr, flop_ctr = Counter(), Counter(), Counter()
+
+    def walk(nm, mult, in_fusion, depth=0):
+        c = comps[nm]
+        for ins in c.instrs:
+            if not in_fusion and ins.op not in H._FREE_OPS:
+                byte_ctr[(nm[:48], ins.op)] += \
+                    H._effective_io_bytes(ins, c, comps)[0] * mult
+            if ins.op == "dot":
+                flop_ctr[(nm[:48], "dot")] += H._dot_flops(ins, c) * mult
+            if ins.op in H.COLLECTIVE_OPS and not in_fusion:
+                ib = sum(H._bytes_of(c, o) for o in ins.operands)
+                shape = ins.type_str.strip()[:44]
+                coll_ctr[(nm[:48], ins.op, shape)] += ib * mult
+            called = H._called(ins)
+            if ins.op == "while":
+                body = next((n for n, k in called if k == "body"), None)
+                cond = next((n for n, k in called if k == "cond"), None)
+                bc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.attrs)
+                t = float(bc.group(1)) if bc else (
+                    H._trip_count(comps[cond], comps, None) if cond in comps else 1)
+                if body in comps:
+                    walk(body, mult * t, in_fusion, depth + 1)
+            elif ins.op == "fusion":
+                pass
+
+    walk("__entry__", 1.0, False)
+    ma = compiled.memory_analysis()
+    print(f"== {arch} {shape_name} {overrides}")
+    print(f"memory/device: args {ma.argument_size_in_bytes/1e9:.1f} "
+          f"temp {ma.temp_size_in_bytes/1e9:.1f} GB")
+    tot = sum(byte_ctr.values())
+    print(f"-- top bytes (total {tot:.3e}) --")
+    for (nm, op), v in byte_ctr.most_common(12):
+        print(f"  {v:.3e} {v/tot*100:5.1f}% {op:18s} {nm}")
+    ctot = sum(coll_ctr.values())
+    print(f"-- top collectives (total {ctot:.3e}) --")
+    for (nm, op, sh), v in coll_ctr.most_common(12):
+        print(f"  {v:.3e} {v/ctot*100:5.1f}% {op:16s} {sh:46s} {nm}")
+    ftot = sum(flop_ctr.values())
+    print(f"-- top dot flops (total {ftot:.3e}) --")
+    for (nm, op), v in flop_ctr.most_common(8):
+        print(f"  {v:.3e} {v/ftot*100:5.1f}% {nm}")
+
+
+def variant(arch, shape_name, tag, overrides):
+    from repro.launch.dryrun import run_cell
+    out = pathlib.Path("results/dryrun")
+    rec = run_cell(arch, shape_name, multi_pod=False, outdir=out, force=True,
+                   overrides=overrides, tag=f"__{tag}")
+    base_p = out / f"{arch}__{shape_name}__16x16.json"
+    base = json.loads(base_p.read_text()) if base_p.exists() else None
+    if not rec.get("ok"):
+        print("FAIL:", rec.get("error"))
+        print(rec.get("trace", "")[-1500:])
+        return
+    r = rec["roofline"]
+    print(f"== variant {tag}: {overrides}")
+    for k in ("compute_s", "memory_s", "collective_s", "step_time_s",
+              "mfu_est", "useful_flops_ratio", "memory_kernel_s",
+              "step_time_kernel_s", "mfu_kernel_est"):
+        if k not in r or (base and k not in base.get("roofline", {})):
+            print(f"  {k:18s} {r.get(k, float('nan')):10.4f}")
+            continue
+        line = f"  {k:18s} {r[k]:10.4f}"
+        if base and base.get("roofline"):
+            b = base["roofline"][k]
+            line += f"   baseline {b:10.4f}   delta {100*(r[k]-b)/max(b,1e-12):+7.1f}%"
+        print(line)
+    print(f"  live_gb {rec['bytes_per_device']['live_gb']}"
+          + (f" (baseline {base['bytes_per_device']['live_gb']})" if base else ""))
+
+
+if __name__ == "__main__":
+    mode, arch, shape_name = sys.argv[1], sys.argv[2], sys.argv[3]
+    if mode == "breakdown":
+        breakdown(arch, shape_name, _parse_overrides(sys.argv[4:]))
+    else:
+        tag = sys.argv[4]
+        variant(arch, shape_name, tag, _parse_overrides(sys.argv[5:]))

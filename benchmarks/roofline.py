@@ -1,0 +1,85 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Emits one row per (arch x shape x mesh) cell with the three terms, dominant
+bottleneck, MODEL_FLOPS/HLO ratio and estimated MFU; also renders the
+markdown table for EXPERIMENTS.md (--markdown).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def cells(mesh: str | None = None, tag: str = ""):
+    for p in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("tag", "") != tag:
+            continue
+        yield rec
+
+
+def run(emit):
+    if not RESULTS.exists():
+        emit("roofline/missing", 0.0, "run python -m repro.launch.dryrun first")
+        return
+    for rec in cells():
+        key = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("skipped"):
+            emit(key, 0.0, f"SKIP: {rec['skipped']}")
+            continue
+        if not rec.get("ok"):
+            emit(key, 0.0, f"FAIL: {rec.get('error', '?')[:80]}")
+            continue
+        r = rec["roofline"]
+        emit(
+            key,
+            r["step_time_s"] * 1e6,
+            f"dom={r['dominant']} compute_s={r['compute_s']:.3f} "
+            f"memory_s={r['memory_s']:.3f} collective_s={r['collective_s']:.3f} "
+            f"mfu={r['mfu_est']:.4f} useful={r['useful_flops_ratio']:.3f} "
+            f"live_gb={rec['bytes_per_device']['live_gb']}",
+        )
+
+
+def markdown(mesh: str = "16x16", tag: str = "") -> str:
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPS | useful ratio | MFU est | MFU (kernel) | live GB | "
+        "fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in cells(mesh, tag):
+        if rec.get("skipped"):
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | skipped "
+                f"({rec['skipped'][:40]}…) | — | — | — | — | — | — |"
+            )
+            continue
+        if not rec.get("ok"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | FAIL: "
+                        f"{rec.get('error','?')[:60]} ||||||||||")
+            continue
+        r = rec["roofline"]
+        b = rec["bytes_per_device"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['mfu_est']:.4f} | {r.get('mfu_kernel_est', 0):.4f} | "
+            f"{b['live_gb']} | {'yes' if b['fits_16gb'] else 'NO'} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--markdown") + 1] \
+            if len(sys.argv) > sys.argv.index("--markdown") + 1 else "16x16"
+        print(markdown(mesh))
+    else:
+        run(lambda k, us, d: print(f"{k},{us:.1f},{d}"))

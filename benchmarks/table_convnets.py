@@ -1,0 +1,69 @@
+"""Paper section I / Tables 1-4 context: conv-layer multiplier demand of
+AlexNet, VGG16, VGG19, and what the KOM multiplier saves on each.
+
+For every conv layer: im2col-GEMM FLOPs, MXU passes under each multiplier,
+and the KOM saving.  One CPU wall measurement per network (first conv layer,
+jnp im2col path) keeps the table grounded in an executed number.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import MatmulPolicy
+from repro.core.systolic import conv2d_im2col
+from repro.models.cnn import ALEXNET, VGG16, VGG19
+
+from .common import PEAK_BF16, POLICY_MODEL, time_call
+
+
+def _conv_layers(cfg):
+    h = cfg.img_size
+    cin = cfg.in_channels
+    first = True
+    for spec in cfg.layers:
+        if spec[0] == "conv":
+            _, k, cout, stride = spec
+            if cfg.name == "alexnet" and first:
+                oh = (h - k) // stride + 1
+            else:
+                oh = -(-h // stride)
+            first = False
+            yield (k, cin, cout, stride, h, oh)
+            h, cin = oh, cout
+        elif spec[0] == "pool":
+            h = h // 2
+        else:
+            break
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    for cfg in (ALEXNET, VGG16, VGG19):
+        total_flops = 0.0
+        kernel_counts = {}
+        for (k, cin, cout, stride, h, oh) in _conv_layers(cfg):
+            flops = 2.0 * oh * oh * cout * (k * k * cin)
+            total_flops += flops
+            kernel_counts[k] = kernel_counts.get(k, 0) + cout
+        for pol in ("kom_int14", "schoolbook_int16", "native_bf16"):
+            passes, rate = POLICY_MODEL[pol]
+            v5e_ms = total_flops * passes / (PEAK_BF16 * rate) * 1e3
+            emit(f"convnets/{cfg.name}/{pol}", 0.0,
+                 f"conv_gflops={total_flops/1e9:.2f} v5e_ms={v5e_ms:.3f}")
+        emit(f"convnets/{cfg.name}/kernels", 0.0,
+             " ".join(f"{k}x{k}:{c}" for k, c in sorted(kernel_counts.items())))
+        # executed spot-check: first conv layer, reduced batch
+        (k, cin, cout, stride, h, _) = next(_conv_layers(cfg))
+        x = jnp.array(rng.standard_normal((1, h, h, cin)), jnp.float32)
+        w = jnp.array(rng.standard_normal((k, k, cin, cout)) * 0.1, jnp.float32)
+        fn = jax.jit(lambda a, b: conv2d_im2col(
+            a, b, stride=stride,
+            padding="VALID" if cfg.name == "alexnet" else "SAME",
+            policy=MatmulPolicy.KOM_INT14))
+        us = time_call(fn, x, w, iters=5, warmup=1)
+        emit(f"convnets/{cfg.name}/first_layer_kom_wall", us,
+             f"k={k} cin={cin} cout={cout}")

@@ -1,0 +1,40 @@
+"""Paper Table 5: multiplier delay comparison.
+
+The paper reports 4.604 ns (32-bit KOM) / 4.052 ns (16-bit KOM) vs 15.415 ns
+(Baugh-Wooley) / 47.5 ns (Dadda).  TPU restatement at MXU-realistic size
+(512^3 GEMM): per-policy v5e roofline delay from the pass model, plus the
+measured CPU wall time of the same jnp computation for cross-checking the
+relative ordering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import MatmulPolicy, policy_matmul
+
+from .common import POLICY_MODEL, time_call, v5e_matmul_delay_ns
+
+SIZE = 512
+POLICIES = ("kom_int14", "schoolbook_int16", "bf16x3", "bf16x6", "fp32",
+            "native_bf16")
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    a = jnp.array(rng.standard_normal((SIZE, SIZE)), jnp.float32)
+    b = jnp.array(rng.standard_normal((SIZE, SIZE)), jnp.float32)
+    base = None
+    for pol in POLICIES:
+        fn = jax.jit(lambda x, y, p=MatmulPolicy(pol): policy_matmul(x, y, policy=p))
+        us = time_call(fn, a, b, iters=10)
+        delay_us = v5e_matmul_delay_ns(SIZE, SIZE, SIZE, pol) / 1e3
+        if pol == "schoolbook_int16":
+            base = delay_us
+        emit(f"table5/delay_{SIZE}cubed/{pol}", us,
+             f"v5e_delay_us={delay_us:.3f}")
+    kom = v5e_matmul_delay_ns(SIZE, SIZE, SIZE, "kom_int14") / 1e3
+    emit("table5/kom_speedup_vs_schoolbook", 0.0,
+         f"ratio={kom/base:.3f} paper_ratio={4.604/15.415:.3f} "
+         "(paper compares KOM vs Baugh-Wooley)")

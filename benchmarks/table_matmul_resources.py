@@ -1,0 +1,49 @@
+"""Paper Tables 1-4: n x n matrix multiply resource utilization, n in {3,5,7,11}.
+
+FPGA slice-LUT counts map to the TPU resource model: narrow MXU passes x
+pass-normalized work, plus the measured CPU wall time of each implementation
+(jnp path; the Pallas kernels are validated separately in interpret mode).
+
+The paper's conclusion to reproduce: KOM uses the fewest multiplier
+resources.  TPU restatement: 3 int8 passes (kom_int14) vs 4
+(schoolbook_int16) vs 6 (fp32/bf16x6) per wide multiply, with int8 passes at
+2x bf16 rate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import MatmulPolicy, policy_matmul
+
+from .common import POLICY_MODEL, mxu_utilization, time_call, v5e_matmul_delay_ns
+
+ORDERS = (3, 5, 7, 11)  # the paper's matrix sizes == AlexNet/VGG kernel sizes
+POLICIES = ("kom_int14", "schoolbook_int16", "bf16x3", "bf16x6", "fp32",
+            "native_bf16")
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    for n in ORDERS:
+        a = jnp.array(rng.standard_normal((n, n)), jnp.float32)
+        b = jnp.array(rng.standard_normal((n, n)), jnp.float32)
+        for pol in POLICIES:
+            fn = jax.jit(lambda x, y, p=MatmulPolicy(pol): policy_matmul(x, y, policy=p))
+            us = time_call(fn, a, b)
+            passes, rate = POLICY_MODEL[pol]
+            delay = v5e_matmul_delay_ns(n, n, n, pol)
+            emit(
+                f"table1-4/matmul_{n}x{n}/{pol}",
+                us,
+                f"passes={passes} norm_passes={passes/rate:g} "
+                f"v5e_delay_ns={delay:.1f} mxu_util={mxu_utilization(n):.5f} "
+                f"scalar_mults={n**3}",
+            )
+        # paper's headline ratio for this table
+        emit(
+            f"table1-4/matmul_{n}x{n}/kom_vs_schoolbook",
+            0.0,
+            f"pass_ratio={3/4:.3f} (paper: fewest slice LUTs for KOM)",
+        )

@@ -1,0 +1,19 @@
+"""End-to-end driver: train an LM with the KOM matmul policy end to end.
+
+Default: a reduced granite-3-2b for CPU (~1 min, loss drops ~5.6 -> <4.2).
+The same flags train the ~125M xlstm or any full assigned config on real
+hardware (drop --reduced via --full, set --steps/--batch/--seq up).
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+      PYTHONPATH=src python examples/train_lm.py --policy kom_int14
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "granite-3-2b", "--steps", "80", "--batch", "8",
+        "--seq", "64", "--lr", "3e-3", "--log-every", "20",
+    ]
+    sys.exit(main(argv))

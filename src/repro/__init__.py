@@ -1,0 +1,2 @@
+"""repro: TPU-native reproduction of the Karatsuba-Ofman CNN accelerator."""
+__version__ = "0.1.0"

@@ -1,0 +1,466 @@
+"""HLO-text cost model: FLOPs / HBM bytes / collective bytes per device.
+
+Why not ``compiled.cost_analysis()``?  XLA's analysis counts a ``while`` body
+**once**, but every model here scans over its layer stack, so the dominant
+cost sits inside while loops.  This parser walks the post-optimization HLO
+text, resolves the call graph (while / fusion / call / conditional) and
+multiplies loop bodies by their trip counts (parsed from the loop condition's
+comparison constant, with an optional hint override).
+
+Conventions (documented in DESIGN.md section 6):
+  * flops: dot = 2*out_elems*K; convolution = 2*out_elems*(kernel/out_ch);
+    elementwise arithmetic = out_elems (noise next to the GEMMs).
+  * bytes: at every non-free top-level instruction, operand bytes + output
+    bytes -- the same producer/consumer convention XLA's 'bytes accessed'
+    uses.  Fusion-internal instructions contribute flops but not bytes.
+  * collective bytes: sum of operand sizes per op kind (all-gather also adds
+    its output minus input -- the data actually received).
+All numbers are per-device: the input is the post-SPMD partitioned module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^(.*?)\s([\w\-]+)\(")
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota",
+    # control ops: their bodies are costed separately; the operand tuples
+    # alias in place (XLA buffer assignment), so no HBM traffic here
+    "while", "conditional", "call",
+}
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "select", "compare", "and", "or", "xor", "clamp", "floor",
+    "ceil", "round-nearest-afz", "sign",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "exponential-minus-one",
+                   "log-plus-one", "erf", "atan2", "cbrt"}
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shapes_bytes_elems(type_str: str):
+    """All (dtype, dims) in a type string -> (bytes, elems of first shape)."""
+    total_bytes = 0
+    first_elems = None
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_bytes += elems * DTYPE_BYTES[dt]
+        if first_elems is None:
+            first_elems = elems
+    return total_bytes, (first_elems or 0)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str
+    operands: List[str]
+    attrs: str
+    opnd_seg: str = ""
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    shapes: Dict[str, str]  # symbol -> type string
+    instrs: List[Instr]
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: HBM bytes moved by attention-score-shaped tensors (ndim>=4, both
+    #: trailing dims >= 512).  The Pallas flash kernel keeps these blocks in
+    #: VMEM on TPU; kernel-credit rooflines subtract them (EXPERIMENTS.md).
+    score_bytes: float = 0.0
+    #: FLOPs executed as s8 x s8 dots -- the KOM narrow passes; they run at
+    #: the 2x int8 MXU rate in the roofline compute term.
+    flops_int8: float = 0.0
+    #: FLOPs executed as f32 x f32 dots -- charged at the ~6-pass bf16
+    #: emulation rate the MXU pays for f32 matmuls.
+    flops_f32: float = 0.0
+
+    def __iadd__(self, o: "Stats"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        self.score_bytes += o.score_bytes
+        self.flops_int8 += o.flops_int8
+        self.flops_f32 += o.flops_f32
+        for k, v in o.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Stats":
+        return Stats(
+            self.flops * m, self.bytes * m, self.transcendentals * m,
+            {k: v * m for k, v in self.collective_bytes.items()},
+            self.score_bytes * m, self.flops_int8 * m, self.flops_f32 * m,
+        )
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _split_params(sig: str) -> List[str]:
+    """Split 'a: t, b: (t, t)' respecting nesting."""
+    out, depth, cur = [], 0, ""
+    for ch in sig:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur)
+    return out
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_alias = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        m = _COMP_HDR.match(line)
+        if m and line.endswith("{"):
+            is_entry, name, sig = m.group(1), m.group(2), m.group(3)
+            cur = Computation(name, {}, [])
+            comps[name] = cur
+            if is_entry:
+                entry_alias = name
+            for p in _split_params(sig):
+                if ":" in p:
+                    pn, pt = p.split(":", 1)
+                    cur.shapes[pn.strip().lstrip("%")] = pt.strip()
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        is_root, iname, rest = bool(im.group(1)), im.group(2), im.group(3)
+        om = _OP_RE.match(rest)
+        if not om:
+            continue
+        type_str, op = om.group(1).strip(), om.group(2)
+        # operand segment: balanced parens after op(
+        start = om.end()
+        depth, j = 1, start
+        while j < len(rest) and depth:
+            if rest[j] == "(":
+                depth += 1
+            elif rest[j] == ")":
+                depth -= 1
+            j += 1
+        opnd_seg = rest[start : j - 1]
+        attrs = rest[j:]
+        operands = re.findall(r"%([\w\.\-]+)", opnd_seg)
+        cur.shapes[iname] = type_str
+        cur.instrs.append(
+            Instr(iname, op, type_str, operands, attrs, opnd_seg, is_root)
+        )
+    if entry_alias:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_bytes, out_elems = _shapes_bytes_elems(ins.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if not m or not ins.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs_t = comp.shapes.get(ins.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_t)
+    if not sm:
+        return 2.0 * out_elems
+    dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    k = 1
+    for ci in (int(c) for c in m.group(1).split(",") if c):
+        if ci < len(dims):
+            k *= dims[ci]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    _, out_elems = _shapes_bytes_elems(ins.type_str)
+    if len(ins.operands) < 2:
+        return 2.0 * out_elems
+    rhs_t = comp.shapes.get(ins.operands[1], "")
+    sm = _SHAPE_RE.search(rhs_t)
+    if not sm:
+        return 2.0 * out_elems
+    kdims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else [1]
+    kernel_elems = 1
+    for d in kdims:
+        kernel_elems *= d
+    # dim_labels tells which rhs dim is the output-feature dim
+    m = re.search(r"dim_labels=\w+_(\w+)->", ins.attrs)
+    out_ch = 1
+    if m:
+        rhs_labels = m.group(1)
+        if "o" in rhs_labels:
+            out_ch = kdims[rhs_labels.index("o")]
+    per_out = kernel_elems / max(out_ch, 1)
+    return 2.0 * out_elems * per_out
+
+
+def _called(ins: Instr):
+    """(computation names, kind) referenced by an instruction."""
+    out = []
+    for key, kind in (("calls", "fusion"), ("to_apply", "apply"),
+                      ("body", "body"), ("condition", "cond")):
+        for m in re.finditer(key + r"=%?([\w\.\-]+)", ins.attrs):
+            out.append((m.group(1), kind))
+    m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+    if m:
+        for nm in re.findall(r"%?([\w\.\-]+)", m.group(1)):
+            out.append((nm, "branch"))
+    return out
+
+
+def _trip_count(cond: Computation, comps, hint: Optional[int]) -> float:
+    """Max scalar s32 constant reachable from the loop condition."""
+    if hint is not None:
+        return float(hint)
+    best = 1.0
+
+    def scan(c: Computation, depth=0):
+        nonlocal best
+        if depth > 3:
+            return
+        for ins in c.instrs:
+            # the loop bound appears as a scalar int literal in the condition
+            if ins.op == "constant" and re.match(
+                r"[su](8|16|32|64)\[\]", ins.type_str.strip()
+            ):
+                m = re.search(r"(-?\d+)", ins.opnd_seg)
+                if m:
+                    best = max(best, float(m.group(1)))
+            for nm, _ in _called(ins):
+                if nm in comps:
+                    scan(comps[nm], depth + 1)
+
+    scan(cond)
+    return max(best, 1.0)
+
+
+def _is_score_shaped(type_str: str) -> bool:
+    """Attention-score-like output: >=4D with both trailing dims >= 512."""
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES or not dims:
+            continue
+        d = [int(x) for x in dims.split(",")]
+        if len(d) >= 4 and d[-1] >= 512 and d[-2] >= 512:
+            return True
+    return False
+
+
+def _bytes_of(comp: Computation, name: str) -> float:
+    t = comp.shapes.get(name)
+    if not t:
+        return 0.0
+    b, _ = _shapes_bytes_elems(t)
+    return b
+
+
+def _effective_io_bytes(ins: Instr, comp: Computation, comps) -> float:
+    """HBM bytes for one top-level instruction, slice/update-aware.
+
+    * dynamic-slice reads only the slice; dynamic-update-slice touches only
+      the update region (XLA aliases the buffer in place).
+    * fusion operands consumed exclusively through dynamic-slice inside the
+      fused computation are charged at slice size -- this is how scan reads
+      one layer's weights from the stacked (L, ...) array.
+    * a fusion whose root is dynamic-update-slice writes only the update.
+    """
+    if ins.op == "dynamic-slice":
+        out = _bytes_of(comp, ins.name)
+        return 2.0 * out, (2.0 * out if _is_score_shaped(ins.type_str) else 0.0)
+    if ins.op == "dynamic-update-slice":
+        upd = _bytes_of(comp, ins.operands[1]) if len(ins.operands) > 1 else 0.0
+        return 2.0 * upd, 0.0
+    out_b = _bytes_of(comp, ins.name)
+    score_b = out_b if _is_score_shaped(ins.type_str) else 0.0
+    in_b = 0.0
+    fused = None
+    if ins.op == "fusion":
+        for m in re.finditer(r"calls=%?([\w\.\-]+)", ins.attrs):
+            fused = comps.get(m.group(1))
+    if fused is not None:
+        # map parameter index -> parameter instr name
+        pidx = {}
+        for fi in fused.instrs:
+            if fi.op == "parameter":
+                m = re.match(r"\s*(\d+)", fi.opnd_seg)
+                if m:
+                    pidx[int(m.group(1))] = fi.name
+        for i, opnd in enumerate(ins.operands):
+            full = _bytes_of(comp, opnd)
+            is_score = _is_score_shaped(comp.shapes.get(opnd, ""))
+            pname = pidx.get(i)
+            if pname is None:
+                in_b += full
+                score_b += full if is_score else 0.0
+                continue
+            uses = [fi for fi in fused.instrs if pname in fi.operands]
+            if uses and all(
+                u.op == "dynamic-slice" and u.operands and u.operands[0] == pname
+                for u in uses
+            ):
+                part = sum(_bytes_of(fused, u.name) for u in uses)
+                in_b += part
+                score_b += part if is_score else 0.0
+            elif uses and all(
+                u.op == "dynamic-update-slice" and u.operands
+                and u.operands[0] == pname
+                for u in uses
+            ):
+                in_b += sum(
+                    _bytes_of(fused, u.operands[1]) for u in uses
+                    if len(u.operands) > 1
+                )
+            else:
+                in_b += full
+                score_b += full if is_score else 0.0
+        root = next((fi for fi in fused.instrs if fi.is_root), None)
+        if root is not None and root.op == "dynamic-update-slice" and \
+                len(root.operands) > 1:
+            out_b = _bytes_of(fused, root.operands[1])
+        return out_b + in_b, score_b
+    for o in ins.operands:
+        b = _bytes_of(comp, o)
+        in_b += b
+        if _is_score_shaped(comp.shapes.get(o, "")):
+            score_b += b
+    return out_b + in_b, score_b
+
+
+def analyze(text: str, trip_hints: Optional[Dict[str, int]] = None) -> Stats:
+    """Per-device Stats for the entry computation of a partitioned module."""
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: Dict[tuple, Stats] = {}
+    hints = trip_hints or {}
+
+    def comp_cost(name: str, in_fusion: bool) -> Stats:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        memo[key] = Stats()  # cycle guard
+        c = comps[name]
+        s = Stats()
+        for ins in c.instrs:
+            _, out_elems = _shapes_bytes_elems(ins.type_str)
+            if ins.op == "dot":
+                f = _dot_flops(ins, c)
+                s.flops += f
+                lhs_t = c.shapes.get(ins.operands[0], "").strip() \
+                    if ins.operands else ""
+                if lhs_t.startswith(("s8", "u8")):
+                    s.flops_int8 += f
+                elif lhs_t.startswith("f32"):
+                    s.flops_f32 += f
+            elif ins.op == "convolution":
+                s.flops += _conv_flops(ins, c)
+            elif ins.op in _ELEMWISE:
+                s.flops += out_elems
+            elif ins.op in _TRANSCENDENTAL:
+                s.transcendentals += out_elems
+            # bytes at top-level boundaries only (slice/update-aware)
+            if not in_fusion and ins.op not in _FREE_OPS:
+                eff, score = _effective_io_bytes(ins, c, comps)
+                s.bytes += eff
+                s.score_bytes += score
+            if ins.op in COLLECTIVE_OPS and not in_fusion:
+                ib = 0
+                for o in ins.operands:
+                    t = c.shapes.get(o)
+                    if t:
+                        b, _ = _shapes_bytes_elems(t)
+                        ib += b
+                if ins.op == "all-gather":
+                    ob, _ = _shapes_bytes_elems(ins.type_str)
+                    ib = max(ib, ob - ib)  # data received
+                s.collective_bytes[ins.op] = (
+                    s.collective_bytes.get(ins.op, 0.0) + ib
+                )
+            # recurse into called computations
+            called = _called(ins)
+            if ins.op == "while":
+                body = next((n for n, k in called if k == "body"), None)
+                cond = next((n for n, k in called if k == "cond"), None)
+                # XLA annotates the authoritative count when it knows it
+                bc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.attrs)
+                if hints.get(ins.name) is not None:
+                    trips = float(hints[ins.name])
+                elif bc:
+                    trips = float(bc.group(1))
+                elif cond in comps:
+                    trips = _trip_count(comps[cond], comps, None)
+                else:
+                    trips = 1.0
+                inner = Stats()
+                if body in comps:
+                    inner += comp_cost(body, in_fusion)
+                if cond in comps:
+                    inner += comp_cost(cond, in_fusion)
+                s += inner.scaled(trips)
+            elif ins.op == "fusion":
+                for nm, kind in called:
+                    if nm in comps and kind == "fusion":
+                        s += comp_cost(nm, True)
+            elif ins.op == "conditional":
+                branches = [comp_cost(nm, in_fusion) for nm, k in called
+                            if k == "branch" and nm in comps]
+                if branches:
+                    # only one branch executes; take the max-cost one
+                    s += max(branches, key=lambda b: b.flops + b.bytes)
+            elif ins.op in ("call", "custom-call", "map", "sort", "reduce",
+                            "reduce-window", "scatter", "select-and-scatter",
+                            "all-reduce"):
+                # to_apply bodies are per-element lambdas: count flops only
+                for nm, kind in called:
+                    if nm in comps and kind == "apply":
+                        inner = comp_cost(nm, True)
+                        s.flops += inner.flops * max(out_elems, 1)
+        memo[key] = s
+        return s
+
+    return comp_cost("__entry__", False)

@@ -1,0 +1,144 @@
+"""Roofline terms for TPU v5e from the dry-run's compiled artifact.
+
+Hardware constants (per chip):
+  197 TFLOP/s bf16 (394 TOP/s int8), 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (per the assignment spec; all per-device since the parsed module is
+the post-SPMD per-device program):
+  compute_s    = HLO_FLOPs_dev / peak
+  memory_s     = HLO_bytes_dev / hbm_bw
+  collective_s = collective_bytes_dev / ici_bw
+step_time_est = max(terms) (perfect-overlap assumption); the headline
+roofline fraction is MODEL_FLOPS / (chips * peak * step_time_est).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+
+from repro.models.config import ModelConfig, ShapeCfg
+
+V5E = {
+    "peak_bf16": 197e12,
+    "peak_int8": 394e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,
+    "hbm_gb": 16.0,
+}
+
+
+def count_params(params_shape) -> Dict[str, float]:
+    """Total / embedding / MoE-expert parameter counts from a shape tree."""
+    total = emb = moe = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if names[-1] in ("embed", "lm_head"):
+            emb += n
+        if names[-1] in ("wg", "wu", "wd") and "moe" in names:
+            moe += n
+    return {"total": float(total), "embedding": float(emb),
+            "moe_expert": float(moe)}
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeCfg, counts: Dict[str, float]) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode step);
+    N uses active params for MoE (6*N_active*D)."""
+    n = counts["total"] - counts["embedding"]
+    if cfg.moe_num_experts:
+        active_frac = cfg.moe_top_k / cfg.moe_num_experts
+        n = n - counts["moe_expert"] + counts["moe_expert"] * active_frac
+    # LM head matmul is real compute: add 2*d*V per token.
+    head = 2.0 * cfg.d_model * cfg.padded_vocab
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return (6.0 * n + 3.0 * head) * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return (2.0 * n + head) * tokens
+    # decode: one token per sequence
+    return (2.0 * n + head) * shape.global_batch
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_global: float
+    n_chips: int
+    #: memory term with attention-score traffic removed -- what the TPU pays
+    #: when the Pallas flash kernel keeps score blocks in VMEM (the kernel is
+    #: validated in interpret mode; it cannot lower on the CPU dry-run)
+    memory_kernel_s: float = 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_time_kernel_s(self) -> float:
+        return max(self.compute_s, self.memory_kernel_s, self.collective_s)
+
+    @property
+    def mfu_kernel_est(self) -> float:
+        return self.model_flops / (
+            self.n_chips * V5E["peak_bf16"] * max(self.step_time_kernel_s, 1e-12)
+        )
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs -- catches remat/dispatch/redundancy waste."""
+        return self.model_flops / max(self.hlo_flops_global, 1.0)
+
+    @property
+    def mfu_est(self) -> float:
+        return self.model_flops / (
+            self.n_chips * V5E["peak_bf16"] * max(self.step_time_s, 1e-12)
+        )
+
+    def to_dict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "step_time_s": self.step_time_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.hlo_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_est": self.mfu_est,
+            "n_chips": self.n_chips,
+            "memory_kernel_s": self.memory_kernel_s,
+            "step_time_kernel_s": self.step_time_kernel_s,
+            "mfu_kernel_est": self.mfu_kernel_est,
+        }
+
+
+def roofline_from_stats(stats, n_chips: int, mflops: float) -> Roofline:
+    f8 = getattr(stats, "flops_int8", 0.0)
+    f32 = getattr(stats, "flops_f32", 0.0)
+    return Roofline(
+        # int8 (KOM) passes issue at 2x MXU rate; f32 dots cost ~6 bf16 passes
+        compute_s=((stats.flops - f8 - f32) / V5E["peak_bf16"]
+                   + f8 / V5E["peak_int8"]
+                   + f32 / (V5E["peak_bf16"] / 6.0)),
+        memory_s=stats.bytes / V5E["hbm_bw"],
+        collective_s=stats.coll_total / V5E["ici_bw"],
+        model_flops=mflops,
+        hlo_flops_global=stats.flops * n_chips,
+        n_chips=n_chips,
+        memory_kernel_s=(stats.bytes - stats.score_bytes) / V5E["hbm_bw"],
+    )

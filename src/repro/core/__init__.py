@@ -1,0 +1,17 @@
+"""Core: the paper's contribution as composable JAX modules."""
+from .karatsuba import (
+    MATMUL_DNUMS,
+    PASS_COUNTS,
+    balanced_split,
+    bf16x3_matmul,
+    bf16xn_dot_general,
+    float_split,
+    kom_dot_general,
+    kom_matmul,
+    kom_qmax,
+    pass_count,
+    recursion_pass_count,
+)
+from .precision import MXU_PASSES, MatmulPolicy, policy_dot_general, policy_linear, policy_matmul
+from .quantization import QTensor, dequantize, kom_linear, quantize_symmetric, quantized_dot_general
+from .systolic import SystolicEngine, conv2d_im2col, fir_systolic, pool2d

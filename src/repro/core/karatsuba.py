@@ -1,0 +1,194 @@
+"""Karatsuba-Ofman (KOM) limb-decomposed matmuls for the TPU MXU.
+
+The paper builds an n-bit FPGA multiplier out of three n/2-bit multipliers
+(vs. four for schoolbook).  The TPU analogue: build a *wide*-precision matmul
+out of *narrow* MXU passes.
+
+Integer path (faithful, algebraic KOM):
+    A = A1*beta + A0, B = B1*beta + B0  (balanced base-2^b digits)
+    A*B = A1B1*b^2 + [(A1+A0)(B1+B0) - A1B1 - A0B0]*b + A0B0   -- 3 passes
+        vs A1B1*b^2 + (A1B0 + A0B1)*b + A0B0                   -- 4 passes
+
+The middle Karatsuba term needs one guard bit for the digit sums: both
+balanced digits must sit in [-2^(b-1), 2^(b-1)-1] so their sum fits s8,
+giving base_bits=7 and operands up to 14 bits (|x| <= kom_qmax(7) = 8127).
+Schoolbook needs no guard bit -> base_bits=8, 16-bit operands (|x| <= 32639).
+
+Float path (TPU-idiomatic cousin): fp32-accurate matmul from 3 bf16 passes
+(truncation, not the algebraic identity -- see DESIGN.md section 2.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Variant = Literal["karatsuba", "schoolbook"]
+
+#: MXU passes per wide multiply, the TPU analogue of the paper's LUT counts.
+PASS_COUNTS = {"karatsuba": 3, "schoolbook": 4}
+
+# Standard 2D matmul dimension numbers: (m,k) x (k,n) -> (m,n).
+MATMUL_DNUMS = (((1,), (0,)), ((), ()))
+
+
+def kom_qmax(base_bits: int = 7) -> int:
+    """Largest |x| whose balanced (hi, lo) digits both fit [-2^(b-1), 2^(b-1)-1].
+
+    kom_qmax(7) = 63*129 = 8127 ('int14', Karatsuba-safe: digit sums fit s8);
+    kom_qmax(8) = 127*257 = 32639 ('int16', schoolbook only).
+    """
+    half = 1 << (base_bits - 1)
+    return (half - 1) * ((1 << base_bits) + 1)
+
+
+def balanced_split(x: jax.Array, base_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Split int values into balanced base-2^b digits: x == hi*2^b + lo.
+
+    Both digits lie in [-2^(b-1), 2^(b-1)-1] provided |x| <= kom_qmax(b);
+    balanced (signed) digits are what keep the Karatsuba digit sums inside
+    the s8 range with a single guard bit.
+    """
+    beta = 1 << base_bits
+    half = beta >> 1
+    x = x.astype(jnp.int32)
+    lo = ((x + half) & (beta - 1)) - half
+    hi = (x - lo) >> base_bits
+    return hi, lo
+
+
+def kom_dot_general(
+    a: jax.Array,
+    b: jax.Array,
+    dimension_numbers=MATMUL_DNUMS,
+    *,
+    base_bits: int = 7,
+    variant: Variant = "karatsuba",
+    narrow_dtype=jnp.int8,
+    accum_dtype=jnp.int32,
+    recombine_dtype=jnp.float32,
+) -> jax.Array:
+    """Wide integer dot_general out of narrow (s8) MXU passes.
+
+    ``a``/``b`` hold integer values with |x| <= kom_qmax(base_bits) (use
+    :mod:`repro.core.quantization` to produce them).  Returns the exact
+    product recombined in ``recombine_dtype`` (int64 for bit-exact tests,
+    float32 for fused dequantization -- terms stay below 2^30 so the fp32
+    path is accurate to ~2^-24 relative, far below quantization error).
+    """
+    if variant == "karatsuba" and base_bits > 7 and narrow_dtype == jnp.int8:
+        raise ValueError(
+            "karatsuba digit sums need a guard bit: base_bits <= 7 for int8 passes"
+        )
+    beta = 1 << base_bits
+    ah, al = balanced_split(a, base_bits)
+    bh, bl = balanced_split(b, base_bits)
+    dot = functools.partial(
+        lax.dot_general,
+        dimension_numbers=dimension_numbers,
+        preferred_element_type=accum_dtype,
+    )
+    nd = lambda x: x.astype(narrow_dtype)
+    s_hh = dot(nd(ah), nd(bh))
+    s_ll = dot(nd(al), nd(bl))
+    if variant == "karatsuba":
+        # Third and final multiply; digit sums fit s8 thanks to the guard bit.
+        s_mid = dot(nd(ah + al), nd(bh + bl)) - s_hh - s_ll
+    elif variant == "schoolbook":
+        s_mid = dot(nd(ah), nd(bl)) + dot(nd(al), nd(bh))
+    else:
+        raise ValueError(f"unknown variant: {variant}")
+    r = recombine_dtype
+    return (
+        s_hh.astype(r) * (beta * beta) + s_mid.astype(r) * beta + s_ll.astype(r)
+    )
+
+
+def kom_matmul(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """2-D convenience wrapper: (m,k) @ (k,n) via KOM passes."""
+    return kom_dot_general(a, b, MATMUL_DNUMS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Float path: fp32-accurate matmuls from bf16 MXU passes.
+# ---------------------------------------------------------------------------
+
+def float_split(x: jax.Array, terms: int = 2) -> list[jax.Array]:
+    """Split fp32 into ``terms`` bf16 limbs: x ~= sum(limbs) (residual split)."""
+    x = x.astype(jnp.float32)
+    limbs = []
+    for _ in range(terms - 1):
+        hi = x.astype(jnp.bfloat16)
+        limbs.append(hi)
+        x = x - hi.astype(jnp.float32)
+    limbs.append(x.astype(jnp.bfloat16))
+    return limbs
+
+
+def bf16xn_dot_general(
+    a: jax.Array,
+    b: jax.Array,
+    dimension_numbers=MATMUL_DNUMS,
+    *,
+    passes: int = 3,
+) -> jax.Array:
+    """fp32-accurate dot from bf16 passes.
+
+    passes=3: AhBh + AhBl + AlBh        (2-limb split, drop AlBl)
+    passes=4: + AlBl                    (2-limb split, exact in-split)
+    passes=6: 3-limb split keeping products with limb-order i+j <= 4
+              (the classic xla bf16_6x emulation schedule).
+    """
+    if passes in (3, 4):
+        ah, al = float_split(a, 2)
+        bh, bl = float_split(b, 2)
+        pairs = [(ah, bh), (ah, bl), (al, bh)]
+        if passes == 4:
+            pairs.append((al, bl))
+    elif passes == 6:
+        a1, a2, a3 = float_split(a, 3)
+        b1, b2, b3 = float_split(b, 3)
+        al_, bl_ = [a1, a2, a3], [b1, b2, b3]
+        pairs = [
+            (al_[i], bl_[j])
+            for i in range(3)
+            for j in range(3)
+            if (i + 1) + (j + 1) <= 4
+        ]
+    else:
+        raise ValueError(f"unsupported pass count: {passes}")
+    dot = functools.partial(
+        lax.dot_general,
+        dimension_numbers=dimension_numbers,
+        preferred_element_type=jnp.float32,
+    )
+    out = dot(*pairs[0])
+    for pa, pb in pairs[1:]:
+        out = out + dot(pa, pb)
+    return out
+
+
+def bf16x3_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return bf16xn_dot_general(a, b, MATMUL_DNUMS, passes=3)
+
+
+def pass_count(variant_or_passes) -> int:
+    """Resource model: narrow MXU passes per wide multiply (paper Tables 1-4)."""
+    if isinstance(variant_or_passes, int):
+        return variant_or_passes
+    return PASS_COUNTS[variant_or_passes]
+
+
+def recursion_pass_count(depth: int, variant: Variant = "karatsuba") -> int:
+    """Passes if the paper's recursion ('until 2 bits') were followed.
+
+    One level: 3 passes of b/2-bit work.  Two levels: 9 passes of b/4-bit
+    work, etc.  On the MXU every pass costs a full matrix issue regardless of
+    operand width below 8 bits -- which is why we stop at one level
+    (DESIGN.md section 8.3).
+    """
+    per_level = PASS_COUNTS[variant]
+    return per_level**depth

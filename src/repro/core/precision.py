@@ -1,0 +1,136 @@
+"""Matmul precision policies: the single switch the whole framework uses.
+
+Every linear/einsum hot spot in the model zoo goes through ``policy_dot``/
+``policy_linear`` so the paper's technique (KOM limb decomposition) is a
+first-class, config-selectable feature rather than a bolted-on kernel.
+
+The MXU pass counts are the TPU restatement of the paper's LUT tables:
+a 'pass' is one full-rate narrow matmul issue on the systolic array.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .karatsuba import MATMUL_DNUMS, bf16xn_dot_general, kom_dot_general
+from .quantization import quantize_symmetric, quantized_dot_general
+
+
+class MatmulPolicy(str, enum.Enum):
+    NATIVE_BF16 = "native_bf16"        # 1 pass,  bf16 accuracy (baseline)
+    BF16X3 = "bf16x3"                  # 3 passes, ~fp32 accuracy (KOM count)
+    BF16X6 = "bf16x6"                  # 6 passes, fp32+ accuracy
+    KOM_INT14 = "kom_int14"            # 3 int8 passes, W14A14 quantized
+    SCHOOLBOOK_INT16 = "schoolbook_int16"  # 4 int8 passes, W16A16 quantized
+    FP32 = "fp32"                      # native f32 (modeled as 6 passes)
+
+
+#: Narrow MXU passes per wide multiply -- the resource model used by the
+#: paper-table benchmarks and the roofline compute term.
+MXU_PASSES = {
+    MatmulPolicy.NATIVE_BF16: 1,
+    MatmulPolicy.BF16X3: 3,
+    MatmulPolicy.BF16X6: 6,
+    MatmulPolicy.KOM_INT14: 3,
+    MatmulPolicy.SCHOOLBOOK_INT16: 4,
+    MatmulPolicy.FP32: 6,
+}
+
+#: int8 passes run at 2x bf16 MXU rate on v5e; used to turn pass counts into
+#: roofline seconds.
+PASS_RATE_VS_BF16 = {
+    MatmulPolicy.NATIVE_BF16: 1.0,
+    MatmulPolicy.BF16X3: 1.0,
+    MatmulPolicy.BF16X6: 1.0,
+    MatmulPolicy.KOM_INT14: 2.0,
+    MatmulPolicy.SCHOOLBOOK_INT16: 2.0,
+    MatmulPolicy.FP32: 1.0,
+}
+
+
+def policy_dot_general(a, b, dimension_numbers=MATMUL_DNUMS, *, policy=MatmulPolicy.NATIVE_BF16):
+    policy = MatmulPolicy(policy)
+    if policy == MatmulPolicy.NATIVE_BF16:
+        # bf16 output: the MXU still accumulates f32 internally on TPU, and
+        # row-parallel partial sums cross the ICI in bf16 (half the bytes).
+        return lax.dot_general(
+            a.astype(jnp.bfloat16),
+            b.astype(jnp.bfloat16),
+            dimension_numbers,
+            preferred_element_type=jnp.bfloat16,
+        )
+    if policy == MatmulPolicy.FP32:
+        return lax.dot_general(
+            a.astype(jnp.float32),
+            b.astype(jnp.float32),
+            dimension_numbers,
+            preferred_element_type=jnp.float32,
+        )
+    if policy in (MatmulPolicy.BF16X3, MatmulPolicy.BF16X6):
+        passes = 3 if policy == MatmulPolicy.BF16X3 else 6
+        return bf16xn_dot_general(a, b, dimension_numbers, passes=passes)
+    if policy in (MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16):
+        variant = "karatsuba" if policy == MatmulPolicy.KOM_INT14 else "schoolbook"
+        base_bits = 7 if policy == MatmulPolicy.KOM_INT14 else 8
+        # 2D-canonicalize so the straight-through VJP below stays simple
+        (lc,), (rc,) = dimension_numbers[0]
+        assert dimension_numbers[1] == ((), ()) and rc == 0 and b.ndim == 2, (
+            "int policies support (..., k) x (k, n) shapes"
+        )
+        lead = a.shape[:-1]
+        out = _kom_dot_ste(a.reshape((-1, a.shape[-1])).astype(jnp.float32),
+                           b.astype(jnp.float32), base_bits, variant)
+        return out.reshape(lead + (b.shape[-1],))
+    raise ValueError(f"unknown policy: {policy}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _kom_dot_ste(a, b, base_bits, variant):
+    """Quantized KOM matmul with a straight-through gradient.
+
+    jnp.round inside the quantizer has zero derivative, so naive AD through
+    the KOM path kills training.  Forward runs the 3 narrow passes; backward
+    runs the *same KOM multiplier* on the (dynamically quantized) cotangent
+    -- every GEMM in the training step, forward and backward, issues on the
+    paper's multiplier.
+    """
+    return _kom_q_dot(a, b, base_bits, variant)
+
+
+def _kom_q_dot(a, b, base_bits, variant):
+    qa = quantize_symmetric(a, base_bits=base_bits)
+    qb = quantize_symmetric(b, base_bits=base_bits)
+    return quantized_dot_general(
+        qa, qb, MATMUL_DNUMS, base_bits=base_bits, variant=variant
+    )
+
+
+def _kom_dot_fwd(a, b, base_bits, variant):
+    return _kom_q_dot(a, b, base_bits, variant), (a, b)
+
+
+def _kom_dot_bwd(base_bits, variant, res, g):
+    a, b = res
+    da = _kom_q_dot(g, b.T, base_bits, variant)        # (m,n)x(n,k)
+    db = _kom_q_dot(a.T, g, base_bits, variant)        # (k,m)x(m,n)
+    return da, db
+
+
+_kom_dot_ste.defvjp(_kom_dot_fwd, _kom_dot_bwd)
+
+
+def policy_matmul(a, b, *, policy=MatmulPolicy.NATIVE_BF16):
+    return policy_dot_general(a, b, MATMUL_DNUMS, policy=policy)
+
+
+def policy_linear(x: jax.Array, w: jax.Array, *, policy=MatmulPolicy.NATIVE_BF16) -> jax.Array:
+    """(..., k) @ (k, n) under a policy; the model zoo's only matmul entry."""
+    lead = x.shape[:-1]
+    out = policy_dot_general(
+        x.reshape((-1, x.shape[-1])), w, MATMUL_DNUMS, policy=policy
+    )
+    return out.reshape(lead + (w.shape[-1],))

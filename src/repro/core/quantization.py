@@ -1,0 +1,125 @@
+"""Symmetric quantization for the KOM integer matmul path.
+
+The FPGA design works in fixed point; on TPU we reach the s8 MXU path via
+symmetric quantization.  ``kom_qmax(base_bits)`` is the widest magnitude the
+balanced-digit split supports (8127 for base_bits=7 -- '14-bit' operands,
+the one Karatsuba guard bit per digit; see DESIGN.md section 2.1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .karatsuba import kom_dot_general, kom_qmax, MATMUL_DNUMS
+
+
+class QTensor(NamedTuple):
+    """Integer values + the float scale that dequantizes them."""
+
+    values: jax.Array  # int32 container holding |v| <= qmax
+    scale: jax.Array   # f32; scalar (per-tensor) or broadcastable (per-axis)
+    qmax: int
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+
+def quantize_symmetric(
+    x: jax.Array,
+    *,
+    qmax: int | None = None,
+    base_bits: int = 7,
+    axis: Optional[int] = None,
+) -> QTensor:
+    """Symmetric (zero-point-free) quantization.
+
+    ``axis``: None -> per-tensor scale; an int -> per-slice scales along that
+    axis (e.g. per-output-feature for weights), kept broadcastable.
+    """
+    if qmax is None:
+        qmax = kom_qmax(base_bits)
+    x = x.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return QTensor(values=q, scale=scale, qmax=qmax)
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+def quantized_dot_general(
+    qa: QTensor,
+    qb: QTensor,
+    dimension_numbers=MATMUL_DNUMS,
+    *,
+    base_bits: int = 7,
+    variant: str = "karatsuba",
+    recombine_dtype=jnp.float32,
+) -> jax.Array:
+    """Dequantized product of two QTensors via KOM narrow passes.
+
+    Scales must broadcast against the dot output: scalar scales always do;
+    per-axis scales are supported for the canonical linear-layer case
+    (activations per-tensor, weights per-output-feature on the last dim).
+    """
+    raw = kom_dot_general(
+        qa.values,
+        qb.values,
+        dimension_numbers,
+        base_bits=base_bits,
+        variant=variant,
+        recombine_dtype=recombine_dtype,
+    )
+    scale = _output_scale(qa, qb, raw.ndim)
+    return raw.astype(jnp.float32) * scale
+
+
+def _output_scale(qa: QTensor, qb: QTensor, out_ndim: int) -> jax.Array:
+    sa = jnp.asarray(qa.scale)
+    sb = jnp.asarray(qb.scale)
+    # Per-tensor x per-tensor.
+    if sa.ndim == 0 and sb.ndim == 0:
+        return sa * sb
+    # Activations per-tensor x weights per-last-axis: scale broadcasts on the
+    # trailing output dim after squeezing the contracted axes.
+    sa_s = sa if sa.ndim == 0 else jnp.squeeze(sa)
+    sb_s = sb if sb.ndim == 0 else jnp.squeeze(sb)
+    if sa_s.ndim == 0 and sb_s.ndim <= 1:
+        return sa_s * sb_s  # broadcasts over trailing dim
+    if sb_s.ndim == 0 and sa_s.ndim <= 1:
+        # weights per-row on the lhs: broadcast over leading output dim.
+        return (sa_s * sb_s).reshape((-1,) + (1,) * (out_ndim - 1))
+    raise NotImplementedError(
+        "unsupported scale layout: per-axis scales on both operands"
+    )
+
+
+def kom_linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    base_bits: int = 7,
+    variant: str = "karatsuba",
+    per_channel: bool = True,
+) -> jax.Array:
+    """Quantize-on-the-fly linear layer: (..., k) @ (k, n) via KOM passes.
+
+    This is the building block the model zoo uses when MatmulPolicy selects
+    the integer KOM path; activations get a dynamic per-tensor scale, weights
+    a per-output-feature scale.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    qx = quantize_symmetric(x2, base_bits=base_bits)
+    qw = quantize_symmetric(w, base_bits=base_bits, axis=1 if per_channel else None)
+    out = quantized_dot_general(qx, qw, base_bits=base_bits, variant=variant)
+    return out.reshape(lead + (w.shape[-1],))

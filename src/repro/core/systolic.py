@@ -1,0 +1,125 @@
+"""Reconfigurable systolic engine (paper Figs. 1-3), TPU-native.
+
+The paper's engine is a grid of MAC cells whose interconnect a RISC-V core
+rewires per layer type (conv / pool / FC / FIR).  On TPU the systolic grid is
+the MXU and the 'bit file' is an XLA executable: ``SystolicEngine.configure``
+returns a jitted callable specialized for the requested op, all sharing the
+same matmul substrate (``policy_dot``) so the KOM technique applies uniformly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .precision import MatmulPolicy, policy_linear, policy_matmul
+
+
+def fir_systolic(x: jax.Array, h: jax.Array) -> jax.Array:
+    """1-D FIR via the paper's systolic dataflow: Y_n = Y_{n-1} + h_k * X.
+
+    ``x``: (..., n) signal; ``h``: (k,) taps.  Output (..., n) causal FIR
+    (y[n] = sum_k h[k] x[n-k]) computed as a scan over taps -- a faithful
+    transcription of Fig. 2's cell pipeline (each scan step is one cell).
+    """
+    n = x.shape[-1]
+
+    def cell(y, k):
+        shifted = jnp.roll(x, k, axis=-1)
+        mask = jnp.arange(n) >= k
+        return y + h[k] * shifted * mask, None
+
+    y0 = jnp.zeros_like(x)
+    y, _ = lax.scan(cell, y0, jnp.arange(h.shape[0]))
+    return y
+
+
+def conv2d_im2col(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    policy: MatmulPolicy = MatmulPolicy.NATIVE_BF16,
+) -> jax.Array:
+    """NHWC conv as im2col-GEMM -- the MXU mapping of the systolic conv array.
+
+    x: (n, h, w, cin); w: (kh, kw, cin, cout).  The GEMM goes through the
+    precision policy, so conv layers inherit the KOM path.
+    """
+    kh, kw, cin, cout = w.shape
+    if padding == "SAME":
+        out_h = -(-x.shape[1] // stride)
+        out_w = -(-x.shape[2] // stride)
+        pad_h = max((out_h - 1) * stride + kh - x.shape[1], 0)
+        pad_w = max((out_w - 1) * stride + kw - x.shape[2], 0)
+        pads = ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2))
+    elif padding == "VALID":
+        pads = ((0, 0), (0, 0))
+        out_h = (x.shape[1] - kh) // stride + 1
+        out_w = (x.shape[2] - kw) // stride + 1
+    else:
+        raise ValueError(padding)
+    xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+    # im2col patches: (n, out_h, out_w, kh*kw*cin)
+    patches = lax.conv_general_dilated_patches(
+        xp.transpose(0, 3, 1, 2),  # NCHW for the patch extractor
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+    )  # (n, cin*kh*kw, out_h, out_w)
+    n, ck, oh, ow = patches.shape
+    cols = patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, ck)
+    # conv_general_dilated_patches emits channel-major (cin, kh, kw) order.
+    wmat = w.transpose(2, 0, 1, 3).reshape(ck, cout)
+    out = policy_matmul(cols, wmat, policy=policy)
+    return out.reshape(n, oh, ow, cout)
+
+
+def pool2d(x: jax.Array, *, window: int, stride: int, kind: str = "max") -> jax.Array:
+    """NHWC pooling on the same engine (reduce cells instead of MAC cells)."""
+    if kind == "max":
+        init, op = -jnp.inf, lax.max
+    elif kind == "avg":
+        init, op = 0.0, lax.add
+    else:
+        raise ValueError(kind)
+    out = lax.reduce_window(
+        x.astype(jnp.float32),
+        init,
+        op,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+    if kind == "avg":
+        out = out / (window * window)
+    return out
+
+
+class SystolicEngine:
+    """Config-driven dispatcher mirroring the paper's reconfigurable engine."""
+
+    OPS = ("matmul", "fc", "conv2d", "pool_max", "pool_avg", "fir")
+
+    def __init__(self, policy: MatmulPolicy = MatmulPolicy.NATIVE_BF16):
+        self.policy = MatmulPolicy(policy)
+
+    def configure(self, op: str, **cfg) -> Callable:
+        """'Download the bit file': return a jitted callable for ``op``."""
+        if op in ("matmul", "fc"):
+            fn = functools.partial(policy_matmul, policy=self.policy)
+        elif op == "conv2d":
+            fn = functools.partial(conv2d_im2col, policy=self.policy, **cfg)
+        elif op == "pool_max":
+            fn = functools.partial(pool2d, kind="max", **cfg)
+        elif op == "pool_avg":
+            fn = functools.partial(pool2d, kind="avg", **cfg)
+        elif op == "fir":
+            fn = fir_systolic
+        else:
+            raise ValueError(f"unknown op {op!r}; expected one of {self.OPS}")
+        return jax.jit(fn)

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated via
+interpret=True on CPU): kom_matmul (the KOM multiplier itself), conv2d
+(the systolic conv engine), flash_attention (assigned-arch hot path)."""

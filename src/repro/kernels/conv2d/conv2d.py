@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: the systolic conv engine (paper Figs. 1-3) on the MXU.
+
+Direct NHWC convolution: each grid step owns a (bh x WO x bc) output tile and
+streams `KH*KW` shifted input views through the MXU, contracting over Cin --
+exactly the paper's systolic dataflow with the MAC cells replaced by MXU
+passes.  Halo rows are obtained by binding *two* row-blocks of the same input
+operand (index maps i and i+1), so no overlapping-BlockSpec support is
+needed and the halo never round-trips through HBM.
+
+Variants:
+  native -- dots in the input dtype (bf16/f32) -> f32.
+  kom    -- inputs are pre-quantized integers; every tap is computed with the
+            3-pass Karatsuba limb decomposition (the paper's multiplier).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_CIN_DNUMS = (((2,), (0,)), ((), ()))  # (bh, WO, Cin) x (Cin, bc)
+
+
+def _split_limbs(x, base_bits):
+    beta = 1 << base_bits
+    half = beta >> 1
+    x = x.astype(jnp.int32)
+    lo = ((x + half) & (beta - 1)) - half
+    hi = (x - lo) >> base_bits
+    return hi.astype(jnp.int8), lo.astype(jnp.int8)
+
+
+def _tap_dot(patch, wtap, *, variant, base_bits):
+    """(bh, WO, Cin) x (Cin, bc) -> (bh, WO, bc) under the chosen multiplier."""
+    if variant == "native":
+        return jax.lax.dot_general(
+            patch, wtap, _CIN_DNUMS, preferred_element_type=jnp.float32
+        )
+    # KOM: 3 narrow passes per tap (the paper's multiplier inside the conv).
+    ah, al = _split_limbs(patch, base_bits)
+    bh_, bl = _split_limbs(wtap, base_bits)
+    dot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=_CIN_DNUMS,
+        preferred_element_type=jnp.int32,
+    )
+    p_hh = dot(ah, bh_)
+    p_ll = dot(al, bl)
+    asum = (ah.astype(jnp.int32) + al.astype(jnp.int32)).astype(jnp.int8)
+    bsum = (bh_.astype(jnp.int32) + bl.astype(jnp.int32)).astype(jnp.int8)
+    p_mid = dot(asum, bsum) - p_hh - p_ll
+    beta = 1 << base_bits
+    return (
+        p_hh.astype(jnp.float32) * (beta * beta)
+        + p_mid.astype(jnp.float32) * beta
+        + p_ll.astype(jnp.float32)
+    )
+
+
+def _conv_kernel(
+    x0_ref, x1_ref, w_ref, o_ref, *, kh, kw, stride, bh, wo, variant, base_bits
+):
+    # Two row-blocks give bh*stride*2 input rows: enough for the halo since
+    # bh*stride >= (kh - stride) is checked at call time.
+    x = jnp.concatenate([x0_ref[0], x1_ref[0]], axis=0)  # (2*bh*s, W, Cin)
+    acc = jnp.zeros((bh, wo, o_ref.shape[-1]), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            rows = jax.lax.slice(
+                x,
+                (dy, dx, 0),
+                (dy + (bh - 1) * stride + 1, dx + (wo - 1) * stride + 1, x.shape[2]),
+                (stride, stride, 1),
+            )  # (bh, wo, Cin)
+            acc = acc + _tap_dot(
+                rows, w_ref[dy, dx], variant=variant, base_bits=base_bits
+            )
+    o_ref[0] = acc
+
+
+def conv2d_systolic_raw(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    out_h: int | None = None,
+    block_h: int = 8,
+    block_c: int = 128,
+    variant: str = "native",
+    base_bits: int = 7,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (N, H, W, Cin) pre-padded; w: (KH, KW, Cin, Cout).
+
+    Requirements (the ops wrapper arranges them):
+      * out_h (output rows to produce; default derived from H) divisible by
+        block_h,
+      * H >= (out_h/block_h + 1) * block_h * stride  (one spare halo block),
+      * Cout divisible by block_c.
+    Returns (N, out_h, WO, Cout) raw f32 (KOM variant: un-dequantized).
+    """
+    n, h, wdim, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho = out_h if out_h is not None else (h - kh) // stride + 1
+    wo = (wdim - kw) // stride + 1
+    bh = block_h
+    bc = min(block_c, cout)
+    assert ho % bh == 0, (ho, bh)
+    assert cout % bc == 0, (cout, bc)
+    assert bh * stride >= kh - stride, "halo: need block_h*stride >= kh-stride"
+    n_row_blocks = ho // bh
+    assert h >= (n_row_blocks + 1) * bh * stride, "need one spare halo block"
+    grid = (n, n_row_blocks, cout // bc)
+    kernel = functools.partial(
+        _conv_kernel,
+        kh=kh, kw=kw, stride=stride, bh=bh, wo=wo,
+        variant=variant, base_bits=base_bits,
+    )
+    row_rows = bh * stride
+    nin_blocks = h // row_rows
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, row_rows, wdim, cin), lambda i, j, c: (i, j, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, row_rows, wdim, cin),
+                lambda i, j, c, nb=nin_blocks: (i, jnp.minimum(j + 1, nb - 1), 0, 0),
+            ),
+            pl.BlockSpec((kh, kw, cin, bc), lambda i, j, c: (0, 0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, wo, bc), lambda i, j, c: (i, j, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), jnp.float32),
+        interpret=interpret,
+    )(x, x, w)  # x bound twice: row-blocks i and i+1 form the halo

@@ -1,0 +1,95 @@
+"""Jitted public wrapper for the systolic conv kernel.
+
+Handles SAME/VALID padding, the spare halo row-block, output-channel padding
+and (for the KOM variant) quantization + fused dequantization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize_symmetric
+
+from .conv2d import conv2d_systolic_raw
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _plan(h, w, kh, kw, stride, padding, block_h):
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        pad_h = max((ho - 1) * stride + kh - h, 0)
+        pad_w = max((wo - 1) * stride + kw - w, 0)
+        pads = ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2))
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+        pads = ((0, 0), (0, 0))
+    else:
+        raise ValueError(padding)
+    # Round HO up to the row-block, then pad rows so a spare halo block exists.
+    ho_pad = -(-ho // block_h) * block_h
+    rows_needed = (ho_pad // block_h + 1) * block_h * stride
+    h_padded = h + pads[0][0] + pads[0][1]
+    extra_rows = max(rows_needed - h_padded, 0)
+    pads = ((pads[0][0], pads[0][1] + extra_rows), pads[1])
+    return ho, wo, ho_pad, pads
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "block_h", "block_c", "variant",
+                     "base_bits", "interpret"),
+)
+def conv2d_systolic(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    block_h: int = 8,
+    block_c: int = 128,
+    variant: str = "native",
+    base_bits: int = 7,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """NHWC conv through the Pallas systolic engine.
+
+    variant='native': dots in input dtype.  variant='kom': symmetric-quantize
+    both operands and run every tap as 3 Karatsuba int8 passes, dequantizing
+    the result (the paper's conv layer, end to end).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n, h, wdim, cin = x.shape
+    kh, kw, _, cout = w.shape
+    block_h = min(block_h, 32)
+    while block_h * stride < kh - stride:  # halo feasibility
+        block_h *= 2
+    ho, wo, ho_pad, pads = _plan(h, wdim, kh, kw, stride, padding, block_h)
+    scale = None
+    if variant == "kom":
+        qx = quantize_symmetric(x, base_bits=base_bits)
+        qw = quantize_symmetric(w, base_bits=base_bits)
+        x = qx.values.astype(jnp.int16)
+        w = qw.values.astype(jnp.int16)
+        scale = qx.scale * qw.scale
+    xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+    bc = min(block_c, cout)
+    pc = (-cout) % bc
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pc))) if pc else w
+    out = conv2d_systolic_raw(
+        xp, wp,
+        stride=stride, out_h=ho_pad, block_h=block_h, block_c=bc,
+        variant=variant if variant != "kom" else "kom",
+        base_bits=base_bits, interpret=interpret,
+    )
+    out = out[:, :ho, :wo, :cout]
+    if scale is not None:
+        out = out * scale
+    return out

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the systolic conv kernel: XLA's own convolution."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """NHWC x HWIO -> NHWC in f32 via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

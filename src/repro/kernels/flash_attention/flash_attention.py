@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused (flash) attention with GQA + causal/local masks.
+
+The attention score/softmax/PV pipeline is the memory-bound hot spot of every
+assigned LM architecture; fusing it keeps the S = QK^T tile in VMEM instead
+of HBM.  Online-softmax running max/denominator live in VMEM scratch across
+the KV-block grid dimension (the classic FlashAttention schedule mapped onto
+the MXU: one (bq x d) @ (d x bk) pass and one (bq x bk) @ (bk x d) pass per
+step).
+
+Grid: (batch, q_heads, sq/bq, skv/bk) -- KV innermost (sequential on TPU).
+GQA is expressed in the K/V BlockSpec index maps (q-head -> kv-head), so no
+KV replication is materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, nk, bq, bk, scale, causal, window, q_offset,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    iq = pl.program_id(2)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        # Fully-masked rows have l == 0 (can happen with windows); emit 0.
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_attention_raw(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (b, hq, sq, d); k/v: (b, hkv, skv, d) with hq % hkv == 0.
+
+    ``q_offset``: global position of q row 0 (for decode/chunked prefill the
+    queries sit at the end of the KV sequence: q_offset = skv - sq).
+    Shapes must divide the blocks (ops wrapper pads).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    grid = (b, hq, sq // block_q, skv // block_k)
+    kernel = functools.partial(
+        _attn_kernel,
+        nk=grid[3],
+        bq=block_q,
+        bk=block_k,
+        scale=1.0 / (d**0.5),
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

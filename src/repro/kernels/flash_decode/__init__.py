@@ -1,0 +1,2 @@
+from .ops import flash_decode
+from .ref import decode_attention_ref

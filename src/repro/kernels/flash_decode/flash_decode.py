@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused single-token decode attention over a KV cache.
+
+The decode-shape hot spot (decode_32k / long_500k cells): one query token
+against a long cache.  XLA's lowering materializes (b, h, S) score rows in
+HBM; this kernel streams the cache through VMEM in blocks with an online
+softmax -- the FlashDecoding schedule, with the KV-block grid dimension
+taking the role of the split-K partials (grid dims are sequential on TPU, so
+partials combine in VMEM scratch without a second pass).
+
+The valid cache length (pos+1) arrives as a scalar-prefetch operand so block
+masking is computed inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, nk, bk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (1, dh)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+    dh = q.shape[-1]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) / (dh**0.5)                                # (1, bk)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    valid = k_pos <= pos_ref[0]                  # causal: cache up to pos
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(
+            o_ref.dtype
+        )
+
+
+def flash_decode_raw(q, k, v, pos, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q (b, hq, 1, dh); k/v (b, hkv, S, dh); pos scalar int32 (last valid).
+
+    Returns (b, hq, 1, dh).  S must divide block_k (ops wrapper pads --
+    padded keys are masked by the pos test since pos < S).
+    """
+    b, hq, _, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    assert skv % block_k == 0, (skv, block_k)
+    nk = skv // block_k
+    grid = (b, hq, nk)
+    kernel = functools.partial(_decode_kernel, nk=nk, bk=block_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, dh), lambda ib, ih, ik, pos: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda ib, ih, ik, pos, g=g: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda ib, ih, ik, pos, g=g: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dh),
+                               lambda ib, ih, ik, pos: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray([pos], jnp.int32), q, k, v)

@@ -1,0 +1,28 @@
+"""Jitted public wrapper for the decode attention kernel (pads cache)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_decode import flash_decode_raw
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k, v, pos, *, block_k: int = 512,
+                 interpret: bool | None = None):
+    """One-token decode attention; q (b,hq,1,dh), cache (b,hkv,S,dh)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    skv = k.shape[2]
+    bk = min(block_k, skv)
+    pk = (-skv) % bk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    return flash_decode_raw(q, k, v, pos, block_k=bk, interpret=interpret)

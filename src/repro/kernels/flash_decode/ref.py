@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos):
+    """q (b,hq,1,dh); k/v (b,hkv,S,dh); attend to cache positions <= pos."""
+    b, hq, _, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk) / (dh**0.5)
+    mask = jnp.arange(skv)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)

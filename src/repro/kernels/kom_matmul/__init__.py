@@ -1,0 +1,2 @@
+from .ops import bf16x3_matmul, kom_matmul, kom_matmul_int
+from .ref import bf16x3_matmul_raw_ref, kom_matmul_int_raw_ref, kom_matmul_ref

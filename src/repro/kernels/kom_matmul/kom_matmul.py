@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: tiled KOM (Karatsuba-Ofman) limb-decomposed GEMM.
+
+This is the MXU port of the paper's 32/16-bit pipelined KOM multiplier
+(paper Figs. 4-5).  One VMEM-resident output tile accumulates the three
+(Karatsuba) or four (schoolbook) narrow int8 passes per K-block in separate
+int32 scratch accumulators -- the analogue of the FPGA design's partial
+product registers -- and recombines once at the final K step.
+
+Block shapes are MXU-aligned (multiples of 128 on the contracting/lane dims).
+VMEM working set per step (defaults bm=bn=bk=128, int16 inputs + 3 int32
+accumulators + f32 out): 2*128*128*2 + 3*128*128*4 + 128*128*4 = ~320 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = (128, 128, 128)  # bm, bn, bk
+
+
+def _split_limbs(x, base_bits):
+    """Balanced base-2^b digit split, VMEM-local (mirrors core.karatsuba)."""
+    beta = 1 << base_bits
+    half = beta >> 1
+    x = x.astype(jnp.int32)
+    lo = ((x + half) & (beta - 1)) - half
+    hi = (x - lo) >> base_bits
+    return hi.astype(jnp.int8), lo.astype(jnp.int8)
+
+
+def _int_kernel(
+    a_ref, b_ref, o_ref, s_hh, s_mid, s_ll, *, nk, base_bits, variant
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        s_hh[...] = jnp.zeros_like(s_hh)
+        s_mid[...] = jnp.zeros_like(s_mid)
+        s_ll[...] = jnp.zeros_like(s_ll)
+
+    ah, al = _split_limbs(a_ref[...], base_bits)
+    bh, bl = _split_limbs(b_ref[...], base_bits)
+    dot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    p_hh = dot(ah, bh)
+    p_ll = dot(al, bl)
+    if variant == "karatsuba":
+        # Digit sums fit s8 thanks to the guard bit (base_bits <= 7).
+        asum = (ah.astype(jnp.int32) + al.astype(jnp.int32)).astype(jnp.int8)
+        bsum = (bh.astype(jnp.int32) + bl.astype(jnp.int32)).astype(jnp.int8)
+        p_mid = dot(asum, bsum) - p_hh - p_ll
+    else:  # schoolbook: 4 narrow passes
+        p_mid = dot(ah, bl) + dot(al, bh)
+    s_hh[...] += p_hh
+    s_mid[...] += p_mid
+    s_ll[...] += p_ll
+
+    @pl.when(k == nk - 1)
+    def _recombine():
+        beta = 1 << base_bits
+        o_ref[...] = (
+            s_hh[...].astype(jnp.float32) * (beta * beta)
+            + s_mid[...].astype(jnp.float32) * beta
+            + s_ll[...].astype(jnp.float32)
+        )
+
+
+def kom_matmul_int_raw(
+    a_q: jax.Array,
+    b_q: jax.Array,
+    *,
+    base_bits: int = 7,
+    variant: str = "karatsuba",
+    block=DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """(m,k)x(k,n) int GEMM from narrow MXU passes; returns raw product (f32).
+
+    ``a_q``/``b_q``: integer-valued arrays with |x| <= kom_qmax(base_bits)
+    (int32 or int16 container).  Shapes must divide the block sizes (the ops
+    wrapper pads).  Scaling/dequantization is the caller's job.
+    """
+    if variant == "karatsuba" and base_bits > 7:
+        raise ValueError("karatsuba needs a guard bit: base_bits <= 7")
+    bm, bn, bk = block
+    m, kdim = a_q.shape
+    _, n = b_q.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim, block)
+    grid = (m // bm, n // bn, kdim // bk)
+    kernel = functools.partial(
+        _int_kernel, nk=grid[2], base_bits=base_bits, variant=variant
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, bn), jnp.int32),
+            pltpu.VMEM((bm, bn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a_q.astype(jnp.int16), b_q.astype(jnp.int16))
+
+
+def _bf16_kernel(a_ref, b_ref, o_ref, acc, *, nk, passes):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    ah = a.astype(jnp.bfloat16)
+    al = (a - ah.astype(jnp.float32)).astype(jnp.bfloat16)
+    bh = b.astype(jnp.bfloat16)
+    bl = (b - bh.astype(jnp.float32)).astype(jnp.bfloat16)
+    dot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out = dot(ah, bh) + dot(ah, bl) + dot(al, bh)
+    if passes == 4:
+        out = out + dot(al, bl)
+    acc[...] += out
+
+    @pl.when(k == nk - 1)
+    def _fin():
+        o_ref[...] = acc[...]
+
+
+def bf16x3_matmul_raw(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    passes: int = 3,
+    block=DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """fp32-accurate (m,k)x(k,n) GEMM from 3 (or 4) bf16 MXU passes."""
+    assert passes in (3, 4)
+    bm, bn, bk = block
+    m, kdim = a.shape
+    _, n = b.shape
+    assert m % bm == 0 and n % bn == 0 and kdim % bk == 0, (m, n, kdim, block)
+    grid = (m // bm, n // bn, kdim // bk)
+    kernel = functools.partial(_bf16_kernel, nk=grid[2], passes=passes)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

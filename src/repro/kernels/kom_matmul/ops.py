@@ -1,0 +1,102 @@
+"""Jitted public wrappers for the KOM GEMM Pallas kernel.
+
+Handles padding to MXU-aligned blocks, on-the-fly symmetric quantization and
+fused dequantization.  ``interpret`` defaults to True off-TPU so the same
+code validates on CPU and runs compiled on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize_symmetric
+
+from .kom_matmul import DEFAULT_BLOCK, bf16x3_matmul_raw, kom_matmul_int_raw
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x, bm, bk):
+    m, k = x.shape
+    pm, pk = (-m) % bm, (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("base_bits", "variant", "block", "interpret")
+)
+def kom_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    base_bits: int = 7,
+    variant: str = "karatsuba",
+    block=DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Float (m,k)@(k,n) through quantize -> KOM int GEMM -> dequantize."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, n = a.shape[0], b.shape[1]
+    bm, bn, bk = block
+    qa = quantize_symmetric(a, base_bits=base_bits)
+    qb = quantize_symmetric(b, base_bits=base_bits)
+    aq = _pad2(qa.values.astype(jnp.int16), bm, bk)
+    bq = _pad2(qb.values.astype(jnp.int16), bk, bn)
+    raw = kom_matmul_int_raw(
+        aq, bq, base_bits=base_bits, variant=variant, block=block,
+        interpret=interpret,
+    )
+    return raw[:m, :n] * (qa.scale * qb.scale)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("base_bits", "variant", "block", "interpret")
+)
+def kom_matmul_int(
+    a_q: jax.Array,
+    b_q: jax.Array,
+    *,
+    base_bits: int = 7,
+    variant: str = "karatsuba",
+    block=DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pre-quantized integer GEMM; returns the raw product as f32."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, n = a_q.shape[0], b_q.shape[1]
+    bm, bn, bk = block
+    aq = _pad2(a_q.astype(jnp.int16), bm, bk)
+    bq = _pad2(b_q.astype(jnp.int16), bk, bn)
+    raw = kom_matmul_int_raw(
+        aq, bq, base_bits=base_bits, variant=variant, block=block,
+        interpret=interpret,
+    )
+    return raw[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("passes", "block", "interpret"))
+def bf16x3_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    passes: int = 3,
+    block=DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """fp32-accurate GEMM from 3 bf16 MXU passes (Pallas)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    m, n = a.shape[0], b.shape[1]
+    bm, bn, bk = block
+    ap = _pad2(a.astype(jnp.float32), bm, bk)
+    bp = _pad2(b.astype(jnp.float32), bk, bn)
+    raw = bf16x3_matmul_raw(ap, bp, passes=passes, block=block, interpret=interpret)
+    return raw[:m, :n]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the KOM GEMM kernel.
+
+Deliberately takes a different code path from the kernel: the integer oracle
+uses full-width limb products via core.kom_dot_general's *schoolbook* route
+(always exact, no guard-bit subtlety), so a Karatsuba kernel bug cannot hide
+in a shared implementation.  Tests additionally compare against numpy int64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.karatsuba import kom_dot_general
+from repro.core.quantization import quantize_symmetric
+
+
+def kom_matmul_int_raw_ref(a_q, b_q, *, base_bits: int = 7, variant: str = "karatsuba"):
+    """Raw integer product as f32 (schoolbook limb math -- exact oracle)."""
+    del variant  # the oracle is variant-independent: it computes the truth
+    sb_bits = min(base_bits, 8)
+    return kom_dot_general(
+        a_q.astype(jnp.int32),
+        b_q.astype(jnp.int32),
+        base_bits=sb_bits,
+        variant="schoolbook",
+        recombine_dtype=jnp.float32,
+    )
+
+
+def bf16x3_matmul_raw_ref(a, b, *, passes: int = 3):
+    """fp32 matmul ground truth for the bf16x3 kernel (checked with rtol)."""
+    del passes
+    return jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def kom_matmul_ref(a, b, *, base_bits: int = 7, variant: str = "karatsuba"):
+    """Float-in/float-out reference for the full quantize->GEMM->dequant op."""
+    qa = quantize_symmetric(a, base_bits=base_bits)
+    qb = quantize_symmetric(b, base_bits=base_bits)
+    raw = kom_matmul_int_raw_ref(
+        qa.values, qb.values, base_bits=base_bits, variant=variant
+    )
+    return raw * (qa.scale * qb.scale)

@@ -1,0 +1,2 @@
+from .ops import mlstm_chunk
+from .ref import mlstm_ref

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: chunkwise-parallel mLSTM (gated linear attention).
+
+xLSTM's matrix-memory mixer is the perf-critical layer of the ssm family.
+The chunkwise schedule (intra-chunk attention-like block + inter-chunk
+recurrent state) maps onto the MXU as two GEMMs per chunk; the (dk x dv)
+state and (dk,) normalizer live in VMEM scratch across the sequential chunk
+grid dimension, so the recurrence never round-trips HBM.
+
+Grid: (batch, heads, n_chunks) -- chunks innermost (sequential on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, lf_ref, ig_ref, o_ref, s_scr, n_scr,
+                  *, nc, chunk):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)   # (c, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lf = lf_ref[0, 0].astype(jnp.float32)  # (c, 1) log forget gates
+    ig = ig_ref[0, 0].astype(jnp.float32)  # (c, 1) input gates
+
+    lcum = jnp.cumsum(lf, axis=0)          # (c, 1) inclusive
+    ltot = lcum[-1:, :]                    # (1, 1)
+
+    # intra-chunk: scores[t, s] = (q_t . k_s) exp(lcum_t - lcum_s) i_s, s<=t
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    decay = jnp.exp(jnp.clip(lcum - lcum.T, -60.0, 0.0))
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    scores = jnp.where(causal, scores * decay * ig.T, 0.0)
+
+    qdec = q * jnp.exp(jnp.clip(lcum, -60.0, 0.0))  # (c, dh)
+    y = jax.lax.dot_general(
+        scores, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) + jax.lax.dot_general(
+        qdec, s_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    n_tok = jnp.sum(scores, axis=-1, keepdims=True) + jax.lax.dot_general(
+        qdec, n_scr[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0, 0] = (y / jnp.maximum(jnp.abs(n_tok), 1.0)).astype(o_ref.dtype)
+
+    # state update: S' = e^ltot S + sum_s e^(ltot-lcum_s) i_s k_s v_s^T
+    wdec = jnp.exp(jnp.clip(ltot - lcum, -60.0, 0.0)) * ig  # (c, 1)
+    kw = k * wdec
+    s_scr[...] = s_scr[...] * jnp.exp(jnp.clip(ltot, -60.0, 0.0)) + \
+        jax.lax.dot_general(kw, v, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    n_scr[...] = n_scr[...] * jnp.exp(jnp.clip(ltot, -60.0, 0.0)) + \
+        jnp.sum(kw, axis=0, keepdims=True).T
+
+
+def mlstm_chunk_raw(q, k, v, log_f, i_gate, *, chunk: int = 64,
+                    interpret: bool = False):
+    """q/k/v (b, h, s, dh); log_f/i_gate (b, h, s); s % chunk == 0.
+
+    Returns y (b, h, s, dh) in f32 (normalized per xLSTM eq. 15).
+    """
+    b, h, s, dh = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    gates_shape = (b, h, s, 1)
+    lf = log_f.reshape(gates_shape)
+    ig = i_gate.reshape(gates_shape)
+    grid = (b, h, nc)
+    kernel = functools.partial(_mlstm_kernel, nc=nc, chunk=chunk)
+    spec4 = lambda: pl.BlockSpec((1, 1, chunk, dh),
+                                 lambda ib, ih, ic: (ib, ih, ic, 0))
+    spec_g = lambda: pl.BlockSpec((1, 1, chunk, 1),
+                                  lambda ib, ih, ic: (ib, ih, ic, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec4(), spec4(), spec4(), spec_g(), spec_g()],
+        out_specs=spec4(),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lf, ig)

@@ -1,0 +1,39 @@
+"""Jitted public wrapper for the chunkwise mLSTM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mlstm_chunk import mlstm_chunk_raw
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q, k, v, log_f, i_gate, *, chunk: int = 64,
+                interpret: bool | None = None):
+    """Chunkwise mLSTM; pads the sequence to the chunk size if needed.
+
+    Padding is safe: padded steps use i_gate=0 (no state write) and their
+    outputs are sliced off.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    b, h, s, dh = q.shape
+    c = min(chunk, s)
+    ps = (-s) % c
+    if ps:
+        pad4 = ((0, 0), (0, 0), (0, ps), (0, 0))
+        pad3 = ((0, 0), (0, 0), (0, ps))
+        q = jnp.pad(q, pad4)
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+        log_f = jnp.pad(log_f, pad3)
+        i_gate = jnp.pad(i_gate, pad3)  # zero input gate: padding is inert
+    out = mlstm_chunk_raw(q, k, v, log_f, i_gate, chunk=c,
+                          interpret=interpret)
+    return out[:, :, :s, :]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: the model zoo's chunkwise mLSTM with chunk=1 (pure
+sequential recurrence -- the ground-truth definition)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import _mlstm_chunk_scan
+
+
+def mlstm_ref(q, k, v, log_f, i_gate):
+    """Sequential (chunk=1) mLSTM recurrence; q/k/v (b,h,s,dh)."""
+    b, h, s, dh = q.shape
+    s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    y, _, _ = _mlstm_chunk_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_f.astype(jnp.float32), i_gate.astype(jnp.float32), s0, n0, 1,
+    )
+    return y

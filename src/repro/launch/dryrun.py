@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent (the SPMD
+partitioner accepts it), that it fits HBM (memory_analysis), and produces
+the roofline terms (FLOPs / bytes / collective bytes via the HLO parser).
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>[__tag].json and feed
+EXPERIMENTS.md sections Dry-run and Roofline.
+
+Usage:
+  python -m repro.launch.dryrun                    # all cells, both meshes
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+  python -m repro.launch.dryrun --multi-pod-only   # the 2x16x16 pass
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_stats import analyze
+from repro.analysis.roofline import (
+    V5E, count_params, model_flops, roofline_from_stats,
+)
+from repro.configs import get_config, list_configs
+from repro.models.config import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, param_shapes
+from repro.launch.step_fns import make_prefill_step, make_serve_step, make_train_step
+
+# long_500k needs sub-quadratic attention: only the recurrent/hybrid archs run
+SUBQUADRATIC = {"xlstm-125m", "recurrentgemma-9b"}
+
+SKIPS = {}
+for _a in ("whisper-large-v3", "internlm2-20b", "granite-3-2b", "deepseek-7b",
+           "command-r-plus-104b", "internvl2-26b", "qwen3-moe-30b-a3b",
+           "olmoe-1b-7b"):
+    SKIPS[(_a, "long_500k")] = "pure full attention; 500k decode out-of-family"
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             outdir: pathlib.Path, force: bool = False,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    out_path = outdir / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    if (arch, shape_name) in SKIPS:
+        rec.update(ok=True, skipped=SKIPS[(arch, shape_name)])
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+    t0 = time.time()
+    try:
+        shape = SHAPES[shape_name]
+        dp = ("pod", "data") if multi_pod else ("data",)
+        ov = dict(overrides or {})
+        ov.setdefault("act_dp", dp)
+        # bf16 params (f32 Adam moments): halves FSDP gathers + grad
+        # all-reduces and keeps the collectives in bf16 end-to-end
+        ov.setdefault("param_dtype", "bfloat16")
+        if shape.kind == "train":
+            ov.setdefault("remat", True)
+            ov.setdefault("seq_shard", True)
+        elif shape.kind == "prefill":
+            ov.setdefault("seq_shard", True)
+        cfg = get_config(arch, **ov)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.size
+        specs = input_specs(cfg, shape_name, mesh)
+        with mesh:
+            if shape.kind == "train":
+                fn = make_train_step(cfg)
+                lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(
+                    specs["params"], specs["opt_state"], specs["batch"]
+                )
+            elif shape.kind == "prefill":
+                fn = make_prefill_step(cfg)
+                lowered = jax.jit(fn).lower(specs["params"], specs["batch"])
+            else:
+                fn = make_serve_step(cfg)
+                lowered = jax.jit(fn, donate_argnums=(1,)).lower(
+                    specs["params"], specs["cache"], specs["tokens"],
+                    specs["pos"],
+                )
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        stats = analyze(compiled.as_text())
+        counts = count_params(param_shapes(cfg))
+        mf = model_flops(cfg, shape, counts)
+        rl = roofline_from_stats(stats, n_chips, mf)
+        hbm_gb = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                  + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 1e9
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            bytes_per_device={
+                "args": ma.argument_size_in_bytes,
+                "out": ma.output_size_in_bytes,
+                "temp": ma.temp_size_in_bytes,
+                "aliased": ma.alias_size_in_bytes,
+                "live_gb": round(hbm_gb, 3),
+                "fits_16gb": hbm_gb < V5E["hbm_gb"],
+            },
+            hlo={
+                "flops_dev": stats.flops,
+                "bytes_dev": stats.bytes,
+                "score_bytes_dev": stats.score_bytes,
+                "transcendentals_dev": stats.transcendentals,
+                "collective_bytes_dev": stats.collective_bytes,
+            },
+            params=counts,
+            roofline=rl.to_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 -- a failed cell is a result
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    archs = [args.arch] if args.arch else list_configs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape, multi_pod=mp, outdir=outdir,
+                               force=args.force)
+                status = ("SKIP" if rec.get("skipped")
+                          else "ok" if rec["ok"] else "FAIL")
+                n_fail += status == "FAIL"
+                extra = ""
+                if rec.get("roofline"):
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} mfu={r['mfu_est']:.3f}"
+                             f" live={rec['bytes_per_device']['live_gb']}GB")
+                print(f"[{status}] {arch} {shape} "
+                      f"{'2x16x16' if mp else '16x16'} "
+                      f"({time.time()-t0:.0f}s){extra}", flush=True)
+                if status == "FAIL":
+                    print("   ", rec["error"], flush=True)
+    print(f"done; {n_fail} failures")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,192 @@
+"""Sharding rules: logical param/cache/batch layouts -> PartitionSpecs.
+
+TP (megatron): column-parallel in-projections, row-parallel out-projections,
+vocab-sharded embedding + LM head, expert-parallel MoE weights.  KV heads
+that do not divide the model axis stay replicated (DESIGN.md section 5).
+
+FSDP (``mode='fsdp'``): additionally shards the *other* matrix dim over the
+data axes (ZeRO-3); GSPMD inserts the per-layer all-gathers, which overlap
+with the scan under XLA's latency-hiding scheduler on TPU.  This is what
+lets command-r-plus-104b (416 GB fp32 + optimizer) fit 16 GB/chip meshes.
+
+Decode caches: batch over data; KV heads over model when divisible,
+otherwise the cache *sequence* dim is sharded over model (FlashDecoding-
+style split -- GSPMD handles the softmax reductions over the sharded axis).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+from .mesh import dp_axes, tp_size
+
+# in-projection / column-parallel leaves: shard last dim on "model"
+_COL = {"w_gate", "w_up", "w_in", "w_x", "w_y", "w_a", "w_i", "lm_head"}
+# out-projection / row-parallel leaves: shard dim -2 on "model"
+_ROW = {"wo", "w_down", "w_out"}
+# replicated small leaves
+_REP = {"b", "w", "bq", "bk", "bv", "bo", "b_up", "b_down", "router"}
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_spec_tree(cfg: ModelConfig, params_shape: Any, mesh, *,
+                    mode: str = "auto") -> Any:
+    """PartitionSpec tree parallel to the param tree.
+
+    ``params_shape``: pytree of ShapeDtypeStruct (from jax.eval_shape).
+    mode: 'tp' | 'fsdp' | 'auto' (fsdp when TP-only params exceed ~2 GB/dev).
+    """
+    tp = tp_size(mesh)
+    dp = dp_axes(mesh)
+    if mode == "auto":
+        import math
+        total = sum(
+            math.prod(l.shape) * l.dtype.itemsize
+            for l in jax.tree.leaves(params_shape)
+        )
+        mode = "fsdp" if total / max(tp, 1) > 2e9 else "tp"
+    if mode == "dp_only":
+        # small-model layout: no tensor parallelism at all; every axis is
+        # data-parallel and params are fully FSDP-sharded across all of them
+        tp = 1
+        dp = dp + ("model",)
+    fsdp = mode in ("fsdp", "dp_only")
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        lead = 0
+        # stacked layer/group dims: any leading dims beyond the logical rank
+        logical = _logical_rank(names, name)
+        lead = max(nd - logical, 0)
+        spec = [None] * nd
+
+        def put(axis_from_end, val):
+            spec[nd - axis_from_end] = val
+
+        if name == "embed":
+            # vocab over model only: keeps tied LM heads (embed.T) clean
+            # column-parallel with zero resharding (DESIGN.md section 5)
+            if tp > 1 and _divisible(shape[-2], tp):
+                put(2, "model")
+            elif tp == 1 and _divisible(shape[-2], dpn):
+                put(2, dp)  # dp_only: vocab-shard the table across everything
+        elif name in ("wq", "wk", "wv"):
+            heads = cfg.n_heads if name == "wq" else cfg.n_kv_heads
+            if tp > 1 and _divisible(heads, tp):
+                put(1, "model")
+            if fsdp and _divisible(shape[-2], dpn):
+                put(2, dp)
+        elif name in ("wg", "wu", "wd"):  # MoE expert weights: EP on dim E
+            if tp > 1 and _divisible(shape[lead], tp):
+                spec[lead] = "model"
+            if fsdp and _divisible(shape[-1], dpn):
+                put(1, dp)
+        elif name in _COL:
+            if tp > 1 and _divisible(shape[-1], tp):
+                put(1, "model")
+            if fsdp and _divisible(shape[-2], dpn):
+                put(2, dp)
+        elif name in _ROW:
+            if name == "wo":
+                ok = _divisible(cfg.n_heads, tp)
+            else:
+                ok = _divisible(shape[-2], tp)
+            if tp > 1 and ok:
+                put(2, "model")
+            if fsdp and _divisible(shape[-1], dpn):
+                put(1, dp)
+        elif name == "lam" and tp > 1 and _divisible(shape[-1], tp):
+            put(1, "model")
+        elif name == "conv_w" and tp > 1 and _divisible(shape[-1], tp):
+            put(1, "model")
+        elif name == "r":  # slstm block-diagonal recurrent weights
+            if tp > 1 and _divisible(shape[lead], tp):
+                spec[lead] = "model"
+        # everything else (norms, biases, router) replicated
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def _dp_size(mesh, include_model: bool = False) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    if include_model:
+        n *= mesh.shape.get("model", 1)
+    return n
+
+
+def _logical_rank(names, name) -> int:
+    """Rank of the un-stacked (single-layer) parameter."""
+    if name in ("wg", "wu", "wd"):
+        return 3  # (E, d, f)
+    if name == "r":
+        return 3  # (h, dh, 4dh)
+    if name == "conv_w":
+        return 2
+    if name in ("lam", "b", "w", "bq", "bk", "bv", "bo", "b_up", "b_down"):
+        return 1
+    return 2
+
+
+def batch_spec(cfg: ModelConfig, mesh, kind: str):
+    """Sharding specs for a train/prefill batch dict."""
+    dp = dp_axes(mesh)
+    specs = {"tokens": P(dp, None)}
+    if kind == "train":
+        specs["labels"] = P(dp, None)
+    if cfg.family == "vlm":
+        specs["img_embeds"] = P(dp, None, None)
+    if cfg.family == "encdec":
+        specs["audio_embeds"] = P(dp, None, None)
+    return specs
+
+
+def cache_spec_tree(cfg: ModelConfig, cache_shape: Any, mesh) -> Any:
+    """Decode-cache specs: (stack, batch, ...) -> (None, dp, heads|seq, ...)."""
+    tp = tp_size(mesh)
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        shape = leaf.shape
+        nd = len(shape)
+        spec = [None] * nd
+        if nd >= 2:
+            spec[1] = dp if _divisible(shape[1], _dp_size(mesh)) else None
+        is_kv = any(n in ("kv", "cross_kv", "k", "v") for n in names)
+        if is_kv and nd == 5:
+            # (L, b, hkv, s, dh): heads if divisible, else sequence split
+            if _divisible(shape[2], tp):
+                spec[2] = "model"
+            elif _divisible(shape[3], tp):
+                spec[3] = "model"
+        elif nd >= 3:
+            # recurrent states: shard the widest trailing dim that divides
+            for i in range(nd - 1, 1, -1):
+                if _divisible(shape[i], tp):
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,111 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation -- the dry-run lowers against
+these.  For train/prefill cells the 'inputs' are (params, opt_state, batch);
+for decode cells (params, cache, tokens, pos).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.config import SHAPES, ModelConfig, ShapeCfg
+from repro.optim.adamw import adamw_init
+
+from .mesh import dp_axes
+from .sharding import batch_spec, cache_spec_tree, param_spec_tree
+
+ABS = jax.ShapeDtypeStruct
+
+
+def _with_sharding(shape_tree, spec_tree, mesh, dtype_override=None):
+    def mk(leaf, spec):
+        dt = dtype_override or leaf.dtype
+        return ABS(leaf.shape, dt, sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, shape_tree, spec_tree)
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(transformer.init_params, cfg),
+        jax.random.PRNGKey(0),
+    )
+
+
+def _batch_struct(cfg: ModelConfig, shape: ShapeCfg, mesh, kind: str):
+    dp = tuple(cfg.act_dp) if cfg.act_dp else dp_axes(mesh)
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    bdim = dp if shape.global_batch % dpn == 0 else None
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {
+        "tokens": ABS((b, s), jnp.int32,
+                      sharding=NamedSharding(mesh, P(bdim, None))),
+    }
+    if kind == "train":
+        out["labels"] = ABS((b, s), jnp.int32,
+                            sharding=NamedSharding(mesh, P(bdim, None)))
+    if cfg.family == "vlm":
+        out["img_embeds"] = ABS(
+            (b, cfg.n_img_tokens, cfg.d_model), cfg.dtype,
+            sharding=NamedSharding(mesh, P(bdim, None, None)),
+        )
+    if cfg.family == "encdec":
+        out["audio_embeds"] = ABS(
+            (b, cfg.enc_seq, cfg.d_model), cfg.dtype,
+            sharding=NamedSharding(mesh, P(bdim, None, None)),
+        )
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, *,
+                mode: str = "auto") -> Dict[str, Any]:
+    """All lowering inputs for one (arch x shape) cell on ``mesh``."""
+    shape = SHAPES[shape_name]
+    if mode == "auto" and cfg.shard_mode != "auto":
+        mode = cfg.shard_mode
+    pshapes = param_shapes(cfg)
+    pspecs = param_spec_tree(cfg, pshapes, mesh, mode=mode)
+
+    if shape.kind in ("train", "prefill"):
+        params = _with_sharding(pshapes, pspecs, mesh)
+        out = {"params": params,
+               "batch": _batch_struct(cfg, shape, mesh, shape.kind)}
+        if shape.kind == "train":
+            oshapes = jax.eval_shape(adamw_init, pshapes)
+            # optimizer moments share the param specs; step is replicated
+            from repro.optim.adamw import AdamWState
+            mspec = _with_sharding(oshapes.m, pspecs, mesh)
+            vspec = _with_sharding(oshapes.v, pspecs, mesh)
+            step = ABS((), jnp.int32, sharding=NamedSharding(mesh, P()))
+            out["opt_state"] = AdamWState(step=step, m=mspec, v=vspec)
+        return out
+
+    # decode: params in compute dtype (inference), cache + token + pos
+    params = _with_sharding(pshapes, pspecs, mesh, dtype_override=None)
+    params = jax.tree.map(
+        lambda l: ABS(l.shape, cfg.dtype if l.dtype == jnp.float32 else l.dtype,
+                      sharding=l.sharding),
+        params,
+    )
+    cshapes = jax.eval_shape(
+        functools.partial(transformer.init_cache, cfg, shape.global_batch,
+                          shape.seq_len)
+    )
+    cspecs = cache_spec_tree(cfg, cshapes, mesh)
+    cache = _with_sharding(cshapes, cspecs, mesh)
+    dp = dp_axes(mesh)
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    bdim = dp if shape.global_batch % dpn == 0 else None
+    tokens = ABS((shape.global_batch, 1), jnp.int32,
+                 sharding=NamedSharding(mesh, P(bdim, None)))
+    pos = ABS((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return {"params": params, "cache": cache, "tokens": tokens, "pos": pos}

@@ -1,0 +1,50 @@
+"""Jittable step functions: the three entry points the launcher/dry-run lower."""
+from __future__ import annotations
+
+import jax
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim.adamw import adamw_update
+from repro.optim.schedule import warmup_cosine
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr=3e-4, warmup=200,
+                    total_steps=10000, weight_decay=0.1):
+    import jax.numpy as jnp
+
+    def _compute_cast(p):
+        # mixed precision: f32 master weights, bf16 compute copies -- the
+        # cast sits *before* the FSDP all-gathers, halving gather bytes and
+        # keeping only bf16 gathered copies live.
+        return jax.tree.map(
+            lambda x: x.astype(cfg.dtype) if x.dtype == jnp.float32 else x, p
+        )
+
+    def train_step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            lambda p, b: transformer.loss_fn(_compute_cast(p), cfg, b),
+            has_aux=True,
+        )(params, batch)
+        # step is 0-based here; schedule is 1-based so warmup=1 => full LR
+        lr = warmup_cosine(opt_state.step + 1, peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        new_params, new_opt, om = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay
+        )
+        return new_params, new_opt, {**metrics, **om, "lr": lr,
+                                     "total_loss": total}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = transformer.forward(params, cfg, batch)
+        return logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def step(params, cache, tokens, pos):
+        return transformer.serve_step(params, cfg, cache, tokens, pos)
+    return step

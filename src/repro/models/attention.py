@@ -1,0 +1,219 @@
+"""GQA attention with RoPE, KV cache, causal/local/bidirectional masking.
+
+Two execution paths for the score/softmax/PV pipeline:
+  * the pure-jnp path (default) -- what pjit lowers for the multi-pod
+    dry-run; GSPMD shards it (including softmax over a sharded KV axis for
+    the decode cells);
+  * the Pallas flash kernel (``use_kernel=True``) -- the fused hot path,
+    validated in interpret mode on CPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import MatmulPolicy
+from repro.kernels.flash_attention import flash_attention
+
+from .layers import apply_norm, dense, linear_init, norm_init, rms_norm, rope
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (b, kv_heads, max_len, head_dim)
+    v: jax.Array
+
+
+def attn_init(key, cfg, dtype=jnp.float32, bias=False):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], d, hq * dh, dtype),
+        "wk": linear_init(ks[1], d, hkv * dh, dtype),
+        "wv": linear_init(ks[2], d, hkv * dh, dtype),
+        "wo": linear_init(ks[3], hq * dh, d, dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    if getattr(cfg, "qk_norm", False):
+        p["q_norm"] = norm_init(dh, "rms", dtype)
+        p["k_norm"] = norm_init(dh, "rms", dtype)
+    return p
+
+
+def _mask_bias(q_pos, k_pos, *, causal, window, k_len_valid=None):
+    """Additive mask bias (1, 1, sq, skv) in f32."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    if k_len_valid is not None:
+        m &= k_pos[None, :] < k_len_valid
+    return jnp.where(m, 0.0, -1e30)[None, None]
+
+
+def dot_attention_jnp(q, k, v, *, causal, window, q_offset, k_len_valid=None):
+    """q (b,hq,sq,dh); k/v (b,hkv,skv,dh) -> (b,hq,sq,dh).
+
+    GQA by repeating K/V to hq heads: under TP the repeat broadcasts the
+    (replicated) KV heads onto the sharded q-head axis, so score tensors
+    stay sharded over 'model' (a reshape-based grouping would break that).
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (dh**0.5)
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv)
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                      k_len_valid=k_len_valid)
+    s = s + bias
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention_jnp(q, k, v, *, causal, window, q_offset,
+                          k_len_valid=None, chunk=1024):
+    """Flash-style online-softmax over KV chunks (lax.scan) in pure jnp.
+
+    Never materializes the (sq, skv) score matrix: HBM traffic and live
+    memory scale with the chunk, exactly like the Pallas kernel -- this is
+    the lowering the dry-run rooflines for long sequences.
+    """
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    if skv % chunk:
+        chunk = skv  # fallback: single chunk
+    nc = skv // chunk
+    kc = k.reshape(b, hq, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hq, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    q32 = q.astype(jnp.float32) / (dh**0.5)
+    q_pos = jnp.arange(sq) + q_offset
+
+    def step(carry, xs):
+        m, l, acc = carry
+        ci, kb, vb = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", q32, kb.astype(jnp.float32))
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if k_len_valid is not None:
+            mask &= k_pos[None, :] < k_len_valid
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), ()
+
+    m0 = jnp.full((b, hq, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hq, sq), jnp.float32)
+    a0 = jnp.zeros((b, hq, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(nc), kc, vc)
+    )
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(
+    params,
+    x,
+    cfg,
+    *,
+    positions,
+    cache: Optional[KVCache] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    use_kernel: bool = False,
+    kv_override=None,
+):
+    """Full attention sublayer: proj -> rope -> (cache) -> attn -> out proj.
+
+    Training: cache=None, positions (s,).  Decode: cache given, x is the new
+    token block (b, 1, d), positions scalar-per-batch (b,) or scalar.
+    ``kv_override``: (k, v) tensors for cross-attention (already projected).
+    Returns (y, new_cache).
+    """
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    policy = cfg.policy
+    q = dense(x, params["wq"], policy=policy, bias=params.get("bq"))
+    q = q.reshape(b, s, hq, dh)
+    if kv_override is None:
+        k = dense(x, params["wk"], policy=policy, bias=params.get("bk")).reshape(
+            b, s, hkv, dh
+        )
+        v = dense(x, params["wv"], policy=policy, bias=params.get("bv")).reshape(
+            b, s, hkv, dh
+        )
+    else:
+        k, v = kv_override
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"]["w"])
+        if kv_override is None:
+            k = rms_norm(k, params["k_norm"]["w"])
+    if use_rope:
+        q = rope(q, positions, theta=cfg.rope_theta)
+        if kv_override is None:
+            k = rope(k, positions, theta=cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)  # (b, hq, s, dh)
+    if kv_override is None:
+        # projected K/V are (b, s, hkv, dh); overrides arrive pre-transposed
+        k = k.transpose(0, 2, 1, 3)
+        v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is not None:
+        # positions: scalar index of the first new token (decode step).
+        pos = positions if jnp.ndim(positions) == 0 else positions[0]
+        ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                          (0, 0, pos, 0))
+        new_cache = KVCache(ck, cv)
+        k, v = ck, cv
+        q_offset = pos
+        k_len_valid = pos + s
+        out = dot_attention_jnp(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            k_len_valid=k_len_valid,
+        )
+    else:
+        q_offset = 0
+        if use_kernel:
+            out = flash_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset)
+        elif k.shape[2] > getattr(cfg, "attn_dense_max", 2048):
+            out = chunked_attention_jnp(
+                q, k, v, causal=causal, window=window, q_offset=q_offset,
+                chunk=getattr(cfg, "attn_chunk", 1024),
+            )
+        else:
+            out = dot_attention_jnp(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    y = dense(out, params["wo"], policy=policy, bias=params.get("bo"))
+    return y, new_cache

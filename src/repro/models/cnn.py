@@ -1,0 +1,129 @@
+"""The paper's own CNNs -- AlexNet, VGG16, VGG19 -- on the systolic engine.
+
+Every conv/FC goes through the KOM-enabled systolic substrate
+(:mod:`repro.core.systolic`), or the Pallas conv kernel when
+``use_pallas_conv`` is set, so the paper's resource analysis (Tables 1-4:
+3x3/5x5/7x7/11x11 kernels) is exercised end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import MatmulPolicy, policy_linear
+from repro.core.systolic import conv2d_im2col, pool2d
+from repro.kernels.conv2d import conv2d_systolic
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    # layer spec: ("conv", k, cout, stride) | ("pool",) | ("fc", n)
+    layers: Tuple[tuple, ...]
+    img_size: int
+    in_channels: int = 3
+    n_classes: int = 1000
+    policy: MatmulPolicy = MatmulPolicy.NATIVE_BF16
+    use_pallas_conv: bool = False
+
+
+def _vgg_layers(block_sizes: List[int]) -> Tuple[tuple, ...]:
+    chans = [64, 128, 256, 512, 512]
+    layers: List[tuple] = []
+    for c, n in zip(chans, block_sizes):
+        layers += [("conv", 3, c, 1)] * n + [("pool",)]
+    layers += [("fc", 4096), ("fc", 4096), ("fc", 1000)]
+    return tuple(layers)
+
+
+ALEXNET = CNNConfig(
+    "alexnet",
+    (
+        ("conv", 11, 96, 4), ("pool",),
+        ("conv", 5, 256, 1), ("pool",),
+        ("conv", 3, 384, 1), ("conv", 3, 384, 1), ("conv", 3, 256, 1), ("pool",),
+        ("fc", 4096), ("fc", 4096), ("fc", 1000),
+    ),
+    img_size=227,
+)
+VGG16 = CNNConfig("vgg16", _vgg_layers([2, 2, 3, 3, 3]), img_size=224)
+VGG19 = CNNConfig("vgg19", _vgg_layers([2, 2, 4, 4, 4]), img_size=224)
+
+
+def cnn_init(cfg: CNNConfig, key, dtype=jnp.float32):
+    params = []
+    cin = cfg.in_channels
+    h = cfg.img_size
+    feat = None
+    first_conv = True
+    for spec in cfg.layers:
+        key, sub = jax.random.split(key)
+        if spec[0] == "conv":
+            _, k, cout, stride = spec
+            fan = k * k * cin
+            params.append({
+                "w": (jax.random.normal(sub, (k, k, cin, cout), dtype)
+                      / fan**0.5).astype(dtype),
+                "b": jnp.zeros((cout,), dtype),
+            })
+            cin = cout
+            if cfg.name == "alexnet" and first_conv:
+                h = (h - k) // stride + 1       # VALID first layer
+            else:
+                h = -(-h // stride)             # SAME
+            first_conv = False
+        elif spec[0] == "pool":
+            params.append({})
+            h = h // 2
+        else:  # fc
+            _, n = spec
+            if feat is None:
+                feat = h * h * cin
+            params.append({
+                "w": (jax.random.normal(sub, (feat, n), dtype) / feat**0.5
+                      ).astype(dtype),
+                "b": jnp.zeros((n,), dtype),
+            })
+            feat = n
+    return params
+
+
+def cnn_forward(params, cfg: CNNConfig, x):
+    """x: (n, H, W, C) image batch -> (n, n_classes) logits."""
+    conv = (
+        (lambda x, w, stride, padding: conv2d_systolic(
+            x, w, stride=stride, padding=padding,
+            variant="kom" if cfg.policy == MatmulPolicy.KOM_INT14 else "native"))
+        if cfg.use_pallas_conv
+        else (lambda x, w, stride, padding: conv2d_im2col(
+            x, w, stride=stride, padding=padding, policy=cfg.policy))
+    )
+    i = 0
+    first_conv = True
+    for spec in cfg.layers:
+        p = params[i]
+        if spec[0] == "conv":
+            _, k, cout, stride = spec
+            padding = "VALID" if (cfg.name == "alexnet" and first_conv) else "SAME"
+            first_conv = False
+            x = conv(x, p["w"], stride, padding) + p["b"]
+            x = jax.nn.relu(x)
+        elif spec[0] == "pool":
+            x = pool2d(x, window=2, stride=2, kind="max")
+        else:
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            x = policy_linear(x, p["w"], policy=cfg.policy) + p["b"]
+            if spec != cfg.layers[-1]:
+                x = jax.nn.relu(x)
+        i += 1
+    return x
+
+
+def cnn_loss(params, cfg: CNNConfig, x, labels):
+    logits = cnn_forward(params, cfg, x)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))

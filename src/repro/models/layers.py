@@ -1,0 +1,108 @@
+"""Shared layer primitives for the model zoo (pure JAX, pytree params).
+
+Every matmul routes through ``repro.core.precision.policy_linear`` so the
+paper's KOM technique is a config switch for all architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import MatmulPolicy, policy_linear
+
+
+def linear_init(key, d_in, d_out, dtype=jnp.float32):
+    scale = 1.0 / (d_in**0.5)
+    return (jax.random.normal(key, (d_in, d_out), dtype) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), dtype) * 0.02).astype(dtype)
+
+
+def dense(x, w, *, policy=MatmulPolicy.NATIVE_BF16, bias=None):
+    y = policy_linear(x, w, policy=policy)
+    if bias is not None:
+        y = y + bias
+    return y.astype(x.dtype)
+
+
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, kind="rms"):
+    if kind == "rms":
+        return rms_norm(x, p["w"])
+    return layer_norm(x, p["w"], p["b"])
+
+
+def norm_init(d, kind="rms", dtype=jnp.float32):
+    if kind == "rms":
+        return {"w": jnp.zeros((d,), dtype)}
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def rope(x, positions, *, theta=10000.0):
+    """Rotary embedding; x (..., s, h, d) with positions (..., s) or (s,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, half)
+    # expand to head dim: (..., s, 1, half)
+    angles = angles[..., :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [
+            x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin,
+            x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin,
+        ],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, *, policy=MatmulPolicy.NATIVE_BF16):
+    g = dense(x, w_gate, policy=policy)
+    u = dense(x, w_up, policy=policy)
+    return dense(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, w_down,
+                 policy=policy)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down, *, policy=MatmulPolicy.NATIVE_BF16):
+    h = dense(x, w_up, policy=policy, bias=b_up)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return dense(h, w_down, policy=policy, bias=b_down)
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv over time: x (b, s, d), w (k, d).
+
+    Training (state=None): left-pad k-1 zeros.  Decode: ``state`` is the last
+    k-1 inputs (b, k-1, d); returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(x[:, :0])
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,90 @@
+"""Top-k routed MoE FFN (GShard/Switch dispatch-combine einsum lineage).
+
+Expert weights carry a leading expert dim that the sharding rules put on the
+``model`` mesh axis (expert parallelism); the dispatch/combine einsums then
+lower to all-to-alls under GSPMD.  Tokens are routed in fixed-size groups
+with a capacity factor -- the standard dropping formulation that keeps every
+shape static for pjit.
+
+The dispatch one-hot einsum costs ~2*E*C*d FLOPs/token; with the default
+group size (512) that is 15-30% of expert FLOPs for the assigned MoE archs.
+It is visible in the roofline MODEL_FLOPS/HLO ratio and is a hillclimb
+target (see EXPERIMENTS.md section Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, linear_init
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, dff, e = cfg.d_model, cfg.d_ff, cfg.moe_num_experts
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / (d**0.5)
+    s_out = 1.0 / (dff**0.5)
+    return {
+        "router": linear_init(ks[0], d, e, jnp.float32),
+        "wg": (jax.random.normal(ks[1], (e, d, dff), dtype) * s_in).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (e, d, dff), dtype) * s_in).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (e, dff, d), dtype) * s_out).astype(dtype),
+    }
+
+
+def moe_capacity(group_size: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(group_size * top_k * factor / n_experts) + 1
+    return max(4, -(-c // 4) * 4)  # multiple of 4, at least 4
+
+
+def moe_ffn(params, x, cfg):
+    """x (b, s, d) -> (y (b, s, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    tokens = b * s
+    gsz = min(cfg.moe_group_size, tokens)
+    assert tokens % gsz == 0, (tokens, gsz)
+    g = tokens // gsz
+    cap = moe_capacity(gsz, k, e, cfg.moe_capacity_factor)
+    xg = x.reshape(g, gsz, d)
+
+    logits = jnp.einsum(
+        "gsd,de->gse", xg.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (g, s, e)
+    gate, idx = jax.lax.top_k(probs, k)  # (g, s, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # Position of each (token, slot) inside its expert's capacity buffer.
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (g, s, k, e)
+    flat = oh.reshape(g, gsz * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat  # exclusive running count per expert
+    pos = jnp.sum(flat * pos, axis=-1)  # (g, s*k)
+    keep = (pos < cap).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    slot = flat[..., None] * (pos_oh * keep[..., None])[..., None, :]  # (g,t,e,c)
+    disp = slot.reshape(g, gsz, k, e, cap).sum(axis=2)  # (g, s, e, c) 0/1
+    comb = (
+        slot.reshape(g, gsz, k, e, cap)
+        * gate[..., None, None]
+    ).sum(axis=2)  # (g, s, e, c) gate-weighted
+
+    dtype = x.dtype
+    expert_in = jnp.einsum("gsec,gsd->gecd", disp.astype(dtype), xg)
+    dp_mult = 32 if len(cfg.act_dp) == 2 else 16
+    if cfg.act_dp and g % dp_mult == 0 and e % 16 == 0:
+        # EP: expert dim of the dispatched tensors on "model"
+        from jax.sharding import PartitionSpec as P
+        from .transformer import _wsc
+        expert_in = _wsc(expert_in, P(tuple(cfg.act_dp), "model", None, None))
+    hg = jnp.einsum("gecd,edf->gecf", expert_in, params["wg"].astype(dtype))
+    hu = jnp.einsum("gecd,edf->gecf", expert_in, params["wu"].astype(dtype))
+    h = jax.nn.silu(hg.astype(jnp.float32)).astype(dtype) * hu
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wd"].astype(dtype))
+    y = jnp.einsum("gsec,gecd->gsd", comb.astype(dtype), expert_out)
+
+    # Switch-style load-balance loss over all routed slots.
+    me = jnp.mean(probs, axis=1)  # (g, e) router prob mass
+    ce = jnp.mean(disp.sum(axis=-1), axis=1)  # (g, e) dispatch fraction
+    aux = e * jnp.mean(jnp.sum(me * ce, axis=-1)) / k
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,283 @@
+"""Recurrent sequence mixers: mLSTM / sLSTM (xLSTM) and RG-LRU (Griffin).
+
+All three are sub-quadratic -- these are the cells that make the
+``long_500k`` shape runnable.  The projections route through the precision
+policy (the paper's KOM path); the recurrences themselves are elementwise
+(KOM inapplicable there; DESIGN.md section 4).
+
+mLSTM uses the chunkwise-parallel form (intra-chunk attention-like block +
+inter-chunk state scan), the standard TPU-friendly schedule for gated linear
+attention.  Simplification vs the xLSTM paper: sigmoid input gate instead of
+stabilized exponential gating (noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, dense, linear_init, norm_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, chunkwise parallel)
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    s: jax.Array  # (b, h, dk, dv) matrix memory
+    n: jax.Array  # (b, h, dk) normalizer
+    conv: jax.Array  # (b, kconv-1, d_inner) causal-conv tail
+
+
+def mlstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = d * 2  # up-projection factor 2
+    h = cfg.n_heads
+    dh = di // h
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": linear_init(ks[0], d, di, dtype),
+        "w_gate": linear_init(ks[1], d, di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, di), dtype) * 0.1).astype(dtype),
+        "wq": linear_init(ks[3], di, di, dtype),
+        "wk": linear_init(ks[4], di, di, dtype),
+        "wv": linear_init(ks[5], di, di, dtype),
+        "w_if": linear_init(ks[6], d, 2 * h, dtype),
+        "out_norm": norm_init(di, "rms", dtype),
+        "w_down": linear_init(ks[7], di, d, dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, i_gate, state, n_state, chunk: int):
+    """Chunkwise gated linear attention.
+
+    q/k/v: (b, h, s, dh); log_f, i_gate: (b, h, s); state (b,h,dk,dv),
+    n_state (b,h,dk).  Returns (y, state', n_state').
+    """
+    b, h, s, dh = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rs = lambda x: x.reshape(b, h, nc, chunk, *x.shape[3:]).swapaxes(0, 2)
+    qc, kc, vc = rs(q), rs(k), rs(v)          # (nc, h, b->?) careful below
+    # After swap: (nc, h, b, chunk, dh)?  We keep (nc, b, h, chunk, ...) via:
+    qc = q.reshape(b, h, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, h, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    lfc = log_f.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+    igc = i_gate.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        st, nt = carry  # (b,h,dk,dv), (b,h,dk)
+        qt, kt, vt, lf, ig = xs  # (b,h,c,dh) ... (b,h,c)
+        lcum = jnp.cumsum(lf, axis=-1)  # inclusive cumulative log-decay
+        ltot = lcum[..., -1:]
+        # intra-chunk: score[t,s] = (q_t . k_s) * exp(lcum_t - lcum_s) * i_s
+        scores = jnp.einsum("bhtd,bhsd->bhts", qt, kt)
+        decay = jnp.exp(
+            jnp.clip(lcum[..., :, None] - lcum[..., None, :], -60.0, 0.0)
+        )
+        scores = scores * decay * ig[..., None, :] * causal
+        y_intra = jnp.einsum("bhts,bhsd->bhtd", scores, vt)
+        # inter-chunk: carry-in state decayed to position t
+        qdec = qt * jnp.exp(jnp.clip(lcum, -60.0, 0.0))[..., None]
+        y_inter = jnp.einsum("bhtk,bhkv->bhtv", qdec, st)
+        n_inter = jnp.einsum("bhtk,bhk->bht", qdec, nt)
+        # normalizer: q . n_t; the intra part is exactly the score row-sum
+        # (scores already carry decay * i_s * (q_t . k_s))
+        y = y_intra + y_inter
+        n_tok = jnp.sum(scores, axis=-1) + n_inter
+        y = y / jnp.maximum(jnp.abs(n_tok), 1.0)[..., None]
+        # state update
+        wdec = jnp.exp(jnp.clip(ltot - lcum, -60.0, 0.0)) * ig  # (b,h,c)
+        st_new = st * jnp.exp(jnp.clip(ltot, -60.0, 0.0))[..., None] + jnp.einsum(
+            "bhck,bhcv,bhc->bhkv", kt, vt, wdec
+        )
+        nt_new = nt * jnp.exp(jnp.clip(ltot, -60.0, 0.0)) + jnp.einsum(
+            "bhck,bhc->bhk", kt, wdec
+        )
+        return (st_new, nt_new), y
+
+    (state, n_state), ys = jax.lax.scan(
+        step, (state, n_state), (qc, kc, vc, lfc, igc)
+    )
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, s, dh)
+    return y, state, n_state
+
+
+def mlstm_block(params, x, cfg, state: Optional[MLSTMState] = None,
+                chunk: int = 64):
+    """x (b, s, d) -> (y, new_state).  state!=None => decode (s small)."""
+    b, s, d = x.shape
+    di = d * 2
+    h = cfg.n_heads
+    dh = di // h
+    policy = cfg.policy
+    up = dense(x, params["w_up"], policy=policy)
+    gate = dense(x, params["w_gate"], policy=policy)
+    conv_in = up
+    cstate = state.conv if state is not None else None
+    cx, new_conv = causal_conv1d(conv_in, params["conv_w"], cstate)
+    cx = jax.nn.silu(cx.astype(jnp.float32)).astype(x.dtype)
+    q = dense(cx, params["wq"], policy=policy).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = dense(cx, params["wk"], policy=policy).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    k = k / (dh**0.5)
+    v = dense(up, params["wv"], policy=policy).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    gates = dense(x, params["w_if"], policy=policy).astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(gates[..., :h]).transpose(0, 2, 1)  # (b, h, s)
+    log_f = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1)
+    if state is None:
+        s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        ch = chunk if s % chunk == 0 else s
+        y, s1, n1 = _mlstm_chunk_scan(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            log_f, i_gate, s0, n0, ch,
+        )
+    else:
+        y, s1, n1 = _mlstm_chunk_scan(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            log_f, i_gate, state.s, state.n, s,
+        )
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y, params["out_norm"]["w"])
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = dense(y, params["w_down"], policy=policy)
+    return out, MLSTMState(s1, n1, new_conv)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, true recurrence -> lax.scan over time)
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    h: jax.Array  # (b, d)
+    c: jax.Array  # (b, d)
+    n: jax.Array  # (b, d)
+
+
+def slstm_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": linear_init(ks[0], d, 4 * d, dtype),
+        # block-diagonal recurrent weights, one (dh x 4dh) block per head
+        "r": (jax.random.normal(ks[1], (h, dh, 4 * dh), dtype) / dh**0.5).astype(dtype),
+        "b": jnp.zeros((4 * d,), dtype),
+        "w_down": linear_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_block(params, x, cfg, state: Optional[SLSTMState] = None):
+    """x (b, s, d) -> (y, new_state); sequential scan over time."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    policy = cfg.policy
+    zx = dense(x, params["w_in"], policy=policy) + params["b"]  # (b, s, 4d)
+    if state is None:
+        state = SLSTMState(
+            jnp.zeros((b, d), jnp.float32),
+            jnp.zeros((b, d), jnp.float32),
+            jnp.ones((b, d), jnp.float32),
+        )
+    r = params["r"].astype(jnp.float32)
+
+    def step(st, zt):
+        hh = st.h.reshape(b, h, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r).reshape(b, 4 * d)
+        g = zt.astype(jnp.float32) + rec
+        zi, ii, ff, oo = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(zi)
+        i = jnp.exp(jnp.clip(ii, -10.0, 10.0))
+        f = jax.nn.sigmoid(ff)
+        o = jax.nn.sigmoid(oo)
+        c = f * st.c + i * z
+        n = f * st.n + i
+        hnew = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return SLSTMState(hnew, c, n), hnew
+
+    state, ys = jax.lax.scan(step, state, zx.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).astype(x.dtype)  # (b, s, d)
+    return dense(y, params["w_down"], policy=policy), state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (b, d_rnn)
+    conv: jax.Array  # (b, kconv-1, d_rnn)
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    dr = cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": linear_init(ks[0], d, dr, dtype),
+        "w_y": linear_init(ks[1], d, dr, dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, dr), dtype) * 0.1).astype(dtype),
+        "w_a": linear_init(ks[3], dr, dr, dtype),
+        "w_i": linear_init(ks[4], dr, dr, dtype),
+        # Lambda init so a = sigmoid(lam) in (0.9, 0.999)
+        "lam": (jax.random.uniform(ks[5], (dr,), jnp.float32) * 3.0 + 2.5),
+        "w_out": linear_init(jax.random.fold_in(ks[5], 1), dr, d, dtype),
+    }
+
+
+def _rglru_scan(xg, log_a):
+    """h_t = a_t h_{t-1} + b_t via associative scan over seq axis 1."""
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0)) * xg
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def rglru_block(params, x, cfg, state: Optional[RGLRUState] = None):
+    """Griffin recurrent block: conv branch + GeLU branch, RG-LRU core."""
+    b, s, d = x.shape
+    policy = cfg.policy
+    xb = dense(x, params["w_x"], policy=policy)  # (b, s, dr)
+    yb = dense(x, params["w_y"], policy=policy)
+    yb = jax.nn.gelu(yb.astype(jnp.float32)).astype(x.dtype)
+    cstate = state.conv if state is not None else None
+    xc, new_conv = causal_conv1d(xb, params["conv_w"], cstate)
+    r = jax.nn.sigmoid(
+        dense(xc, params["w_a"], policy=policy).astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        dense(xc, params["w_i"], policy=policy).astype(jnp.float32)
+    )
+    c = 8.0
+    log_a = -c * jax.nn.softplus(params["lam"]) * r  # (b, s, dr)
+    gated = i * xc.astype(jnp.float32)
+    if state is None:
+        h = _rglru_scan(gated, log_a)
+        h_last = h[:, -1]
+    else:
+        # decode: fold the carried hidden state in as step -1
+        a = jnp.exp(log_a)
+        bterm = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0)) * gated
+        def step(hprev, xs):
+            at, bt = xs
+            hnew = at * hprev + bt
+            return hnew, hnew
+        h_last, hs = jax.lax.scan(
+            step, state.h, (a.swapaxes(0, 1), bterm.swapaxes(0, 1))
+        )
+        h = hs.swapaxes(0, 1)
+    out = h.astype(x.dtype) * yb
+    y = dense(out, params["w_out"], policy=policy)
+    return y, RGLRUState(h_last, new_conv)

@@ -1,0 +1,722 @@
+"""Model assembly for all assigned architectures.
+
+Families share one skeleton: embed -> scan(layer stack) -> norm -> lm head.
+Layers are *stacked* (leading L dim) and consumed by ``jax.lax.scan`` so the
+lowered HLO -- and therefore multi-pod compile time -- is depth-independent.
+Heterogeneous stacks (recurrentgemma's (rglru, rglru, attn) pattern, xlstm's
+(m,m,m,s) pattern) scan over *groups* with a static python loop inside the
+body.
+
+Public API:
+  init_params(cfg, key)            -> params pytree
+  forward(params, cfg, batch)      -> (logits, aux)      [train / prefill]
+  loss_fn(params, cfg, batch)      -> (loss, metrics)
+  init_cache(cfg, batch, max_len)  -> decode cache pytree
+  serve_step(params, cfg, cache, tokens, pos) -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .attention import KVCache, attention, attn_init
+from .config import ModelConfig
+from .layers import (
+    apply_norm,
+    dense,
+    embed_init,
+    gelu_mlp,
+    linear_init,
+    norm_init,
+    swiglu,
+)
+from .moe import moe_ffn, moe_init
+from .ssm import (
+    MLSTMState,
+    RGLRUState,
+    SLSTMState,
+    mlstm_block,
+    mlstm_init,
+    rglru_block,
+    rglru_init,
+    slstm_block,
+    slstm_init,
+)
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def _remat(body, cfg):
+    """Per-layer activation checkpointing with a selectable save policy."""
+    if cfg.remat_policy == "dots":
+        # save matmul outputs: backward skips re-running the GEMMs at the
+        # cost of keeping their activations (memory <-> recompute knob)
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots
+        )
+    return jax.checkpoint(body)
+
+
+def _ambient_mesh():
+    """The mesh installed by ``with mesh:`` (None outside any context)."""
+    try:
+        from jax._src import mesh as mesh_lib  # no public accessor yet
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return m if m.devices.size > 1 or m.axis_names else None
+    except Exception:
+        return None
+
+
+def _wsc(x, spec):
+    """with_sharding_constraint that degrades to a no-op when no mesh is in
+    context (single-device smoke tests trace the same code)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except RuntimeError:
+        return x
+
+
+def _cstr(x, cfg, *, seq_axis: int | None = 1):
+    """Activation sharding constraint: (batch, seq, ...) -> (dp, sp, ...)."""
+    if not cfg.act_dp:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * x.ndim
+    spec[0] = tuple(cfg.act_dp)
+    if cfg.seq_shard and seq_axis is not None and x.shape[seq_axis] % 16 == 0:
+        spec[seq_axis] = "model"
+    return _wsc(x, P(*spec))
+
+
+def _cstr_logits(logits, cfg):
+    """Logits: batch over dp, vocab over model (keeps the CE vocab-sharded)."""
+    if not cfg.act_dp:
+        return logits
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(cfg.act_dp)
+    vocab_ax = None if "model" in dp else "model"
+    return _wsc(logits, P(dp, None, vocab_ax))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stacked_init(fn, key, n, *args):
+    return jax.vmap(lambda k: fn(k, *args))(jax.random.split(key, n))
+
+
+def _dense_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn_init(ks[0], cfg, dtype, bias=cfg.attn_bias),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    elif cfg.mlp == "swiglu":
+        p["mlp"] = {
+            "w_gate": linear_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "w_up": linear_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+            "w_down": linear_init(ks[3], cfg.d_ff, cfg.d_model, dtype),
+        }
+    else:  # gelu
+        p["mlp"] = {
+            "w_up": linear_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "b_up": jnp.zeros((cfg.d_ff,), dtype),
+            "w_down": linear_init(ks[2], cfg.d_ff, cfg.d_model, dtype),
+            "b_down": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return p
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "attn": attn_init(ks[0], cfg, dtype, bias=cfg.attn_bias),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": {
+            "w_up": linear_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+            "b_up": jnp.zeros((cfg.d_ff,), dtype),
+            "w_down": linear_init(
+                jax.random.fold_in(ks[1], 1), cfg.d_ff, cfg.d_model, dtype
+            ),
+            "b_down": jnp.zeros((cfg.d_model,), dtype),
+        },
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    p = _enc_layer_init(key, cfg, dtype)
+    p["norm_x"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["xattn"] = attn_init(jax.random.fold_in(key, 7), cfg, dtype, bias=cfg.attn_bias)
+    return p
+
+
+def _glu_mlp_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": linear_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+        "w_up": linear_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        "w_down": linear_init(ks[2], cfg.d_ff, cfg.d_model, dtype),
+    }
+
+
+def _hybrid_block_init(key, cfg, kind, dtype):
+    ks = jax.random.split(key, 2)
+    mixer = (
+        rglru_init(ks[0], cfg, dtype) if kind == "rglru"
+        else attn_init(ks[0], cfg, dtype)
+    )
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mixer": mixer,
+        "norm2": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mlp": _glu_mlp_init(ks[1], cfg, dtype),
+    }
+
+
+def _xlstm_block_init(key, cfg, kind, dtype):
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+        "mixer": mlstm_init(key, cfg, dtype) if kind == "m" else slstm_init(key, cfg, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(ks[1], cfg.d_model, cfg.padded_vocab, dtype)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["layers"] = _stacked_init(
+            lambda k: _dense_layer_init(k, cfg, dtype), ks[2], cfg.n_layers
+        )
+    elif fam == "encdec":
+        params["enc_layers"] = _stacked_init(
+            lambda k: _enc_layer_init(k, cfg, dtype), ks[2], cfg.n_enc_layers
+        )
+        params["enc_final_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        params["dec_layers"] = _stacked_init(
+            lambda k: _dec_layer_init(k, cfg, dtype), ks[3], cfg.n_layers
+        )
+    elif fam == "hybrid":
+        group = {}
+        for i, kind in enumerate(cfg.pattern_group):
+            group[f"b{i}"] = _stacked_init(
+                lambda k, kk=kind: _hybrid_block_init(k, cfg, kk, dtype),
+                jax.random.fold_in(ks[2], i),
+                cfg.n_pattern_groups,
+            )
+        params["groups"] = group
+        if cfg.n_tail_layers:
+            params["tail"] = _stacked_init(
+                lambda k: _hybrid_block_init(k, cfg, "rglru", dtype),
+                ks[3],
+                cfg.n_tail_layers,
+            )
+    elif fam == "ssm":
+        group = {}
+        for i, kind in enumerate(cfg.xlstm_group):
+            group[f"b{i}"] = _stacked_init(
+                lambda k, kk=kind: _xlstm_block_init(k, cfg, kk, dtype),
+                jax.random.fold_in(ks[2], i),
+                cfg.n_xlstm_groups,
+            )
+        params["groups"] = group
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill); returns (logits, aux)
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.emb_scale:
+        x = x * (cfg.d_model**0.5)
+    return x
+
+
+def _lm_logits(params, cfg, x):
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"]
+    logits = dense(x, w.astype(cfg.dtype), policy=cfg.policy).astype(jnp.float32)
+    logits = _cstr_logits(logits, cfg)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def _mlp_apply(p, x, cfg, *, act="silu"):
+    if cfg.family == "moe":
+        return None  # handled by caller
+    if "w_gate" in p:
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"], policy=cfg.policy)
+    return gelu_mlp(x, p["w_up"], p["b_up"], p["w_down"], p["b_down"],
+                    policy=cfg.policy)
+
+
+def _geglu(p, x, cfg):
+    g = dense(x, p["w_gate"], policy=cfg.policy)
+    u = dense(x, p["w_up"], policy=cfg.policy)
+    h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return dense(h, p["w_down"], policy=cfg.policy)
+
+
+def _dense_stack_forward(params, cfg, x, positions, *, collect_kv=False):
+    """Scan over the (homogeneous) dense/moe/vlm layer stack."""
+
+    def body(carry, lp):
+        h, aux = carry
+        h = _cstr(h, cfg)
+        hn1 = apply_norm(h, lp["norm1"], cfg.norm)
+        a, _ = attention(
+            lp["attn"], hn1, cfg,
+            positions=positions, use_kernel=cfg.use_flash_kernel,
+        )
+        if cfg.parallel_block:
+            # command-r style: shared norm, attn and mlp branches summed
+            m = _mlp_apply(lp["mlp"], hn1, cfg)
+            h = h + a + m
+        else:
+            h = h + a
+            hn = apply_norm(h, lp["norm2"], cfg.norm)
+            if cfg.family == "moe":
+                m, l_aux = moe_ffn(lp["moe"], hn, cfg)
+                aux = aux + l_aux
+            else:
+                m = _mlp_apply(lp["mlp"], hn, cfg)
+            h = h + m
+        ys = ()
+        if collect_kv:
+            # re-derive the *cached* K/V (post k-norm, post rope) for prefill
+            from .layers import rms_norm, rope as _rope
+            b, s, _ = h.shape
+            hkv, dh = cfg.n_kv_heads, cfg.head_dim
+            hn1 = apply_norm(carry[0], lp["norm1"], cfg.norm)
+            k = dense(hn1, lp["attn"]["wk"], policy=cfg.policy,
+                      bias=lp["attn"].get("bk")).reshape(b, s, hkv, dh)
+            v = dense(hn1, lp["attn"]["wv"], policy=cfg.policy,
+                      bias=lp["attn"].get("bv")).reshape(b, s, hkv, dh)
+            if "k_norm" in lp["attn"]:
+                k = rms_norm(k, lp["attn"]["k_norm"]["w"])
+            k = _rope(k, positions, theta=cfg.rope_theta)
+            ys = (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+        return (h, aux), ys
+
+    if cfg.remat:
+        body = _remat(body, cfg)
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    return x, aux, ys
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any]):
+    fam = cfg.family
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if fam in ("dense", "moe", "vlm"):
+        x = _embed(params, cfg, tokens)
+        if fam == "vlm":
+            img = batch["img_embeds"].astype(cfg.dtype)  # (b, n_img, d)
+            n_img = cfg.n_img_tokens
+            x = jnp.concatenate([img, x[:, n_img:]], axis=1)
+        positions = jnp.arange(s)
+        mesh = _ambient_mesh()
+        if (cfg.tp_mode == "manual" and fam in ("dense", "vlm")
+                and cfg.act_dp and mesh is not None):
+            # [beyond-paper] explicit shard_map collective schedule
+            from repro.launch.sharding import param_spec_tree
+            from .manual_tp import run_manual_stack
+            lspecs = param_spec_tree(
+                cfg, jax.eval_shape(lambda p: p, params["layers"]), mesh,
+                mode=cfg.shard_mode if cfg.shard_mode != "auto" else "tp",
+            )
+            x = run_manual_stack(params["layers"], cfg, x, positions, mesh,
+                                 lspecs)
+            aux = jnp.float32(0.0)
+        else:
+            x, aux, _ = _dense_stack_forward(params, cfg, x, positions)
+        return _lm_logits(params, cfg, x), aux
+
+    if fam == "encdec":
+        enc = batch["audio_embeds"].astype(cfg.dtype)  # (b, enc_seq, d)
+        enc_pos = jnp.arange(enc.shape[1])
+
+        def enc_body(h, lp):
+            h = _cstr(h, cfg)
+            a, _ = attention(
+                lp["attn"], apply_norm(h, lp["norm1"], cfg.norm), cfg,
+                positions=enc_pos, causal=False,
+                use_kernel=cfg.use_flash_kernel,
+            )
+            h = h + a
+            h = h + _mlp_apply(lp["mlp"], apply_norm(h, lp["norm2"], cfg.norm), cfg)
+            return h, ()
+
+        if cfg.remat:
+            enc_body = _remat(enc_body, cfg)
+        enc, _ = jax.lax.scan(enc_body, enc, params["enc_layers"])
+        enc = apply_norm(enc, params["enc_final_norm"], cfg.norm)
+
+        x = _embed(params, cfg, tokens)
+        positions = jnp.arange(s)
+
+        def dec_body(h, lp):
+            h = _cstr(h, cfg)
+            a, _ = attention(
+                lp["attn"], apply_norm(h, lp["norm1"], cfg.norm), cfg,
+                positions=positions, use_kernel=cfg.use_flash_kernel,
+            )
+            h = h + a
+            hx = apply_norm(h, lp["norm_x"], cfg.norm)
+            k = dense(enc, lp["xattn"]["wk"], policy=cfg.policy,
+                      bias=lp["xattn"].get("bk"))
+            v = dense(enc, lp["xattn"]["wv"], policy=cfg.policy,
+                      bias=lp["xattn"].get("bv"))
+            hd = cfg.head_dim
+            k = k.reshape(b, -1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+            v = v.reshape(b, -1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+            a, _ = attention(
+                lp["xattn"], hx, cfg, positions=positions, causal=False,
+                use_rope=False, kv_override=(k, v),
+            )
+            h = h + a
+            h = h + _mlp_apply(lp["mlp"], apply_norm(h, lp["norm2"], cfg.norm), cfg)
+            return h, ()
+
+        if cfg.remat:
+            dec_body = _remat(dec_body, cfg)
+        x, _ = jax.lax.scan(dec_body, x, params["dec_layers"])
+        return _lm_logits(params, cfg, x), jnp.float32(0.0)
+
+    if fam == "hybrid":
+        x = _embed(params, cfg, tokens)
+        positions = jnp.arange(s)
+
+        def hyb_block(h, bp, kind):
+            hn = apply_norm(h, bp["norm1"], cfg.norm)
+            if kind == "rglru":
+                m, _ = rglru_block(bp["mixer"], hn, cfg)
+            else:
+                m, _ = attention(
+                    bp["mixer"], hn, cfg, positions=positions,
+                    window=cfg.local_window, use_kernel=cfg.use_flash_kernel,
+                )
+            h = h + m
+            h = h + _geglu(bp["mlp"], apply_norm(h, bp["norm2"], cfg.norm), cfg)
+            return h
+
+        def grp_body(h, gp):
+            h = _cstr(h, cfg)
+            for i, kind in enumerate(cfg.pattern_group):
+                h = hyb_block(h, gp[f"b{i}"], kind)
+            return h, ()
+
+        if cfg.remat:
+            grp_body = _remat(grp_body, cfg)
+        x, _ = jax.lax.scan(grp_body, x, params["groups"])
+        if cfg.n_tail_layers:
+            def tail_body(h, bp):
+                return hyb_block(h, bp, "rglru"), ()
+            x, _ = jax.lax.scan(tail_body, x, params["tail"])
+        return _lm_logits(params, cfg, x), jnp.float32(0.0)
+
+    if fam == "ssm":
+        x = _embed(params, cfg, tokens)
+
+        def grp_body(h, gp):
+            h = _cstr(h, cfg)
+            for i, kind in enumerate(cfg.xlstm_group):
+                bp = gp[f"b{i}"]
+                hn = apply_norm(h, bp["norm1"], cfg.norm)
+                if kind == "m":
+                    m, _ = mlstm_block(bp["mixer"], hn, cfg)
+                else:
+                    m, _ = slstm_block(bp["mixer"], hn, cfg)
+                h = h + m
+            return h, ()
+
+        if cfg.remat:
+            grp_body = _remat(grp_body, cfg)
+        x, _ = jax.lax.scan(grp_body, x, params["groups"])
+        return _lm_logits(params, cfg, x), jnp.float32(0.0)
+
+    raise ValueError(fam)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    logits, aux = forward(params, cfg, batch)
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(nll)
+    if cfg.family == "vlm":  # image positions carry no next-token target
+        mask = mask.at[:, : cfg.n_img_tokens].set(0.0)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + MOE_AUX_WEIGHT * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode: cache init + serve_step
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    fam = cfg.family
+
+    def kv(n_layers, length):
+        return KVCache(
+            jnp.zeros((n_layers, batch, hkv, length, dh), dtype),
+            jnp.zeros((n_layers, batch, hkv, length, dh), dtype),
+        )
+
+    if fam in ("dense", "moe", "vlm"):
+        return {"kv": kv(cfg.n_layers, max_len)}
+    if fam == "encdec":
+        return {
+            "kv": kv(cfg.n_layers, max_len),
+            "cross_kv": kv(cfg.n_layers, cfg.enc_seq),  # filled by encode()
+        }
+    if fam == "hybrid":
+        g, di = cfg.n_pattern_groups, cfg.rnn_width
+        w = min(cfg.local_window, max_len)
+        groups = {}
+        for i, kind in enumerate(cfg.pattern_group):
+            if kind == "rglru":
+                groups[f"b{i}"] = RGLRUState(
+                    jnp.zeros((g, batch, di), jnp.float32),
+                    jnp.zeros((g, batch, 3, di), dtype),
+                )
+            else:
+                groups[f"b{i}"] = KVCache(
+                    jnp.zeros((g, batch, hkv, w, dh), dtype),
+                    jnp.zeros((g, batch, hkv, w, dh), dtype),
+                )
+        tail = RGLRUState(
+            jnp.zeros((cfg.n_tail_layers, batch, di), jnp.float32),
+            jnp.zeros((cfg.n_tail_layers, batch, 3, di), dtype),
+        )
+        return {"groups": groups, "tail": tail}
+    if fam == "ssm":
+        g = cfg.n_xlstm_groups
+        di = cfg.d_model * 2
+        h = cfg.n_heads
+        dh_i = di // h
+        groups = {}
+        for i, kind in enumerate(cfg.xlstm_group):
+            if kind == "m":
+                groups[f"b{i}"] = MLSTMState(
+                    jnp.zeros((g, batch, h, dh_i, dh_i), jnp.float32),
+                    jnp.zeros((g, batch, h, dh_i), jnp.float32),
+                    jnp.zeros((g, batch, 3, di), dtype),
+                )
+            else:
+                groups[f"b{i}"] = SLSTMState(
+                    jnp.zeros((g, batch, cfg.d_model), jnp.float32),
+                    jnp.zeros((g, batch, cfg.d_model), jnp.float32),
+                    jnp.ones((g, batch, cfg.d_model), jnp.float32),
+                )
+        return {"groups": groups}
+    raise ValueError(fam)
+
+
+def encode(params, cfg: ModelConfig, audio_embeds, cache):
+    """Run the encoder and fill the decoder's cross-attention KV cache."""
+    enc = audio_embeds.astype(cfg.dtype)
+    b = enc.shape[0]
+    enc_pos = jnp.arange(enc.shape[1])
+
+    def enc_body(h, lp):
+        a, _ = attention(
+            lp["attn"], apply_norm(h, lp["norm1"], cfg.norm), cfg,
+            positions=enc_pos, causal=False,
+            use_kernel=cfg.use_flash_kernel,
+        )
+        h = h + a
+        h = h + _mlp_apply(lp["mlp"], apply_norm(h, lp["norm2"], cfg.norm), cfg)
+        return h, ()
+
+    enc, _ = jax.lax.scan(enc_body, enc, params["enc_layers"])
+    enc = apply_norm(enc, params["enc_final_norm"], cfg.norm)
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+
+    def cross_body(carry, lp):
+        k = dense(enc, lp["xattn"]["wk"], policy=cfg.policy,
+                  bias=lp["xattn"].get("bk"))
+        v = dense(enc, lp["xattn"]["wv"], policy=cfg.policy,
+                  bias=lp["xattn"].get("bv"))
+        k = k.reshape(b, -1, hkv, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, -1, hkv, dh).transpose(0, 2, 1, 3)
+        return carry, (k.astype(cfg.dtype), v.astype(cfg.dtype))
+
+    _, (ks, vs) = jax.lax.scan(cross_body, (), params["dec_layers"])
+    return {**cache, "cross_kv": KVCache(ks, vs)}
+
+
+def _ring_local_attention(lp, x, cfg, cache: KVCache, pos, window):
+    """Decode-step local attention over a ring buffer of size ``window``."""
+    b, s, d = x.shape  # s == 1
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    from .layers import rope  # local import to avoid cycle noise
+
+    q = dense(x, lp["wq"], policy=cfg.policy).reshape(b, s, hq, dh)
+    k = dense(x, lp["wk"], policy=cfg.policy).reshape(b, s, hkv, dh)
+    v = dense(x, lp["wv"], policy=cfg.policy).reshape(b, s, hkv, dh)
+    positions = pos + jnp.arange(s)
+    q = rope(q, positions, theta=cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = rope(k, positions, theta=cfg.rope_theta).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    slot = jnp.mod(pos, window)
+    zero = jnp.zeros((), slot.dtype)  # index dtypes must match (x64-safe)
+    ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (zero, zero, slot, zero))
+    cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (zero, zero, slot, zero))
+    # absolute position held by each ring slot
+    idx = jnp.arange(window)
+    k_pos = pos - jnp.mod(pos - idx, window)
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, dh)
+    sc = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                    ck.astype(jnp.float32)) / (dh**0.5)
+    sc = jnp.where(valid[None, None, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, cv.astype(jnp.float32))
+    o = o.reshape(b, hq, s, dh).transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    y = dense(o.astype(x.dtype), lp["wo"], policy=cfg.policy)
+    return y, KVCache(ck, cv)
+
+
+def serve_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One decode step: tokens (b, 1), pos scalar -> (logits (b, V), cache)."""
+    fam = cfg.family
+    b, s = tokens.shape
+    x = _embed(params, cfg, tokens)
+    positions = pos + jnp.arange(s)
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            lp, (ck, cv) = xs
+            hn1 = apply_norm(h, lp["norm1"], cfg.norm)
+            a, new_kv = attention(
+                lp["attn"], hn1, cfg,
+                positions=positions, cache=KVCache(ck, cv),
+            )
+            if cfg.parallel_block:
+                m = _mlp_apply(lp["mlp"], hn1, cfg)
+                return h + a + m, (new_kv.k, new_kv.v)
+            h = h + a
+            hn = apply_norm(h, lp["norm2"], cfg.norm)
+            if cfg.family == "moe":
+                m, _ = moe_ffn(lp["moe"], hn, cfg)
+            else:
+                m = _mlp_apply(lp["mlp"], hn, cfg)
+            return h + m, (new_kv.k, new_kv.v)
+
+        kv = cache["kv"]
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], (kv.k, kv.v)))
+        return _lm_logits(params, cfg, x), {"kv": KVCache(nk, nv)}
+
+    if fam == "encdec":
+        def body(h, xs):
+            lp, (ck, cv), (xk, xv) = xs
+            a, new_kv = attention(
+                lp["attn"], apply_norm(h, lp["norm1"], cfg.norm), cfg,
+                positions=positions, cache=KVCache(ck, cv),
+            )
+            h = h + a
+            a, _ = attention(
+                lp["xattn"], apply_norm(h, lp["norm_x"], cfg.norm), cfg,
+                positions=positions, causal=False, use_rope=False,
+                kv_override=(xk, xv),
+            )
+            h = h + a
+            h = h + _mlp_apply(lp["mlp"], apply_norm(h, lp["norm2"], cfg.norm), cfg)
+            return h, (new_kv.k, new_kv.v)
+
+        kv, xkv = cache["kv"], cache["cross_kv"]
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["dec_layers"], (kv.k, kv.v), (xkv.k, xkv.v))
+        )
+        return _lm_logits(params, cfg, x), {"kv": KVCache(nk, nv),
+                                            "cross_kv": xkv}
+
+    if fam == "hybrid":
+        def grp_body(h, xs):
+            gp, states = xs
+            new_states = {}
+            for i, kind in enumerate(cfg.pattern_group):
+                bp = gp[f"b{i}"]
+                hn = apply_norm(h, bp["norm1"], cfg.norm)
+                if kind == "rglru":
+                    m, st = rglru_block(bp["mixer"], hn, cfg,
+                                        state=states[f"b{i}"])
+                else:
+                    m, st = _ring_local_attention(
+                        bp["mixer"], hn, cfg, states[f"b{i}"], pos,
+                        min(cfg.local_window, states[f"b{i}"].k.shape[2]),
+                    )
+                h = h + m
+                h = h + _geglu(bp["mlp"], apply_norm(h, bp["norm2"], cfg.norm), cfg)
+                new_states[f"b{i}"] = st
+            return h, new_states
+
+        x, new_groups = jax.lax.scan(
+            grp_body, x, (params["groups"], cache["groups"])
+        )
+        def tail_body(h, xs):
+            bp, st = xs
+            hn = apply_norm(h, bp["norm1"], cfg.norm)
+            m, st2 = rglru_block(bp["mixer"], hn, cfg, state=st)
+            h = h + m
+            h = h + _geglu(bp["mlp"], apply_norm(h, bp["norm2"], cfg.norm), cfg)
+            return h, st2
+        new_tail = cache["tail"]
+        if cfg.n_tail_layers:
+            x, new_tail = jax.lax.scan(tail_body, x, (params["tail"], cache["tail"]))
+        return _lm_logits(params, cfg, x), {"groups": new_groups, "tail": new_tail}
+
+    if fam == "ssm":
+        def grp_body(h, xs):
+            gp, states = xs
+            new_states = {}
+            for i, kind in enumerate(cfg.xlstm_group):
+                bp = gp[f"b{i}"]
+                hn = apply_norm(h, bp["norm1"], cfg.norm)
+                if kind == "m":
+                    m, st = mlstm_block(bp["mixer"], hn, cfg,
+                                        state=states[f"b{i}"])
+                else:
+                    # scan strips the leading group dim: states are (b, d)
+                    m, st = slstm_block(bp["mixer"], hn, cfg,
+                                        state=states[f"b{i}"])
+                h = h + m
+                new_states[f"b{i}"] = st
+            return h, new_states
+
+        x, new_groups = jax.lax.scan(grp_body, x, (params["groups"], cache["groups"]))
+        return _lm_logits(params, cfg, x), {"groups": new_groups}
+
+    raise ValueError(fam)

@@ -1,0 +1,61 @@
+"""Offline weight quantization for KOM serving (W14 static, A14 dynamic).
+
+Serving doesn't want to re-quantize weights every step: quantize once at
+load time, keep int16 values + per-output-channel scales, and run the
+3-pass KOM GEMM against dynamically quantized activations.  Halves weight
+HBM traffic vs f32 checkpoints (int16 storage) on top of the pass savings.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.karatsuba import kom_dot_general, MATMUL_DNUMS
+from repro.core.quantization import QTensor, quantize_symmetric
+
+#: 2-D matmul weights that are worth pre-quantizing (matches sharding names)
+QUANT_LEAVES = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_in",
+                "w_x", "w_y", "w_a", "w_i", "w_out", "lm_head"}
+
+
+class QWeights(NamedTuple):
+    values: Any   # pytree: int16 where quantized, original leaf otherwise
+    scales: Any   # pytree: f32 per-out-channel scale or None
+    base_bits: int
+
+
+def quantize_param_tree(params, *, base_bits: int = 7) -> QWeights:
+    """Quantize matmul weights (last-dim per-channel); leave the rest."""
+    def q(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in QUANT_LEAVES and leaf.ndim >= 2:
+            qt = quantize_symmetric(leaf.astype(jnp.float32),
+                                    base_bits=base_bits, axis=leaf.ndim - 1)
+            return qt.values.astype(jnp.int16)
+        return leaf
+
+    def s(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in QUANT_LEAVES and leaf.ndim >= 2:
+            qt = quantize_symmetric(leaf.astype(jnp.float32),
+                                    base_bits=base_bits, axis=leaf.ndim - 1)
+            return qt.scale
+        return None
+
+    values = jax.tree_util.tree_map_with_path(q, params)
+    scales = jax.tree_util.tree_map_with_path(s, params)
+    return QWeights(values, scales, base_bits)
+
+
+def kom_linear_prequant(x, w_q, w_scale, *, base_bits: int = 7,
+                        variant: str = "karatsuba"):
+    """(..., k) @ prequantized (k, n): dynamic A-quant, static W-quant."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    qx = quantize_symmetric(x2, base_bits=base_bits)
+    raw = kom_dot_general(qx.values, w_q.astype(jnp.int32), MATMUL_DNUMS,
+                          base_bits=base_bits, variant=variant)
+    out = raw * (qx.scale * jnp.squeeze(w_scale))
+    return out.reshape(lead + (w_q.shape[-1],))

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests and benches see exactly ONE device; only launch/dryrun.py sets the
+# 512-device flag (and only in its own process).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "do not set device-count XLA_FLAGS globally; dryrun.py owns that"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

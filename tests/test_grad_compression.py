@@ -1,0 +1,67 @@
+"""int8 error-feedback gradient compression: accuracy + convergence."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_compressed_psum_accuracy_and_error_feedback():
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim.grad_compression import (
+            EFState, compressed_psum_tree, ef_init)
+
+        mesh = make_host_mesh(8, 1)
+        ndev = 8
+        rng = np.random.default_rng(0)
+        gs = jnp.array(rng.standard_normal((ndev, 64)), jnp.float32)
+        exact_mean = np.asarray(gs).mean(axis=0)
+
+        def body(g_local, res):
+            g_local = g_local[0]  # (64,)
+            mean, st = compressed_psum_tree(
+                {"w": g_local}, EFState({"w": res[0]}), axis="data")
+            return mean["w"][None], st.residual["w"][None]
+
+        fn = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P("data", None), P("data", None)),
+            out_specs=(P("data", None), P("data", None)),
+            check_vma=False)
+        with mesh:
+            res0 = jnp.zeros((ndev, 64), jnp.float32)
+            mean, res1 = fn(gs, res0)
+        mean = np.asarray(mean)[0]
+        err = np.abs(mean - exact_mean).max() / np.abs(exact_mean).max()
+        print('ONE_STEP_ERR', err)
+
+        # error feedback: averaging the synced grads over many steps on the
+        # SAME true gradient must converge to the exact mean (residual
+        # carries what quantization dropped)
+        acc = np.zeros(64)
+        res = jnp.zeros((ndev, 64), jnp.float32)
+        T = 30
+        with mesh:
+            for _ in range(T):
+                m, res = fn(gs, res)
+                acc += np.asarray(m)[0]
+        err_t = np.abs(acc / T - exact_mean).max() / np.abs(exact_mean).max()
+        print('EF_AVG_ERR', err_t)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    one = float(r.stdout.split("ONE_STEP_ERR")[1].split()[0])
+    ef = float(r.stdout.split("EF_AVG_ERR")[1].split()[0])
+    assert one < 0.05, one          # single-shot int8 noise is bounded
+    assert ef < one / 3, (ef, one)  # error feedback recovers precision

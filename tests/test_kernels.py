@@ -1,0 +1,119 @@
+"""Per-kernel allclose sweeps (interpret=True) against the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.kom_matmul import bf16x3_matmul, kom_matmul, kom_matmul_int
+from repro.kernels.kom_matmul.ref import kom_matmul_int_raw_ref, kom_matmul_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.conv2d import conv2d_ref, conv2d_systolic
+
+rng = np.random.default_rng(0)
+
+
+# -- kom_matmul ---------------------------------------------------------------
+
+@pytest.mark.parametrize("variant,bb", [("karatsuba", 7), ("schoolbook", 8)])
+@pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 384, 128),
+                                 (100, 200, 60), (1, 300, 7)])
+def test_kom_matmul_int_vs_oracle(variant, bb, mkn):
+    m, k, n = mkn
+    qm = 8127 if bb == 7 else 32639
+    a = rng.integers(-qm, qm + 1, (m, k)).astype(np.int32)
+    b = rng.integers(-qm, qm + 1, (k, n)).astype(np.int32)
+    got = np.asarray(kom_matmul_int(jnp.array(a), jnp.array(b),
+                                    base_bits=bb, variant=variant))
+    ref = np.asarray(kom_matmul_int_raw_ref(jnp.array(a), jnp.array(b),
+                                            base_bits=bb))
+    truth = (a.astype(np.int64) @ b.astype(np.int64)).astype(np.float64)
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+    np.testing.assert_allclose(got, truth, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kom_matmul_float(dtype):
+    a = jnp.array(rng.standard_normal((130, 70)), dtype)
+    b = jnp.array(rng.standard_normal((70, 50)), dtype)
+    got = np.asarray(kom_matmul(a, b))
+    ref = np.asarray(kom_matmul_ref(a, b))
+    np.testing.assert_allclose(got, ref, rtol=5e-3, atol=5e-3)
+
+
+def test_bf16x3_kernel_accuracy():
+    a = rng.standard_normal((200, 300)).astype(np.float32)
+    b = rng.standard_normal((300, 100)).astype(np.float32)
+    got = np.asarray(bf16x3_matmul(jnp.array(a), jnp.array(b)))
+    ref = a @ b
+    assert np.abs(got - ref).max() / np.abs(ref).max() < 1e-4
+
+
+# -- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+    (2, 4, 4, 64, 64, 32),
+    (1, 8, 2, 64, 64, 32),     # GQA
+    (1, 4, 1, 96, 96, 16),     # MQA, non-block-multiple
+    (1, 4, 4, 1, 128, 32),     # decode shape
+])
+def test_flash_attention_causal(b, hq, hkv, sq, skv, d):
+    q = jnp.array(rng.standard_normal((b, hq, sq, d)), jnp.float32)
+    k = jnp.array(rng.standard_normal((b, hkv, skv, d)), jnp.float32)
+    v = jnp.array(rng.standard_normal((b, hkv, skv, d)), jnp.float32)
+    off = skv - sq
+    got = flash_attention(q, k, v, causal=True, q_offset=off,
+                          block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 16, 64])
+def test_flash_attention_local_window(window):
+    q = jnp.array(rng.standard_normal((1, 2, 64, 16)), jnp.float32)
+    k = jnp.array(rng.standard_normal((1, 2, 64, 16)), jnp.float32)
+    v = jnp.array(rng.standard_normal((1, 2, 64, 16)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=16, block_k=16)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jnp.array(rng.standard_normal((1, 2, 32, 16)), dtype)
+    k = jnp.array(rng.standard_normal((1, 2, 32, 16)), dtype)
+    v = jnp.array(rng.standard_normal((1, 2, 32, 16)), dtype)
+    got = flash_attention(q, k, v, block_q=16, block_k=16)
+    ref = attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+# -- conv2d -------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,cin,cout,kh,s,pad", [
+    (16, 3, 8, 3, 1, "SAME"),
+    (32, 16, 32, 5, 1, "SAME"),
+    (23, 4, 8, 7, 2, "VALID"),
+    (35, 3, 16, 11, 4, "VALID"),   # the paper's 11x11 AlexNet kernel
+    (16, 8, 8, 3, 2, "SAME"),
+])
+def test_conv2d_systolic_vs_xla(h, cin, cout, kh, s, pad):
+    x = jnp.array(rng.standard_normal((2, h, h, cin)), jnp.float32)
+    w = jnp.array(rng.standard_normal((kh, kh, cin, cout)) * 0.1, jnp.float32)
+    got = conv2d_systolic(x, w, stride=s, padding=pad)
+    ref = conv2d_ref(x, w, stride=s, padding=pad)
+    assert got.shape == ref.shape
+    rel = float(jnp.abs(got - ref).max() / jnp.abs(ref).max())
+    assert rel < 1e-4
+
+
+def test_conv2d_kom_variant():
+    x = jnp.array(rng.standard_normal((1, 16, 16, 8)), jnp.float32)
+    w = jnp.array(rng.standard_normal((3, 3, 8, 16)) * 0.1, jnp.float32)
+    got = conv2d_systolic(x, w, variant="kom")
+    ref = conv2d_ref(x, w)
+    rel = float(jnp.abs(got - ref).max() / jnp.abs(ref).max())
+    assert rel < 5e-3  # 14-bit quantization noise floor

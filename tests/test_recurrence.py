@@ -1,0 +1,107 @@
+"""Recurrent-mixer invariants: chunked == sequential, decode == forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.ssm import (
+    MLSTMState, _mlstm_chunk_scan, mlstm_block, mlstm_init,
+    rglru_block, rglru_init, slstm_block, slstm_init,
+)
+
+rng = np.random.default_rng(0)
+
+
+def test_mlstm_chunk_invariance():
+    """Chunkwise mLSTM must not depend on the chunk size (algebraic identity)."""
+    b, h, s, d = 2, 2, 32, 8
+    q = jnp.array(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.array(rng.standard_normal((b, h, s, d)), jnp.float32) * 0.3
+    v = jnp.array(rng.standard_normal((b, h, s, d)), jnp.float32)
+    lf = jnp.array(np.log(rng.uniform(0.7, 0.99, (b, h, s))), jnp.float32)
+    ig = jnp.array(rng.uniform(0.1, 0.9, (b, h, s)), jnp.float32)
+    s0 = jnp.zeros((b, h, d, d)); n0 = jnp.zeros((b, h, d))
+    outs = []
+    for chunk in (1, 4, 8, 32):
+        y, st, nt = _mlstm_chunk_scan(q, k, v, lf, ig, s0, n0, chunk)
+        outs.append((np.asarray(y), np.asarray(st), np.asarray(nt)))
+    for y, st, nt in outs[1:]:
+        np.testing.assert_allclose(y, outs[0][0], rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(st, outs[0][1], rtol=2e-4, atol=2e-5)
+
+
+def _xcfg():
+    return reduced(get_config("xlstm-125m"))
+
+
+def test_mlstm_decode_matches_forward():
+    """Prefill-then-decode == one-shot forward at every suffix position."""
+    cfg = _xcfg()
+    p = mlstm_init(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 12
+    x = jnp.array(rng.standard_normal((b, s, cfg.d_model)) * 0.3, jnp.float32)
+    y_full, _ = mlstm_block(p, x, cfg, chunk=4)
+    # stream token by token through the decode path
+    di = cfg.d_model * 2
+    h = cfg.n_heads
+    dh = di // h
+    st = MLSTMState(jnp.zeros((b, h, dh, dh)), jnp.zeros((b, h, dh)),
+                    jnp.zeros((b, 3, di), x.dtype))
+    ys = []
+    for t in range(s):
+        yt, st = mlstm_block(p, x[:, t:t+1], cfg, state=st)
+        ys.append(np.asarray(yt))
+    y_inc = np.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_inc, np.asarray(y_full), rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_decode_matches_forward():
+    cfg = _xcfg()
+    p = slstm_init(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 10
+    x = jnp.array(rng.standard_normal((b, s, cfg.d_model)) * 0.3, jnp.float32)
+    y_full, _ = slstm_block(p, x, cfg)
+    st = None
+    ys = []
+    from repro.models.ssm import SLSTMState
+    st = SLSTMState(jnp.zeros((b, cfg.d_model)), jnp.zeros((b, cfg.d_model)),
+                    jnp.ones((b, cfg.d_model)))
+    for t in range(s):
+        yt, st = slstm_block(p, x[:, t:t+1], cfg, state=st)
+        ys.append(np.asarray(yt))
+    np.testing.assert_allclose(np.concatenate(ys, 1), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_decode_matches_forward():
+    cfg = reduced(get_config("recurrentgemma-9b"))
+    p = rglru_init(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 9
+    x = jnp.array(rng.standard_normal((b, s, cfg.d_model)) * 0.3, jnp.float32)
+    y_full, _ = rglru_block(p, x, cfg)
+    from repro.models.ssm import RGLRUState
+    st = RGLRUState(jnp.zeros((b, cfg.rnn_width)),
+                    jnp.zeros((b, 3, cfg.rnn_width), x.dtype))
+    ys = []
+    for t in range(s):
+        yt, st = rglru_block(p, x[:, t:t+1], cfg, state=st)
+        ys.append(np.asarray(yt))
+    np.testing.assert_allclose(np.concatenate(ys, 1), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rglru_associative_scan_matches_sequential():
+    from repro.models.ssm import _rglru_scan
+    b, s, d = 2, 16, 4
+    xg = jnp.array(rng.standard_normal((b, s, d)), jnp.float32)
+    log_a = jnp.array(np.log(rng.uniform(0.5, 0.99, (b, s, d))), jnp.float32)
+    h_par = np.asarray(_rglru_scan(xg, log_a))
+    a = np.exp(np.asarray(log_a))
+    bt = np.sqrt(1 - a * a) * np.asarray(xg)
+    h = np.zeros((b, d))
+    h_seq = []
+    for t in range(s):
+        h = a[:, t] * h + bt[:, t]
+        h_seq.append(h.copy())
+    np.testing.assert_allclose(h_par, np.stack(h_seq, 1), rtol=1e-5, atol=1e-6)
