@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import MatmulPolicy
-from repro.core.systolic import conv2d_im2col
+from repro.core.substrate import conv2d, quantize_weight
 from repro.models.cnn import ALEXNET, VGG16, VGG19
 
 from .common import PEAK_BF16, POLICY_MODEL, time_call
@@ -56,14 +56,17 @@ def run(emit):
                  f"conv_gflops={total_flops/1e9:.2f} v5e_ms={v5e_ms:.3f}")
         emit(f"convnets/{cfg.name}/kernels", 0.0,
              " ".join(f"{k}x{k}:{c}" for k, c in sorted(kernel_counts.items())))
-        # executed spot-check: first conv layer, reduced batch
+        # executed spot-check: first conv layer, reduced batch, through the
+        # substrate entry point with the weight quantized ONCE up front
+        # (per-output-channel scales) -- the serving configuration.
         (k, cin, cout, stride, h, _) = next(_conv_layers(cfg))
         x = jnp.array(rng.standard_normal((1, h, h, cin)), jnp.float32)
         w = jnp.array(rng.standard_normal((k, k, cin, cout)) * 0.1, jnp.float32)
-        fn = jax.jit(lambda a, b: conv2d_im2col(
+        qw = quantize_weight(w)
+        fn = jax.jit(lambda a, b: conv2d(
             a, b, stride=stride,
             padding="VALID" if cfg.name == "alexnet" else "SAME",
-            policy=MatmulPolicy.KOM_INT14))
-        us = time_call(fn, x, w, iters=5, warmup=1)
+            policy=MatmulPolicy.KOM_INT14, path="im2col"))
+        us = time_call(fn, x, qw, iters=5, warmup=1)
         emit(f"convnets/{cfg.name}/first_layer_kom_wall", us,
              f"k={k} cin={cin} cout={cout}")

@@ -12,14 +12,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import MatmulPolicy
-from repro.models.cnn import ALEXNET, cnn_forward, cnn_init
+from repro.models.cnn import ALEXNET, cnn_forward, cnn_init, cnn_quantize_params
 
 cfg = dataclasses.replace(ALEXNET, img_size=67)  # CPU-sized spatial dims
 params = cnn_init(cfg, jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (2, 67, 67, 3))
 
 logits_fp = cnn_forward(params, dataclasses.replace(cfg, policy=MatmulPolicy.FP32), x)
-logits_kom = cnn_forward(params, dataclasses.replace(cfg, policy=MatmulPolicy.KOM_INT14), x)
+# Weights quantized ONCE (per-output-channel scales); the forward pass only
+# quantizes activations -- the serving configuration.
+kom_cfg = dataclasses.replace(cfg, policy=MatmulPolicy.KOM_INT14)
+qparams = cnn_quantize_params(params, kom_cfg)
+logits_kom = cnn_forward(qparams, kom_cfg, x)
 
 fp = np.asarray(logits_fp)
 kom = np.asarray(logits_kom)

@@ -6,7 +6,6 @@ family* (few layers, narrow width, few experts, tiny vocab).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Dict
 
 from repro.models.config import ModelConfig

@@ -1,17 +1,34 @@
 """Core: the paper's contribution as composable JAX modules."""
-from .karatsuba import (
+from .substrate import (
     MATMUL_DNUMS,
     PASS_COUNTS,
+    QTensor,
+    QWeight,
     balanced_split,
+    conv2d,
+    conv_pads,
+    dequantize,
+    dequantize_weight,
+    kom_qmax,
+    limb_dot_general,
+    limb_partials,
+    limb_recombine,
+    pass_count,
+    policy_int_spec,
+    prequant_dot_general,
+    quantize_symmetric,
+    quantize_weight,
+    recursion_pass_count,
+    select_conv_path,
+    split_limbs,
+)
+from .karatsuba import (
     bf16x3_matmul,
     bf16xn_dot_general,
     float_split,
     kom_dot_general,
     kom_matmul,
-    kom_qmax,
-    pass_count,
-    recursion_pass_count,
 )
 from .precision import MXU_PASSES, MatmulPolicy, policy_dot_general, policy_linear, policy_matmul
-from .quantization import QTensor, dequantize, kom_linear, quantize_symmetric, quantized_dot_general
+from .quantization import kom_linear, quantized_dot_general
 from .systolic import SystolicEngine, conv2d_im2col, fir_systolic, pool2d

@@ -14,50 +14,31 @@ balanced digits must sit in [-2^(b-1), 2^(b-1)-1] so their sum fits s8,
 giving base_bits=7 and operands up to 14 bits (|x| <= kom_qmax(7) = 8127).
 Schoolbook needs no guard bit -> base_bits=8, 16-bit operands (|x| <= 32639).
 
-Float path (TPU-idiomatic cousin): fp32-accurate matmul from 3 bf16 passes
-(truncation, not the algebraic identity -- see DESIGN.md section 2.2).
+The limb decomposition itself -- splitting, pass scheduling, recombination --
+lives in :mod:`repro.core.substrate` (the single implementation every
+consumer shares); this module keeps the algebraic wrappers and the float
+path: fp32-accurate matmul from 3 bf16 passes (truncation, not the algebraic
+identity -- see DESIGN.md section 2.2).
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-Variant = Literal["karatsuba", "schoolbook"]
-
-#: MXU passes per wide multiply, the TPU analogue of the paper's LUT counts.
-PASS_COUNTS = {"karatsuba": 3, "schoolbook": 4}
-
-# Standard 2D matmul dimension numbers: (m,k) x (k,n) -> (m,n).
-MATMUL_DNUMS = (((1,), (0,)), ((), ()))
-
-
-def kom_qmax(base_bits: int = 7) -> int:
-    """Largest |x| whose balanced (hi, lo) digits both fit [-2^(b-1), 2^(b-1)-1].
-
-    kom_qmax(7) = 63*129 = 8127 ('int14', Karatsuba-safe: digit sums fit s8);
-    kom_qmax(8) = 127*257 = 32639 ('int16', schoolbook only).
-    """
-    half = 1 << (base_bits - 1)
-    return (half - 1) * ((1 << base_bits) + 1)
-
-
-def balanced_split(x: jax.Array, base_bits: int) -> tuple[jax.Array, jax.Array]:
-    """Split int values into balanced base-2^b digits: x == hi*2^b + lo.
-
-    Both digits lie in [-2^(b-1), 2^(b-1)-1] provided |x| <= kom_qmax(b);
-    balanced (signed) digits are what keep the Karatsuba digit sums inside
-    the s8 range with a single guard bit.
-    """
-    beta = 1 << base_bits
-    half = beta >> 1
-    x = x.astype(jnp.int32)
-    lo = ((x + half) & (beta - 1)) - half
-    hi = (x - lo) >> base_bits
-    return hi, lo
+# Re-exported for back-compat: the substrate owns the one implementation.
+from .substrate import (  # noqa: F401
+    MATMUL_DNUMS,
+    PASS_COUNTS,
+    Variant,
+    balanced_split,
+    kom_qmax,
+    limb_dot_general,
+    pass_count,
+    recursion_pass_count,
+)
 
 
 def kom_dot_general(
@@ -79,31 +60,11 @@ def kom_dot_general(
     float32 for fused dequantization -- terms stay below 2^30 so the fp32
     path is accurate to ~2^-24 relative, far below quantization error).
     """
-    if variant == "karatsuba" and base_bits > 7 and narrow_dtype == jnp.int8:
-        raise ValueError(
-            "karatsuba digit sums need a guard bit: base_bits <= 7 for int8 passes"
-        )
-    beta = 1 << base_bits
-    ah, al = balanced_split(a, base_bits)
-    bh, bl = balanced_split(b, base_bits)
-    dot = functools.partial(
-        lax.dot_general,
-        dimension_numbers=dimension_numbers,
-        preferred_element_type=accum_dtype,
-    )
-    nd = lambda x: x.astype(narrow_dtype)
-    s_hh = dot(nd(ah), nd(bh))
-    s_ll = dot(nd(al), nd(bl))
-    if variant == "karatsuba":
-        # Third and final multiply; digit sums fit s8 thanks to the guard bit.
-        s_mid = dot(nd(ah + al), nd(bh + bl)) - s_hh - s_ll
-    elif variant == "schoolbook":
-        s_mid = dot(nd(ah), nd(bl)) + dot(nd(al), nd(bh))
-    else:
-        raise ValueError(f"unknown variant: {variant}")
-    r = recombine_dtype
-    return (
-        s_hh.astype(r) * (beta * beta) + s_mid.astype(r) * beta + s_ll.astype(r)
+    return limb_dot_general(
+        a, b, dimension_numbers,
+        variant=variant, base_bits=base_bits,
+        narrow_dtype=narrow_dtype, accum_dtype=accum_dtype,
+        recombine_dtype=recombine_dtype,
     )
 
 
@@ -173,22 +134,3 @@ def bf16xn_dot_general(
 
 def bf16x3_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
     return bf16xn_dot_general(a, b, MATMUL_DNUMS, passes=3)
-
-
-def pass_count(variant_or_passes) -> int:
-    """Resource model: narrow MXU passes per wide multiply (paper Tables 1-4)."""
-    if isinstance(variant_or_passes, int):
-        return variant_or_passes
-    return PASS_COUNTS[variant_or_passes]
-
-
-def recursion_pass_count(depth: int, variant: Variant = "karatsuba") -> int:
-    """Passes if the paper's recursion ('until 2 bits') were followed.
-
-    One level: 3 passes of b/2-bit work.  Two levels: 9 passes of b/4-bit
-    work, etc.  On the MXU every pass costs a full matrix issue regardless of
-    operand width below 8 bits -- which is why we stop at one level
-    (DESIGN.md section 8.3).
-    """
-    per_level = PASS_COUNTS[variant]
-    return per_level**depth

@@ -16,8 +16,14 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .karatsuba import MATMUL_DNUMS, bf16xn_dot_general, kom_dot_general
+from .karatsuba import MATMUL_DNUMS, bf16xn_dot_general
 from .quantization import quantize_symmetric, quantized_dot_general
+from .substrate import (
+    QWeight,
+    dequantize_weight,
+    policy_int_spec,
+    prequant_dot_general,
+)
 
 
 class MatmulPolicy(str, enum.Enum):
@@ -54,6 +60,9 @@ PASS_RATE_VS_BF16 = {
 
 def policy_dot_general(a, b, dimension_numbers=MATMUL_DNUMS, *, policy=MatmulPolicy.NATIVE_BF16):
     policy = MatmulPolicy(policy)
+    if isinstance(b, QWeight) and policy_int_spec(policy) is None:
+        # Cached integer weights under a float policy: dequantize and proceed.
+        b = dequantize_weight(b)
     if policy == MatmulPolicy.NATIVE_BF16:
         # bf16 output: the MXU still accumulates f32 internally on TPU, and
         # row-parallel partial sums cross the ICI in bf16 (half the bytes).
@@ -74,16 +83,21 @@ def policy_dot_general(a, b, dimension_numbers=MATMUL_DNUMS, *, policy=MatmulPol
         passes = 3 if policy == MatmulPolicy.BF16X3 else 6
         return bf16xn_dot_general(a, b, dimension_numbers, passes=passes)
     if policy in (MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16):
-        variant = "karatsuba" if policy == MatmulPolicy.KOM_INT14 else "schoolbook"
-        base_bits = 7 if policy == MatmulPolicy.KOM_INT14 else 8
+        variant, base_bits = policy_int_spec(policy)
         # 2D-canonicalize so the straight-through VJP below stays simple
         (lc,), (rc,) = dimension_numbers[0]
-        assert dimension_numbers[1] == ((), ()) and rc == 0 and b.ndim == 2, (
+        assert (dimension_numbers[1] == ((), ()) and rc == 0
+                and lc == a.ndim - 1 and b.ndim == 2), (
             "int policies support (..., k) x (k, n) shapes"
         )
         lead = a.shape[:-1]
-        out = _kom_dot_ste(a.reshape((-1, a.shape[-1])).astype(jnp.float32),
-                           b.astype(jnp.float32), base_bits, variant)
+        a2 = a.reshape((-1, a.shape[-1])).astype(jnp.float32)
+        if isinstance(b, QWeight):
+            # Cached per-channel weights (quantized once at model build):
+            # dynamic activation quant only -- the serving/inference hot path.
+            out = prequant_dot_general(a2, b, variant=variant)
+        else:
+            out = _kom_dot_ste(a2, b.astype(jnp.float32), base_bits, variant)
         return out.reshape(lead + (b.shape[-1],))
     raise ValueError(f"unknown policy: {policy}")
 

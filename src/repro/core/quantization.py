@@ -4,56 +4,27 @@ The FPGA design works in fixed point; on TPU we reach the s8 MXU path via
 symmetric quantization.  ``kom_qmax(base_bits)`` is the widest magnitude the
 balanced-digit split supports (8127 for base_bits=7 -- '14-bit' operands,
 the one Karatsuba guard bit per digit; see DESIGN.md section 2.1).
+
+The quantization state itself (QTensor/QWeight and the quantizers) lives in
+:mod:`repro.core.substrate`; this module re-exports it and keeps the
+QTensor-typed dot/linear conveniences.
 """
 from __future__ import annotations
-
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .karatsuba import kom_dot_general, kom_qmax, MATMUL_DNUMS
-
-
-class QTensor(NamedTuple):
-    """Integer values + the float scale that dequantizes them."""
-
-    values: jax.Array  # int32 container holding |v| <= qmax
-    scale: jax.Array   # f32; scalar (per-tensor) or broadcastable (per-axis)
-    qmax: int
-
-    @property
-    def shape(self):
-        return self.values.shape
-
-
-def quantize_symmetric(
-    x: jax.Array,
-    *,
-    qmax: int | None = None,
-    base_bits: int = 7,
-    axis: Optional[int] = None,
-) -> QTensor:
-    """Symmetric (zero-point-free) quantization.
-
-    ``axis``: None -> per-tensor scale; an int -> per-slice scales along that
-    axis (e.g. per-output-feature for weights), kept broadcastable.
-    """
-    if qmax is None:
-        qmax = kom_qmax(base_bits)
-    x = x.astype(jnp.float32)
-    if axis is None:
-        amax = jnp.max(jnp.abs(x))
-    else:
-        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
-        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
-    scale = jnp.maximum(amax, 1e-12) / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
-    return QTensor(values=q, scale=scale, qmax=qmax)
-
-
-def dequantize(q: QTensor) -> jax.Array:
-    return q.values.astype(jnp.float32) * q.scale
+from .karatsuba import kom_dot_general, MATMUL_DNUMS
+from .substrate import (  # noqa: F401
+    QTensor,
+    QWeight,
+    dequantize,
+    dequantize_weight,
+    kom_qmax,
+    prequant_dot_general,
+    quantize_symmetric,
+    quantize_weight,
+)
 
 
 def quantized_dot_general(
@@ -115,7 +86,9 @@ def kom_linear(
 
     This is the building block the model zoo uses when MatmulPolicy selects
     the integer KOM path; activations get a dynamic per-tensor scale, weights
-    a per-output-feature scale.
+    a per-output-feature scale.  Serving should instead quantize weights once
+    (:func:`repro.core.substrate.quantize_weight`) and use
+    :func:`repro.core.substrate.prequant_dot_general`.
     """
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1]))

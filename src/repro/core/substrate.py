@@ -1,0 +1,454 @@
+"""The KOM multiplier substrate: one limb core for every consumer.
+
+The paper's contribution is a *single* multiplier primitive -- the 3-pass
+Karatsuba-Ofman decomposition -- reused uniformly across every conv/FC layer
+of AlexNet/VGG16/VGG19.  This module is that primitive's one home on TPU:
+
+  * **Limb splitting** (:func:`balanced_split`, :func:`split_limbs`): the
+    balanced base-2^b digit trick, defined exactly once in the repo.  The
+    Pallas GEMM and conv kernels, ``kom_dot_general`` and the quantized
+    linear paths all import it from here (DESIGN.md section 2.1).
+  * **Pass scheduling** (:func:`limb_partials` / :func:`limb_recombine` /
+    :func:`limb_dot_general`): the 3-pass Karatsuba and 4-pass schoolbook
+    schedules over any ``dot_general`` dimension numbers, usable both as a
+    plain jnp function and inside a Pallas kernel body (partial products can
+    be accumulated in VMEM scratch and recombined once at the last K step).
+  * **Quantization state** (:class:`QTensor`, :class:`QWeight`,
+    :func:`quantize_symmetric`, :func:`quantize_weight`): dynamic per-tensor
+    activation scales, and *cached* per-output-channel weight scales produced
+    once at model build time (DESIGN.md section 7.2).
+  * **Conv dispatch** (:func:`select_conv_path`, :func:`conv2d`): one entry
+    point that picks the im2col-GEMM or Pallas systolic path from the layer
+    shape -- kernel size, stride, Cout lane alignment -- instead of a
+    per-call-site boolean (DESIGN.md section 7.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Variant = Literal["karatsuba", "schoolbook"]
+
+#: MXU passes per wide multiply, the TPU analogue of the paper's LUT counts.
+PASS_COUNTS = {"karatsuba": 3, "schoolbook": 4}
+
+# Standard 2D matmul dimension numbers: (m,k) x (k,n) -> (m,n).
+MATMUL_DNUMS = (((1,), (0,)), ((), ()))
+
+#: Integer MatmulPolicy values -> (limb variant, base_bits).  Keyed by the
+#: enum's string value so this module never imports ``precision`` (which
+#: imports us).
+INT_POLICY_SPECS = {
+    "kom_int14": ("karatsuba", 7),
+    "schoolbook_int16": ("schoolbook", 8),
+}
+
+
+def policy_int_spec(policy) -> Optional[tuple[str, int]]:
+    """(variant, base_bits) for integer-KOM policies, None for float ones."""
+    return INT_POLICY_SPECS.get(getattr(policy, "value", policy))
+
+
+# ---------------------------------------------------------------------------
+# Limb decomposition: the one implementation of the balanced digit split.
+# ---------------------------------------------------------------------------
+
+def kom_qmax(base_bits: int = 7) -> int:
+    """Largest |x| whose balanced (hi, lo) digits both fit [-2^(b-1), 2^(b-1)-1].
+
+    kom_qmax(7) = 63*129 = 8127 ('int14', Karatsuba-safe: digit sums fit s8);
+    kom_qmax(8) = 127*257 = 32639 ('int16', schoolbook only).
+    """
+    half = 1 << (base_bits - 1)
+    return (half - 1) * ((1 << base_bits) + 1)
+
+
+def balanced_split(x: jax.Array, base_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Split int values into balanced base-2^b digits: x == hi*2^b + lo.
+
+    Both digits lie in [-2^(b-1), 2^(b-1)-1] provided |x| <= kom_qmax(b);
+    balanced (signed) digits are what keep the Karatsuba digit sums inside
+    the s8 range with a single guard bit (DESIGN.md section 2.1).
+    """
+    beta = 1 << base_bits
+    half = beta >> 1
+    x = x.astype(jnp.int32)
+    lo = ((x + half) & (beta - 1)) - half
+    hi = (x - lo) >> base_bits
+    return hi, lo
+
+
+def split_limbs(
+    x: jax.Array, base_bits: int, narrow_dtype=jnp.int8
+) -> tuple[jax.Array, jax.Array]:
+    """Balanced digits already narrowed to the MXU pass dtype."""
+    hi, lo = balanced_split(x, base_bits)
+    return hi.astype(narrow_dtype), lo.astype(narrow_dtype)
+
+
+def limb_partials(
+    a: jax.Array,
+    b: jax.Array,
+    dimension_numbers=MATMUL_DNUMS,
+    *,
+    variant: Variant = "karatsuba",
+    base_bits: int = 7,
+    narrow_dtype=jnp.int8,
+    accum_dtype=jnp.int32,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The narrow MXU passes of one wide multiply: (p_hh, p_mid, p_ll).
+
+    Karatsuba: 3 dots -- p_mid = (Ah+Al)(Bh+Bl) - p_hh - p_ll, the digit sums
+    fitting the narrow dtype thanks to the guard bit.  Schoolbook: 4 dots.
+    Returned un-recombined so Pallas kernels can accumulate each partial in
+    its own scratch register across K blocks (the analogue of the FPGA
+    design's partial-product registers) and recombine once at the end.
+    """
+    if variant not in PASS_COUNTS:
+        raise ValueError(f"unknown variant: {variant}")
+    if variant == "karatsuba" and base_bits > 7 and narrow_dtype == jnp.int8:
+        raise ValueError(
+            "karatsuba digit sums need a guard bit: base_bits <= 7 for int8 passes"
+        )
+    ah, al = balanced_split(a, base_bits)
+    bh, bl = balanced_split(b, base_bits)
+    dot = functools.partial(
+        lax.dot_general,
+        dimension_numbers=dimension_numbers,
+        preferred_element_type=accum_dtype,
+    )
+    nd = lambda t: t.astype(narrow_dtype)
+    p_hh = dot(nd(ah), nd(bh))
+    p_ll = dot(nd(al), nd(bl))
+    if variant == "karatsuba":
+        # Third and final multiply; digit sums fit s8 thanks to the guard bit.
+        p_mid = dot(nd(ah + al), nd(bh + bl)) - p_hh - p_ll
+    else:
+        p_mid = dot(nd(ah), nd(bl)) + dot(nd(al), nd(bh))
+    return p_hh, p_mid, p_ll
+
+
+def limb_recombine(
+    p_hh: jax.Array,
+    p_mid: jax.Array,
+    p_ll: jax.Array,
+    *,
+    base_bits: int,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """p_hh*beta^2 + p_mid*beta + p_ll in ``dtype`` (int64 for bit-exact)."""
+    beta = 1 << base_bits
+    return (
+        p_hh.astype(dtype) * (beta * beta)
+        + p_mid.astype(dtype) * beta
+        + p_ll.astype(dtype)
+    )
+
+
+def limb_dot_general(
+    a: jax.Array,
+    b: jax.Array,
+    dimension_numbers=MATMUL_DNUMS,
+    *,
+    variant: Variant = "karatsuba",
+    base_bits: int = 7,
+    narrow_dtype=jnp.int8,
+    accum_dtype=jnp.int32,
+    recombine_dtype=jnp.float32,
+) -> jax.Array:
+    """Wide integer dot_general out of narrow MXU passes (split + recombine)."""
+    p_hh, p_mid, p_ll = limb_partials(
+        a, b, dimension_numbers,
+        variant=variant, base_bits=base_bits,
+        narrow_dtype=narrow_dtype, accum_dtype=accum_dtype,
+    )
+    return limb_recombine(p_hh, p_mid, p_ll, base_bits=base_bits,
+                          dtype=recombine_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pass-count resource model (paper Tables 1-4 restated for the MXU).
+# ---------------------------------------------------------------------------
+
+def pass_count(variant_or_passes) -> int:
+    """Resource model: narrow MXU passes per wide multiply (paper Tables 1-4)."""
+    if isinstance(variant_or_passes, int):
+        return variant_or_passes
+    return PASS_COUNTS[variant_or_passes]
+
+
+def recursion_pass_count(depth: int, variant: Variant = "karatsuba") -> int:
+    """Passes if the paper's recursion ('until 2 bits') were followed.
+
+    One level: 3 passes of b/2-bit work.  Two levels: 9 passes of b/4-bit
+    work, etc.  On the MXU every pass costs a full matrix issue regardless of
+    operand width below 8 bits -- which is why we stop at one level
+    (DESIGN.md section 8.3).
+    """
+    per_level = PASS_COUNTS[variant]
+    return per_level**depth
+
+
+# ---------------------------------------------------------------------------
+# Quantization state.
+# ---------------------------------------------------------------------------
+
+class QTensor(NamedTuple):
+    """Integer values + the float scale that dequantizes them (dynamic)."""
+
+    values: jax.Array  # int32 container holding |v| <= qmax
+    scale: jax.Array   # f32; scalar (per-tensor) or broadcastable (per-axis)
+    qmax: int
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+
+def quantize_symmetric(
+    x: jax.Array,
+    *,
+    qmax: int | None = None,
+    base_bits: int = 7,
+    axis: Optional[int] = None,
+) -> QTensor:
+    """Symmetric (zero-point-free) quantization.
+
+    ``axis``: None -> per-tensor scale; an int -> per-slice scales along that
+    axis (e.g. per-output-feature for weights), kept broadcastable.
+    """
+    if qmax is None:
+        qmax = kom_qmax(base_bits)
+    x = x.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return QTensor(values=q, scale=scale, qmax=qmax)
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["values", "scale"],
+    meta_fields=["base_bits"],
+)
+@dataclasses.dataclass(frozen=True)
+class QWeight:
+    """A weight quantized ONCE at model build: int16 values + cached scales.
+
+    ``values`` holds balanced-digit-safe integers (|v| <= kom_qmax(base_bits))
+    with the output-channel axis LAST; ``scale`` is the per-output-channel
+    f32 scale, shape (cout,), broadcasting against any output whose trailing
+    dim is cout.  Registered as a pytree with ``base_bits`` static, so a
+    QWeight threads through jit/pytree params unchanged and the forward pass
+    never re-quantizes the weight (DESIGN.md section 7.2).
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    base_bits: int = 7
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def ndim(self):
+        return self.values.ndim
+
+    def astype(self, dtype):
+        # Compute dtype is decided at dequant/recombine time; casting a cached
+        # integer weight is a no-op so generic `w.astype(...)` call sites work.
+        return self
+
+
+def quantize_weight(
+    w: jax.Array, *, base_bits: int = 7, stack_axes: int = 0
+) -> QWeight:
+    """Per-output-channel (last axis) symmetric quantization, done once.
+
+    Works for FC weights (k, n) and conv HWIO weights (kh, kw, cin, cout):
+    the output-channel axis is the last one in both layouts; the scale comes
+    out flat, shape (cout,).
+
+    ``stack_axes``: leading axes that are layer/expert stacks rather than
+    contraction dims (e.g. scan-stacked transformer weights (L, k, n) use
+    ``stack_axes=1``).  Scales then keep those axes -- shape (L, 1, n) --
+    so a stacked QWeight slices correctly under ``lax.scan``.
+    """
+    qmax = kom_qmax(base_bits)
+    w = w.astype(jnp.float32)
+    reduce_axes = tuple(range(stack_axes, w.ndim - 1))
+    if stack_axes == 0:
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes)
+    else:
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int16)
+    return QWeight(values=q, scale=scale, base_bits=base_bits)
+
+
+def dequantize_weight(w: QWeight) -> jax.Array:
+    return w.values.astype(jnp.float32) * w.scale
+
+
+@jax.custom_vjp
+def _inference_only(x):
+    """Identity whose backward pass raises: quantized round/clip would
+    otherwise yield silent zero gradients for the whole upstream network."""
+    return x
+
+
+def _inference_only_fwd(x):
+    return x, None
+
+
+def _inference_only_bwd(_, g):
+    raise NotImplementedError(
+        "prequant_dot_general (cached QWeight path) is inference-only; "
+        "train on the float params with the straight-through policy path "
+        "and quantize at deployment"
+    )
+
+
+_inference_only.defvjp(_inference_only_fwd, _inference_only_bwd)
+
+
+def prequant_dot_general(
+    x: jax.Array,
+    w: QWeight,
+    dimension_numbers=MATMUL_DNUMS,
+    *,
+    variant: Variant = "karatsuba",
+) -> jax.Array:
+    """Dynamic per-tensor activation quant x cached per-channel weight.
+
+    The serving hot path: the weight's limbs come from int16 storage (no
+    per-forward requantization); only the activation is quantized on the fly.
+
+    INFERENCE-ONLY: unlike the quantize-on-the-fly policy path (which
+    installs a straight-through VJP), this path refuses differentiation --
+    training must run on the float params and quantize at deployment.
+    """
+    x = _inference_only(x)  # raises under jax.grad instead of silent zeros
+    qx = quantize_symmetric(x, base_bits=w.base_bits)
+    raw = limb_dot_general(
+        qx.values, w.values.astype(jnp.int32), dimension_numbers,
+        variant=variant, base_bits=w.base_bits,
+    )
+    return raw * (qx.scale * w.scale)
+
+
+# ---------------------------------------------------------------------------
+# Conv planning + dispatch.
+# ---------------------------------------------------------------------------
+
+def conv_pads(h, w, kh, kw, stride, padding):
+    """SAME/VALID output sizes + explicit pads, shared by every conv path.
+
+    Returns (out_h, out_w, ((top, bottom), (left, right))).
+    """
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        pad_h = max((ho - 1) * stride + kh - h, 0)
+        pad_w = max((wo - 1) * stride + kw - w, 0)
+        pads = ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2))
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+        pads = ((0, 0), (0, 0))
+    else:
+        raise ValueError(padding)
+    return ho, wo, pads
+
+
+def select_conv_path(
+    *, kh: int, kw: int, stride: int, cin: int, cout: int,
+    on_tpu: bool | None = None,
+) -> str:
+    """Shape-driven conv dispatch (DESIGN.md section 7.1).
+
+    The Pallas systolic engine wins when its row-block/halo scheme is cheap
+    and the channels fill the MXU; everything else goes through im2col-GEMM,
+    which handles any shape:
+
+      * off TPU: im2col (interpret-mode Pallas is a test vehicle, not a path);
+      * kernel > 7 or stride > 2: im2col -- the halo grows with kh-stride and
+        large strides waste most of each streamed row block (this routes the
+        AlexNet 11x11/stride-4 first layer to the GEMM);
+      * cin < 16: im2col -- each systolic tap contracts only over Cin, so
+        thin input channels starve the MXU; im2col contracts kh*kw*cin;
+      * cout not a multiple of 128: im2col -- channel blocks would pad lanes.
+    """
+    if on_tpu is None:
+        on_tpu = jax.default_backend() == "tpu"
+    if not on_tpu:
+        return "im2col"
+    if max(kh, kw) > 7 or stride > 2:
+        return "im2col"
+    if cin < 16:
+        return "im2col"
+    if cout % 128 != 0:
+        return "im2col"
+    return "systolic"
+
+
+def conv2d(
+    x: jax.Array,
+    w,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    policy="native_bf16",
+    path: str = "auto",
+    interpret: bool | None = None,
+):
+    """NHWC conv behind one policy-driven entry point.
+
+    ``w`` is an HWIO float array or a cached :class:`QWeight`.  ``path`` is
+    ``"auto"`` (shape-driven, :func:`select_conv_path`), ``"im2col"`` or
+    ``"systolic"``.  Integer policies run every tap/GEMM on the limb
+    substrate; on the systolic path float policies run native f32 dots, so
+    ``"auto"`` only routes policies the systolic engine implements exactly
+    (the integer policies and fp32) -- multi-pass bf16 emulation policies
+    stay on im2col rather than being silently downgraded.
+    """
+    # Lazy imports: systolic/kernels import this module for the limb core.
+    from .systolic import conv2d_im2col
+    from repro.kernels.conv2d import conv2d_systolic
+
+    kh, kw, cin, cout = w.shape
+    if path == "auto":
+        path = select_conv_path(kh=kh, kw=kw, stride=stride, cin=cin, cout=cout)
+        systolic_exact = (policy_int_spec(policy) is not None
+                          or getattr(policy, "value", policy) == "fp32")
+        if path == "systolic" and not systolic_exact:
+            path = "im2col"
+    if path == "im2col":
+        return conv2d_im2col(x, w, stride=stride, padding=padding, policy=policy)
+    if path == "systolic":
+        spec = policy_int_spec(policy)
+        if spec is None:
+            variant, base_bits = "native", 7
+            if isinstance(w, QWeight):
+                w = dequantize_weight(w)
+        else:
+            variant, base_bits = spec
+        return conv2d_systolic(
+            x, w, stride=stride, padding=padding,
+            variant=variant, base_bits=base_bits, interpret=interpret,
+        )
+    raise ValueError(f"unknown conv path: {path!r}")

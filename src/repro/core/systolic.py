@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .precision import MatmulPolicy, policy_linear, policy_matmul
+from .precision import MatmulPolicy, policy_matmul
+from .substrate import QWeight, conv_pads
 
 
 def fir_systolic(x: jax.Array, h: jax.Array) -> jax.Array:
@@ -47,22 +48,12 @@ def conv2d_im2col(
 ) -> jax.Array:
     """NHWC conv as im2col-GEMM -- the MXU mapping of the systolic conv array.
 
-    x: (n, h, w, cin); w: (kh, kw, cin, cout).  The GEMM goes through the
+    x: (n, h, w, cin); w: (kh, kw, cin, cout) float HWIO or a cached
+    :class:`~repro.core.substrate.QWeight`.  The GEMM goes through the
     precision policy, so conv layers inherit the KOM path.
     """
     kh, kw, cin, cout = w.shape
-    if padding == "SAME":
-        out_h = -(-x.shape[1] // stride)
-        out_w = -(-x.shape[2] // stride)
-        pad_h = max((out_h - 1) * stride + kh - x.shape[1], 0)
-        pad_w = max((out_w - 1) * stride + kw - x.shape[2], 0)
-        pads = ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2))
-    elif padding == "VALID":
-        pads = ((0, 0), (0, 0))
-        out_h = (x.shape[1] - kh) // stride + 1
-        out_w = (x.shape[2] - kw) // stride + 1
-    else:
-        raise ValueError(padding)
+    _, _, pads = conv_pads(x.shape[1], x.shape[2], kh, kw, stride, padding)
     xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
     # im2col patches: (n, out_h, out_w, kh*kw*cin)
     patches = lax.conv_general_dilated_patches(
@@ -74,7 +65,11 @@ def conv2d_im2col(
     n, ck, oh, ow = patches.shape
     cols = patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, ck)
     # conv_general_dilated_patches emits channel-major (cin, kh, kw) order.
-    wmat = w.transpose(2, 0, 1, 3).reshape(ck, cout)
+    if isinstance(w, QWeight):
+        wmat = QWeight(w.values.transpose(2, 0, 1, 3).reshape(ck, cout),
+                       w.scale, w.base_bits)
+    else:
+        wmat = w.transpose(2, 0, 1, 3).reshape(ck, cout)
     out = policy_matmul(cols, wmat, policy=policy)
     return out.reshape(n, oh, ow, cout)
 

@@ -8,9 +8,14 @@ operand (index maps i and i+1), so no overlapping-BlockSpec support is
 needed and the halo never round-trips through HBM.
 
 Variants:
-  native -- dots in the input dtype (bf16/f32) -> f32.
-  kom    -- inputs are pre-quantized integers; every tap is computed with the
-            3-pass Karatsuba limb decomposition (the paper's multiplier).
+  native     -- dots in the input dtype (bf16/f32) -> f32.
+  karatsuba  -- inputs are pre-quantized integers; every tap runs the 3-pass
+                limb decomposition (the paper's multiplier).
+  schoolbook -- same integer path with the 4-pass schedule.
+
+The limb split/schedule is NOT reimplemented here: each tap calls the shared
+:func:`repro.core.substrate.limb_dot_general` builder, the same code path as
+``kom_dot_general`` and the KOM GEMM kernel (DESIGN.md section 2.3).
 """
 from __future__ import annotations
 
@@ -20,16 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.substrate import limb_dot_general
+
 _CIN_DNUMS = (((2,), (0,)), ((), ()))  # (bh, WO, Cin) x (Cin, bc)
-
-
-def _split_limbs(x, base_bits):
-    beta = 1 << base_bits
-    half = beta >> 1
-    x = x.astype(jnp.int32)
-    lo = ((x + half) & (beta - 1)) - half
-    hi = (x - lo) >> base_bits
-    return hi.astype(jnp.int8), lo.astype(jnp.int8)
 
 
 def _tap_dot(patch, wtap, *, variant, base_bits):
@@ -38,24 +36,9 @@ def _tap_dot(patch, wtap, *, variant, base_bits):
         return jax.lax.dot_general(
             patch, wtap, _CIN_DNUMS, preferred_element_type=jnp.float32
         )
-    # KOM: 3 narrow passes per tap (the paper's multiplier inside the conv).
-    ah, al = _split_limbs(patch, base_bits)
-    bh_, bl = _split_limbs(wtap, base_bits)
-    dot = functools.partial(
-        jax.lax.dot_general,
-        dimension_numbers=_CIN_DNUMS,
-        preferred_element_type=jnp.int32,
-    )
-    p_hh = dot(ah, bh_)
-    p_ll = dot(al, bl)
-    asum = (ah.astype(jnp.int32) + al.astype(jnp.int32)).astype(jnp.int8)
-    bsum = (bh_.astype(jnp.int32) + bl.astype(jnp.int32)).astype(jnp.int8)
-    p_mid = dot(asum, bsum) - p_hh - p_ll
-    beta = 1 << base_bits
-    return (
-        p_hh.astype(jnp.float32) * (beta * beta)
-        + p_mid.astype(jnp.float32) * beta
-        + p_ll.astype(jnp.float32)
+    # KOM: narrow passes per tap via the shared limb substrate.
+    return limb_dot_general(
+        patch, wtap, _CIN_DNUMS, variant=variant, base_bits=base_bits
     )
 
 
@@ -93,6 +76,8 @@ def conv2d_systolic_raw(
     interpret: bool = False,
 ) -> jax.Array:
     """x: (N, H, W, Cin) pre-padded; w: (KH, KW, Cin, Cout).
+
+    ``variant``: "native" | "karatsuba" | "schoolbook".
 
     Requirements (the ops wrapper arranges them):
       * out_h (output rows to produce; default derived from H) divisible by

@@ -1,7 +1,10 @@
 """Jitted public wrapper for the systolic conv kernel.
 
-Handles SAME/VALID padding, the spare halo row-block, output-channel padding
-and (for the KOM variant) quantization + fused dequantization.
+Handles SAME/VALID padding (via the substrate's shared plan), the spare halo
+row-block, output-channel padding and -- for the integer variants --
+quantization + fused dequantization.  Weights may arrive as a cached
+:class:`~repro.core.substrate.QWeight` (quantized once, per-output-channel
+scales), in which case only the activations are quantized per call.
 """
 from __future__ import annotations
 
@@ -10,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import quantize_symmetric
+from repro.core.substrate import QWeight, conv_pads, quantize_symmetric
 
 from .conv2d import conv2d_systolic_raw
 
@@ -20,18 +23,8 @@ def _default_interpret() -> bool:
 
 
 def _plan(h, w, kh, kw, stride, padding, block_h):
-    if padding == "SAME":
-        ho = -(-h // stride)
-        wo = -(-w // stride)
-        pad_h = max((ho - 1) * stride + kh - h, 0)
-        pad_w = max((wo - 1) * stride + kw - w, 0)
-        pads = ((pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2))
-    elif padding == "VALID":
-        ho = (h - kh) // stride + 1
-        wo = (w - kw) // stride + 1
-        pads = ((0, 0), (0, 0))
-    else:
-        raise ValueError(padding)
+    """Shared SAME/VALID plan + row padding for the spare halo block."""
+    ho, wo, pads = conv_pads(h, w, kh, kw, stride, padding)
     # Round HO up to the row-block, then pad rows so a spare halo block exists.
     ho_pad = -(-ho // block_h) * block_h
     rows_needed = (ho_pad // block_h + 1) * block_h * stride
@@ -48,7 +41,7 @@ def _plan(h, w, kh, kw, stride, padding, block_h):
 )
 def conv2d_systolic(
     x: jax.Array,
-    w: jax.Array,
+    w,
     *,
     stride: int = 1,
     padding: str = "SAME",
@@ -60,12 +53,17 @@ def conv2d_systolic(
 ) -> jax.Array:
     """NHWC conv through the Pallas systolic engine.
 
-    variant='native': dots in input dtype.  variant='kom': symmetric-quantize
-    both operands and run every tap as 3 Karatsuba int8 passes, dequantizing
-    the result (the paper's conv layer, end to end).
+    variant='native': dots in input dtype.  variant='karatsuba' (alias
+    'kom') / 'schoolbook': run every tap as narrow limb passes on the shared
+    substrate, dequantizing the result (the paper's conv layer, end to end).
+    Integer variants symmetric-quantize the activations per call; ``w`` may
+    be a float HWIO array (quantized per-tensor on the fly) or a QWeight
+    (cached int16 values + per-output-channel scales, quantized once).
     """
     if interpret is None:
         interpret = _default_interpret()
+    if variant == "kom":
+        variant = "karatsuba"
     n, h, wdim, cin = x.shape
     kh, kw, _, cout = w.shape
     block_h = min(block_h, 32)
@@ -73,12 +71,19 @@ def conv2d_systolic(
         block_h *= 2
     ho, wo, ho_pad, pads = _plan(h, wdim, kh, kw, stride, padding, block_h)
     scale = None
-    if variant == "kom":
+    if variant != "native":
+        if isinstance(w, QWeight):
+            base_bits = w.base_bits
+            w_vals, w_scale = w.values, w.scale  # cached: no requantization
+        else:
+            qw = quantize_symmetric(w, base_bits=base_bits)
+            w_vals, w_scale = qw.values, qw.scale
         qx = quantize_symmetric(x, base_bits=base_bits)
-        qw = quantize_symmetric(w, base_bits=base_bits)
         x = qx.values.astype(jnp.int16)
-        w = qw.values.astype(jnp.int16)
-        scale = qx.scale * qw.scale
+        w = w_vals.astype(jnp.int16)
+        scale = qx.scale * w_scale  # scalar, or (cout,) for per-channel
+    elif isinstance(w, QWeight):
+        raise TypeError("variant='native' expects a float weight, not QWeight")
     xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
     bc = min(block_c, cout)
     pc = (-cout) % bc
@@ -86,10 +91,9 @@ def conv2d_systolic(
     out = conv2d_systolic_raw(
         xp, wp,
         stride=stride, out_h=ho_pad, block_h=block_h, block_c=bc,
-        variant=variant if variant != "kom" else "kom",
-        base_bits=base_bits, interpret=interpret,
+        variant=variant, base_bits=base_bits, interpret=interpret,
     )
     out = out[:, :ho, :wo, :cout]
     if scale is not None:
-        out = out * scale
+        out = out * scale  # (cout,) broadcasts over the channel dim
     return out

@@ -19,17 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.substrate import MATMUL_DNUMS, limb_partials, limb_recombine
+
 DEFAULT_BLOCK = (128, 128, 128)  # bm, bn, bk
-
-
-def _split_limbs(x, base_bits):
-    """Balanced base-2^b digit split, VMEM-local (mirrors core.karatsuba)."""
-    beta = 1 << base_bits
-    half = beta >> 1
-    x = x.astype(jnp.int32)
-    lo = ((x + half) & (beta - 1)) - half
-    hi = (x - lo) >> base_bits
-    return hi.astype(jnp.int8), lo.astype(jnp.int8)
 
 
 def _int_kernel(
@@ -43,33 +35,21 @@ def _int_kernel(
         s_mid[...] = jnp.zeros_like(s_mid)
         s_ll[...] = jnp.zeros_like(s_ll)
 
-    ah, al = _split_limbs(a_ref[...], base_bits)
-    bh, bl = _split_limbs(b_ref[...], base_bits)
-    dot = functools.partial(
-        jax.lax.dot_general,
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
+    # The shared limb schedule (same code path as kom_dot_general and the
+    # systolic conv taps); partials accumulate in VMEM scratch across K.
+    p_hh, p_mid, p_ll = limb_partials(
+        a_ref[...], b_ref[...], MATMUL_DNUMS,
+        variant=variant, base_bits=base_bits,
     )
-    p_hh = dot(ah, bh)
-    p_ll = dot(al, bl)
-    if variant == "karatsuba":
-        # Digit sums fit s8 thanks to the guard bit (base_bits <= 7).
-        asum = (ah.astype(jnp.int32) + al.astype(jnp.int32)).astype(jnp.int8)
-        bsum = (bh.astype(jnp.int32) + bl.astype(jnp.int32)).astype(jnp.int8)
-        p_mid = dot(asum, bsum) - p_hh - p_ll
-    else:  # schoolbook: 4 narrow passes
-        p_mid = dot(ah, bl) + dot(al, bh)
     s_hh[...] += p_hh
     s_mid[...] += p_mid
     s_ll[...] += p_ll
 
     @pl.when(k == nk - 1)
     def _recombine():
-        beta = 1 << base_bits
-        o_ref[...] = (
-            s_hh[...].astype(jnp.float32) * (beta * beta)
-            + s_mid[...].astype(jnp.float32) * beta
-            + s_ll[...].astype(jnp.float32)
+        o_ref[...] = limb_recombine(
+            s_hh[...], s_mid[...], s_ll[...],
+            base_bits=base_bits, dtype=jnp.float32,
         )
 
 

@@ -7,7 +7,6 @@ in a shared implementation.  Tests additionally compare against numpy int64.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.karatsuba import kom_dot_general

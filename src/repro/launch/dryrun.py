@@ -22,7 +22,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.analysis.hlo_stats import analyze
 from repro.analysis.roofline import (

@@ -18,7 +18,7 @@ from repro.models.config import SHAPES, ModelConfig, ShapeCfg
 from repro.optim.adamw import adamw_init
 
 from .mesh import dp_axes
-from .sharding import batch_spec, cache_spec_tree, param_spec_tree
+from .sharding import cache_spec_tree, param_spec_tree
 
 ABS = jax.ShapeDtypeStruct
 

@@ -14,10 +14,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.precision import MatmulPolicy
 from repro.kernels.flash_attention import flash_attention
 
-from .layers import apply_norm, dense, linear_init, norm_init, rms_norm, rope
+from .layers import dense, linear_init, norm_init, rms_norm, rope
 
 
 class KVCache(NamedTuple):

@@ -1,9 +1,15 @@
 """The paper's own CNNs -- AlexNet, VGG16, VGG19 -- on the systolic engine.
 
-Every conv/FC goes through the KOM-enabled systolic substrate
-(:mod:`repro.core.systolic`), or the Pallas conv kernel when
-``use_pallas_conv`` is set, so the paper's resource analysis (Tables 1-4:
-3x3/5x5/7x7/11x11 kernels) is exercised end to end.
+Every conv goes through the substrate's single ``conv2d`` entry point
+(:func:`repro.core.substrate.conv2d`), which picks the im2col-GEMM or Pallas
+systolic path per layer shape; every FC goes through ``policy_linear``.  The
+paper's resource analysis (Tables 1-4: 3x3/5x5/7x7/11x11 kernels) is thus
+exercised end to end on one multiplier substrate.
+
+For the integer KOM policies, :func:`cnn_quantize_params` converts the float
+weights into cached :class:`~repro.core.substrate.QWeight` leaves ONCE at
+model build -- per-output-channel scales, int16 storage -- so the forward
+pass quantizes only activations (DESIGN.md section 7.2).
 """
 from __future__ import annotations
 
@@ -14,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import MatmulPolicy, policy_linear
-from repro.core.systolic import conv2d_im2col, pool2d
-from repro.kernels.conv2d import conv2d_systolic
+from repro.core.substrate import QWeight, conv2d, policy_int_spec, quantize_weight
+from repro.core.systolic import pool2d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,7 +33,7 @@ class CNNConfig:
     in_channels: int = 3
     n_classes: int = 1000
     policy: MatmulPolicy = MatmulPolicy.NATIVE_BF16
-    use_pallas_conv: bool = False
+    conv_path: str = "auto"  # auto | im2col | systolic (substrate dispatch)
 
 
 def _vgg_layers(block_sizes: List[int]) -> Tuple[tuple, ...]:
@@ -91,16 +97,34 @@ def cnn_init(cfg: CNNConfig, key, dtype=jnp.float32):
     return params
 
 
+def cnn_quantize_params(params, cfg: CNNConfig):
+    """Quantize every conv/FC weight ONCE, per-output-channel.
+
+    Returns the params pytree with float "w" leaves replaced by cached
+    :class:`QWeight` (int16 values + per-cout f32 scales) when ``cfg.policy``
+    is an integer KOM policy; float policies return ``params`` unchanged.
+    The forward pass then quantizes only activations -- no per-forward
+    whole-tensor weight requantization.
+    """
+    spec = policy_int_spec(cfg.policy)
+    if spec is None:
+        return params
+    _, base_bits = spec
+    out = []
+    for p in params:
+        if "w" in p and not isinstance(p["w"], QWeight):
+            out.append({**p, "w": quantize_weight(p["w"], base_bits=base_bits)})
+        else:
+            out.append(p)
+    return out
+
+
 def cnn_forward(params, cfg: CNNConfig, x):
-    """x: (n, H, W, C) image batch -> (n, n_classes) logits."""
-    conv = (
-        (lambda x, w, stride, padding: conv2d_systolic(
-            x, w, stride=stride, padding=padding,
-            variant="kom" if cfg.policy == MatmulPolicy.KOM_INT14 else "native"))
-        if cfg.use_pallas_conv
-        else (lambda x, w, stride, padding: conv2d_im2col(
-            x, w, stride=stride, padding=padding, policy=cfg.policy))
-    )
+    """x: (n, H, W, C) image batch -> (n, n_classes) logits.
+
+    ``params`` may hold float weights or cached QWeight leaves (from
+    :func:`cnn_quantize_params`); both route through the same substrate.
+    """
     i = 0
     first_conv = True
     for spec in cfg.layers:
@@ -109,7 +133,8 @@ def cnn_forward(params, cfg: CNNConfig, x):
             _, k, cout, stride = spec
             padding = "VALID" if (cfg.name == "alexnet" and first_conv) else "SAME"
             first_conv = False
-            x = conv(x, p["w"], stride, padding) + p["b"]
+            x = conv2d(x, p["w"], stride=stride, padding=padding,
+                       policy=cfg.policy, path=cfg.conv_path) + p["b"]
             x = jax.nn.relu(x)
         elif spec[0] == "pool":
             x = pool2d(x, window=2, stride=2, kind="max")

@@ -1,7 +1,11 @@
 """Shared layer primitives for the model zoo (pure JAX, pytree params).
 
 Every matmul routes through ``repro.core.precision.policy_linear`` so the
-paper's KOM technique is a config switch for all architectures.
+paper's KOM technique is a config switch for all architectures.  Weight
+leaves may be float arrays or cached :class:`repro.core.substrate.QWeight`
+(quantized once at model build, per-output-channel scales); the policy layer
+handles both, so serving can thread a prequantized param tree through any
+model unchanged.
 """
 from __future__ import annotations
 

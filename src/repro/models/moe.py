@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .layers import dense, linear_init
+from .layers import linear_init
 
 
 def moe_init(key, cfg, dtype=jnp.float32):

@@ -1,7 +1,7 @@
 """AdamW with global-norm clipping, pure-pytree (no optax dependency)."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -15,12 +15,10 @@ Usage (manual-DP training mode):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 class EFState(NamedTuple):

@@ -14,14 +14,16 @@ function the multi-pod dry-run lowers, so what is served is what is measured.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.substrate import policy_int_spec
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.serving.weight_quant import quantize_params_inline
 
 
 @dataclasses.dataclass
@@ -35,10 +37,19 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 max_len: int = 512, rng_seed: int = 0):
+                 max_len: int = 512, rng_seed: int = 0,
+                 prequantize: bool | None = None):
         if cfg.family in ("encdec",):
             raise NotImplementedError("engine serves decoder-only families")
         self.cfg = cfg
+        # Integer-KOM policies: quantize matmul weights ONCE at engine build
+        # (per-output-channel QWeight leaves); every decode step then
+        # quantizes activations only.
+        spec = policy_int_spec(cfg.policy)
+        if prequantize is None:
+            prequantize = spec is not None
+        if prequantize and spec is not None:
+            params = quantize_params_inline(params, base_bits=spec[1])
         self.params = params
         self.slots = slots
         self.max_len = max_len

@@ -4,6 +4,12 @@ Serving doesn't want to re-quantize weights every step: quantize once at
 load time, keep int16 values + per-output-channel scales, and run the
 3-pass KOM GEMM against dynamically quantized activations.  Halves weight
 HBM traffic vs f32 checkpoints (int16 storage) on top of the pass savings.
+
+All quantization state comes from :mod:`repro.core.substrate`:
+:func:`quantize_params_inline` swaps matmul leaves for cached
+:class:`QWeight`s in place (the tree the serve engine threads through the
+model unchanged), while :func:`quantize_param_tree` keeps the legacy
+split values/scales view of the same single quantization pass.
 """
 from __future__ import annotations
 
@@ -12,8 +18,11 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.karatsuba import kom_dot_general, MATMUL_DNUMS
-from repro.core.quantization import QTensor, quantize_symmetric
+from repro.core.substrate import (
+    QWeight,
+    prequant_dot_general,
+    quantize_weight,
+)
 
 #: 2-D matmul weights that are worth pre-quantizing (matches sharding names)
 QUANT_LEAVES = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_in",
@@ -26,36 +35,55 @@ class QWeights(NamedTuple):
     base_bits: int
 
 
-def quantize_param_tree(params, *, base_bits: int = 7) -> QWeights:
-    """Quantize matmul weights (last-dim per-channel); leave the rest."""
+def quantize_params_inline(params, *, base_bits: int = 7,
+                           leaves=QUANT_LEAVES):
+    """One quantization pass: matmul leaves -> cached :class:`QWeight`.
+
+    The returned tree has the same structure as ``params`` and threads
+    through ``policy_linear``/``dense`` (and therefore the serve engine)
+    unchanged -- weights are never re-quantized at forward time.
+
+    Caveat (sharded serving): the name-based sharding rules in
+    ``launch.sharding`` match leaf names like "wq"/"w_gate"; a QWeight leaf
+    exposes "values"/"scale" below that name, so derive PartitionSpecs from
+    the float tree BEFORE quantizing (or extend the rules) when serving
+    under a mesh.  The single-host engine is unaffected.
+    """
     def q(path, leaf):
         name = str(getattr(path[-1], "key", path[-1]))
-        if name in QUANT_LEAVES and leaf.ndim >= 2:
-            qt = quantize_symmetric(leaf.astype(jnp.float32),
-                                    base_bits=base_bits, axis=leaf.ndim - 1)
-            return qt.values.astype(jnp.int16)
+        if name in leaves and getattr(leaf, "ndim", 0) >= 2:
+            # Matmul leaves are (..., k, n); any extra leading axes are
+            # layer/expert stacks and must survive in the scale so the
+            # QWeight still slices under lax.scan.
+            return quantize_weight(leaf.astype(jnp.float32),
+                                   base_bits=base_bits,
+                                   stack_axes=leaf.ndim - 2)
         return leaf
 
-    def s(path, leaf):
-        name = str(getattr(path[-1], "key", path[-1]))
-        if name in QUANT_LEAVES and leaf.ndim >= 2:
-            qt = quantize_symmetric(leaf.astype(jnp.float32),
-                                    base_bits=base_bits, axis=leaf.ndim - 1)
-            return qt.scale
-        return None
+    return jax.tree_util.tree_map_with_path(q, params)
 
-    values = jax.tree_util.tree_map_with_path(q, params)
-    scales = jax.tree_util.tree_map_with_path(s, params)
+
+def quantize_param_tree(params, *, base_bits: int = 7) -> QWeights:
+    """Quantize matmul weights (last-dim per-channel); leave the rest.
+
+    Legacy split view (int16 values tree + scales tree) of the same single
+    :func:`quantize_params_inline` pass -- each leaf is quantized exactly
+    once.
+    """
+    is_q = lambda leaf: isinstance(leaf, QWeight)
+    qtree = quantize_params_inline(params, base_bits=base_bits)
+    values = jax.tree_util.tree_map(
+        lambda leaf: leaf.values if is_q(leaf) else leaf, qtree, is_leaf=is_q)
+    scales = jax.tree_util.tree_map(
+        lambda leaf: leaf.scale if is_q(leaf) else None, qtree, is_leaf=is_q)
     return QWeights(values, scales, base_bits)
 
 
 def kom_linear_prequant(x, w_q, w_scale, *, base_bits: int = 7,
                         variant: str = "karatsuba"):
     """(..., k) @ prequantized (k, n): dynamic A-quant, static W-quant."""
+    qw = QWeight(jnp.asarray(w_q), jnp.ravel(jnp.asarray(w_scale)), base_bits)
     lead = x.shape[:-1]
     x2 = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
-    qx = quantize_symmetric(x2, base_bits=base_bits)
-    raw = kom_dot_general(qx.values, w_q.astype(jnp.int32), MATMUL_DNUMS,
-                          base_bits=base_bits, variant=variant)
-    out = raw * (qx.scale * jnp.squeeze(w_scale))
-    return out.reshape(lead + (w_q.shape[-1],))
+    out = prequant_dot_general(x2, qw, variant=variant)
+    return out.reshape(lead + (qw.shape[-1],))

@@ -1,0 +1,138 @@
+"""Conv-path equivalence: Pallas-interpret, im2col and XLA agree everywhere.
+
+Golden sweep over kernel size x stride x padding (including the AlexNet
+first-layer 11x11/stride-4/VALID case): the native paths must match
+``lax.conv_general_dilated`` to fp tolerance, the KOM integer paths to the
+14-bit quantization noise floor -- through BOTH the im2col-GEMM and the
+Pallas systolic engine, so path dispatch can never change a model's answer.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision import MatmulPolicy
+from repro.core.substrate import (
+    conv2d,
+    conv_pads,
+    quantize_weight,
+    select_conv_path,
+)
+from repro.kernels.conv2d import conv2d_ref
+
+SWEEP = [(k, s, pad)
+         for k in (3, 5, 7, 11)
+         for s in (1, 2, 4)
+         for pad in ("SAME", "VALID")]
+
+
+def _case(k, h=23, cin=4, cout=8, seed=0):
+    # Deterministic per-case data: results must not depend on test ordering.
+    rng = np.random.default_rng(seed + 1000 * k)
+    x = jnp.array(rng.standard_normal((1, h, h, cin)), jnp.float32)
+    w = jnp.array(rng.standard_normal((k, k, cin, cout)) * 0.1, jnp.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("k,s,pad", SWEEP)
+def test_native_paths_match_xla(k, s, pad):
+    x, w = _case(k)
+    ref = conv2d_ref(x, w, stride=s, padding=pad)
+    for path in ("im2col", "systolic"):
+        policy = MatmulPolicy.FP32 if path == "im2col" else MatmulPolicy.NATIVE_BF16
+        got = conv2d(x, w, stride=s, padding=pad, policy=policy, path=path)
+        assert got.shape == ref.shape, (path, got.shape, ref.shape)
+        rel = float(jnp.abs(got - ref).max() / jnp.abs(ref).max())
+        assert rel < 1e-4, (path, rel)
+
+
+@pytest.mark.parametrize("k,s,pad", SWEEP)
+def test_kom_paths_within_quant_error(k, s, pad):
+    x, w = _case(k)
+    ref = conv2d_ref(x, w, stride=s, padding=pad)
+    outs = {}
+    for path in ("im2col", "systolic"):
+        got = conv2d(x, w, stride=s, padding=pad,
+                     policy=MatmulPolicy.KOM_INT14, path=path)
+        assert got.shape == ref.shape, (path, got.shape, ref.shape)
+        rel = float(jnp.abs(got - ref).max() / jnp.abs(ref).max())
+        assert rel < 1e-2, (path, rel)  # 14-bit quantization noise floor
+        outs[path] = np.asarray(got)
+    # The two KOM paths run the same limb substrate on the same quantized
+    # operands; they differ only in f32 recombine/accumulation order
+    # (per-tap vs whole-GEMM), so they agree ~10x tighter than either
+    # matches the f32 reference.
+    np.testing.assert_allclose(outs["im2col"], outs["systolic"],
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_alexnet_first_layer_case():
+    """11x11 / stride 4 / VALID, the paper's largest kernel, cached weights."""
+    x, w = _case(11, h=35, cin=3, cout=16)
+    ref = conv2d_ref(x, w, stride=4, padding="VALID")
+    qw = quantize_weight(w)  # per-channel scales, quantized once
+    for path in ("im2col", "systolic"):
+        got = conv2d(x, qw, stride=4, padding="VALID",
+                     policy=MatmulPolicy.KOM_INT14, path=path)
+        rel = float(jnp.abs(got - ref).max() / jnp.abs(ref).max())
+        assert rel < 1e-2, (path, rel)
+
+
+def test_select_conv_path_rules():
+    # Off-TPU everything goes through im2col.
+    assert select_conv_path(kh=3, kw=3, stride=1, cin=64, cout=128,
+                            on_tpu=False) == "im2col"
+    # Lane-aligned small kernels take the systolic engine on TPU.
+    assert select_conv_path(kh=3, kw=3, stride=1, cin=64, cout=128,
+                            on_tpu=True) == "systolic"
+    assert select_conv_path(kh=5, kw=5, stride=2, cin=64, cout=256,
+                            on_tpu=True) == "systolic"
+    # Big kernels / strides (AlexNet 11x11/s4) and misaligned Cout: im2col.
+    assert select_conv_path(kh=11, kw=11, stride=4, cin=3, cout=128,
+                            on_tpu=True) == "im2col"
+    assert select_conv_path(kh=3, kw=3, stride=4, cin=64, cout=128,
+                            on_tpu=True) == "im2col"
+    assert select_conv_path(kh=3, kw=3, stride=1, cin=64, cout=96,
+                            on_tpu=True) == "im2col"
+    # Thin input channels starve the systolic tap contraction.
+    assert select_conv_path(kh=3, kw=3, stride=1, cin=3, cout=128,
+                            on_tpu=True) == "im2col"
+
+
+def test_conv2d_rejects_unknown_path():
+    x, w = _case(3)
+    with pytest.raises(ValueError):
+        conv2d(x, w, path="winograd")
+
+
+def test_auto_never_downgrades_multipass_policies(monkeypatch):
+    """auto may only pick systolic for policies that engine runs exactly
+    (int policies, fp32); bf16x3 etc. must not silently become native dots."""
+    import repro.core.substrate as substrate
+    # Pretend the shape heuristics chose systolic (as on TPU).
+    monkeypatch.setattr(substrate, "select_conv_path",
+                        lambda **kw: "systolic")
+    x, w = _case(3)
+    ref = conv2d_ref(x, w)
+    for policy in (MatmulPolicy.BF16X3, MatmulPolicy.BF16X6,
+                   MatmulPolicy.NATIVE_BF16):
+        out = substrate.conv2d(x, w, policy=policy, path="auto")
+        rel = float(jnp.abs(out - ref).max() / (jnp.abs(ref).max()))
+        assert rel < 5e-2  # went through im2col honoring the policy
+    # int + fp32 policies are allowed through to the systolic engine
+    out = substrate.conv2d(x, w, policy=MatmulPolicy.KOM_INT14, path="auto")
+    assert float(jnp.abs(out - ref).max() / jnp.abs(ref).max()) < 1e-2
+
+
+@pytest.mark.parametrize("pad", ["SAME", "VALID"])
+@pytest.mark.parametrize("h,k,s", [(16, 3, 1), (23, 5, 2), (35, 11, 4)])
+def test_conv_pads_matches_xla_shapes(h, k, s, pad):
+    """The one shared SAME/VALID plan agrees with XLA's output geometry."""
+    x = jnp.zeros((1, h, h, 2), jnp.float32)
+    w = jnp.zeros((k, k, 2, 3), jnp.float32)
+    ref = conv2d_ref(x, w, stride=s, padding=pad)
+    ho, wo, pads = conv_pads(h, h, k, k, s, pad)
+    assert (ho, wo) == (ref.shape[1], ref.shape[2])
+    # padded input must exactly cover the strided taps
+    assert h + sum(pads[0]) >= (ho - 1) * s + k
+    with pytest.raises(ValueError):
+        conv_pads(h, h, k, k, s, "FULL")

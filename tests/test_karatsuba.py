@@ -1,8 +1,15 @@
-"""Property tests for the KOM core (hypothesis)."""
+"""Property tests for the KOM core (hypothesis).
+
+Deterministic (hypothesis-free) coverage of the same invariants lives in
+tests/test_substrate_unified.py, so skipping this module costs breadth of
+inputs, not breadth of properties.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
