@@ -3,11 +3,12 @@ AlexNet, VGG16, VGG19, and what the KOM multiplier saves on each.
 
 For every conv layer: im2col-GEMM FLOPs, MXU passes under each multiplier,
 and the KOM saving.  One CPU wall measurement per network (first conv layer,
-jnp im2col path) keeps the table grounded in an executed number.
+jnp im2col path) keeps the table grounded in an executed number, and one
+end-to-end serving row per network per conv path (reduced config, the
+bucketed :class:`~repro.serving.cnn_engine.CNNServeEngine` with weights
+prequantized once) grounds the ROADMAP's throughput story in images/sec.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +16,8 @@ import numpy as np
 
 from repro.core.precision import MatmulPolicy
 from repro.core.substrate import conv2d, quantize_weight
-from repro.models.cnn import ALEXNET, VGG16, VGG19
+from repro.models.cnn import ALEXNET, VGG16, VGG19, cnn_init, cnn_reduced
+from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
 
 from .common import PEAK_BF16, POLICY_MODEL, time_call
 
@@ -70,3 +72,25 @@ def run(emit):
         us = time_call(fn, x, qw, iters=5, warmup=1)
         emit(f"convnets/{cfg.name}/first_layer_kom_wall", us,
              f"k={k} cin={cin} cout={cout}")
+        # end-to-end serving: images/sec through the bucketed engine per
+        # conv path (reduced config on CPU; weights prequantized once,
+        # every steady-state step a jit cache hit after warmup).
+        small = cnn_reduced(cfg).replace(policy=MatmulPolicy.KOM_INT14)
+        params = cnn_init(small, jax.random.PRNGKey(0))
+        for path in ("im2col", "systolic"):
+            # buckets the 12-image stream actually hits (8+4): warming an
+            # unused bucket would cost a whole interpret-mode Pallas compile
+            eng = CNNServeEngine(small.replace(conv_path=path), params,
+                                 buckets=(4, 8))
+            eng.warmup()
+            h, c = small.img_size, small.in_channels
+            for uid in range(12):
+                img = rng.standard_normal((h, h, c)).astype(np.float32)
+                eng.submit(ImageRequest(uid=uid, image=img))
+            eng.run()
+            s = eng.stats()
+            emit(f"convnets/{cfg.name}/serve_{path}",
+                 1e6 / s["images_per_s"] if s["images_per_s"] else 0.0,
+                 f"img_per_s={s['images_per_s']:.1f} "
+                 f"pad={s['padding_fraction']:.2f} img={small.img_size} "
+                 f"p95_ms={1e3 * s['latency_p95_s']:.1f}")

@@ -1,1 +1,1 @@
-from .registry import ARCHS, get_config, list_configs, reduced
+from .registry import ARCHS, CNN_ARCHS, get_config, list_configs, reduced

@@ -1,16 +1,22 @@
 """Config registry: --arch <id> resolves here.
 
-Every assigned architecture (exact public configs) plus the paper's own CNNs.
-``reduced(cfg)`` shrinks any config to a CPU-smoke-test size of the *same
-family* (few layers, narrow width, few experts, tiny vocab).
+Every assigned architecture (exact public configs) plus the paper's own CNNs
+(``alexnet`` / ``vgg16`` / ``vgg19`` resolve to :class:`CNNConfig`; the
+serving launcher dispatches on ``cfg.family``).  ``reduced(cfg)`` shrinks
+any config to a CPU-smoke-test size of the *same family* (few layers,
+narrow width, few experts, tiny vocab -- or tiny image/channel widths for
+the CNNs).
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Union
 
+from repro.models.cnn import ALEXNET, VGG16, VGG19, CNNConfig, cnn_reduced
 from repro.models.config import ModelConfig
 
-_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+AnyConfig = Union[ModelConfig, CNNConfig]
+
+_REGISTRY: Dict[str, Callable[[], AnyConfig]] = {}
 
 
 def register(fn: Callable[[], ModelConfig]):
@@ -19,7 +25,7 @@ def register(fn: Callable[[], ModelConfig]):
     return fn
 
 
-def get_config(name: str, **overrides) -> ModelConfig:
+def get_config(name: str, **overrides) -> AnyConfig:
     cfg = _REGISTRY[name]()
     return cfg.replace(**overrides) if overrides else cfg
 
@@ -142,14 +148,39 @@ def olmoe_1b_7b() -> ModelConfig:
     )
 
 
-ARCHS = list_configs()
+# ---------------------------------------------------------------------------
+# the paper's CNNs (served by repro.serving.cnn_engine)
+# ---------------------------------------------------------------------------
+
+@register
+def alexnet() -> CNNConfig:
+    return ALEXNET
+
+
+@register
+def vgg16() -> CNNConfig:
+    return VGG16
+
+
+@register
+def vgg19() -> CNNConfig:
+    return VGG19
+
+
+CNN_ARCHS = [n for n in list_configs()
+             if isinstance(_REGISTRY[n](), CNNConfig)]
+#: transformer-zoo archs only (the per-arch decode/train smoke tests
+#: parametrize over this; CNNs live in CNN_ARCHS)
+ARCHS = [n for n in list_configs() if n not in CNN_ARCHS]
 
 
 # ---------------------------------------------------------------------------
 # reduced configs for CPU smoke tests (same family, tiny dims)
 # ---------------------------------------------------------------------------
 
-def reduced(cfg: ModelConfig) -> ModelConfig:
+def reduced(cfg: AnyConfig) -> AnyConfig:
+    if isinstance(cfg, CNNConfig):
+        return cnn_reduced(cfg)
     kw = dict(
         n_layers=2, d_model=64, n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2),
         head_dim=16, d_ff=128 if cfg.d_ff else 0, vocab_size=256,

@@ -333,17 +333,25 @@ def prequant_dot_general(
     *,
     variant: Variant = "karatsuba",
 ) -> jax.Array:
-    """Dynamic per-tensor activation quant x cached per-channel weight.
+    """Dynamic per-row activation quant x cached per-channel weight.
 
     The serving hot path: the weight's limbs come from int16 storage (no
     per-forward requantization); only the activation is quantized on the fly.
+    For the canonical (m, k) x (k, n) case each activation ROW gets its own
+    scale (a row is one token / one im2col patch), so a request's logits are
+    bit-identical whatever batch-mates or padding rows it is served with --
+    the batch-invariance contract the serving engines test differentially
+    (DESIGN.md section 9.3).  Non-matmul dimension numbers fall back to a
+    per-tensor scale.
 
     INFERENCE-ONLY: unlike the quantize-on-the-fly policy path (which
     installs a straight-through VJP), this path refuses differentiation --
     training must run on the float params and quantize at deployment.
     """
     x = _inference_only(x)  # raises under jax.grad instead of silent zeros
-    qx = quantize_symmetric(x, base_bits=w.base_bits)
+    per_row = dimension_numbers == MATMUL_DNUMS and x.ndim == 2
+    qx = quantize_symmetric(x, base_bits=w.base_bits,
+                            axis=0 if per_row else None)
     raw = limb_dot_general(
         qx.values, w.values.astype(jnp.int32), dimension_numbers,
         variant=variant, base_bits=w.base_bits,

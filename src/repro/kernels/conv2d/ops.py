@@ -78,10 +78,15 @@ def conv2d_systolic(
         else:
             qw = quantize_symmetric(w, base_bits=base_bits)
             w_vals, w_scale = qw.values, qw.scale
-        qx = quantize_symmetric(x, base_bits=base_bits)
+        # Per-SAMPLE activation scales (axis 0): each image's quantization is
+        # independent of its batch-mates, so a request's output is identical
+        # whatever microbatch it rides in (the engines' batch-invariance
+        # contract, DESIGN.md section 9.3).  Scale shape (n,1,1,1) broadcasts
+        # against the (n, ho, wo, cout) output below.
+        qx = quantize_symmetric(x, base_bits=base_bits, axis=0)
         x = qx.values.astype(jnp.int16)
         w = w_vals.astype(jnp.int16)
-        scale = qx.scale * w_scale  # scalar, or (cout,) for per-channel
+        scale = qx.scale * w_scale  # (n,1,1,1) x (scalar | (cout,))
     elif isinstance(w, QWeight):
         raise TypeError("variant='native' expects a float weight, not QWeight")
     xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
@@ -95,5 +100,5 @@ def conv2d_systolic(
     )
     out = out[:, :ho, :wo, :cout]
     if scale is not None:
-        out = out * scale  # (cout,) broadcasts over the channel dim
+        out = out * scale  # (n,1,1,1)|(n,1,1,cout) broadcasts batch+channel
     return out

@@ -138,7 +138,9 @@ def main():
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
     outdir = pathlib.Path(args.out)
-    archs = [args.arch] if args.arch else list_configs()
+    # CNN archs are served (launch.serve), not decode-lowered; skip them here.
+    archs = [args.arch] if args.arch else [
+        a for a in list_configs() if get_config(a).family != "cnn"]
     shapes = [args.shape] if args.shape else list(SHAPES)
     meshes = []
     if not args.multi_pod_only:

@@ -1,4 +1,11 @@
-"""Serving launcher: batched requests through the continuous-batching engine."""
+"""Serving launcher: batched requests through the serving engines.
+
+Transformer archs go through the continuous-batching decode engine
+(:class:`repro.serving.engine.ServeEngine`); the paper's CNN archs
+(``alexnet`` / ``vgg16`` / ``vgg19``) go through the bucketed image engine
+(:class:`repro.serving.cnn_engine.CNNServeEngine`).  Dispatch is on the
+registry config's ``family``.
+"""
 from __future__ import annotations
 
 import argparse
@@ -9,31 +16,15 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.models import transformer
-from repro.serving.engine import Request, ServeEngine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--policy", default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _serve_lm(cfg, args) -> int:
+    from repro.models import transformer
+    from repro.serving.engine import Request, ServeEngine
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    if args.policy:
-        cfg = cfg.replace(policy=args.policy)
     if cfg.family in ("encdec",):
         print("engine serves decoder-only families; pick another arch")
         return 2
-
     params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
     engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(args.seed)
@@ -52,6 +43,65 @@ def main(argv=None):
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok/dt:.1f} tok/s)", flush=True)
     return 0 if len(done) == args.requests else 1
+
+
+def _serve_cnn(cfg, args) -> int:
+    from repro.models.cnn import cnn_init
+    from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
+
+    params = cnn_init(cfg, jax.random.PRNGKey(args.seed))
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    engine = CNNServeEngine(cfg, params, buckets=buckets)
+    engine.warmup()  # compile every bucket shape: serving is all cache hits
+    rng = np.random.default_rng(args.seed)
+    h, c = cfg.img_size, cfg.in_channels
+    t0 = time.time()
+    for uid in range(args.requests):
+        img = rng.standard_normal((h, h, c)).astype(np.float32)
+        engine.submit(ImageRequest(uid=uid, image=img))
+    done = engine.run()
+    dt = time.time() - t0
+    s = engine.stats()
+    for uid in sorted(done):
+        lat = engine.batcher.queue.latency(uid)
+        print(f"[serve] img {uid}: label {done[uid].label} "
+              f"({1e3 * lat:.1f} ms)")
+    print(f"[serve] {cfg.name}/{cfg.policy.value}: "
+          f"{s['images_done']} images in {dt:.2f}s wall "
+          f"({s['images_per_s']:.1f} img/s batched, "
+          f"p95 latency {1e3 * s['latency_p95_s']:.1f} ms, "
+          f"padding {100 * s['padding_fraction']:.0f}%, "
+          f"buckets {s['bucket_counts']})", flush=True)
+    return 0 if len(done) == args.requests else 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--buckets", default="1,4,16",
+                    help="CNN microbatch bucket sizes (comma-separated)")
+    ap.add_argument("--conv-path", default=None,
+                    help="CNN conv dispatch: auto | im2col | systolic")
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if args.policy:
+        from repro.core.precision import MatmulPolicy
+        cfg = cfg.replace(policy=MatmulPolicy(args.policy))
+    if cfg.family == "cnn":
+        if args.conv_path:
+            cfg = cfg.replace(conv_path=args.conv_path)
+        return _serve_cnn(cfg, args)
+    return _serve_lm(cfg, args)
 
 
 if __name__ == "__main__":

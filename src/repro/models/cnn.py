@@ -34,6 +34,10 @@ class CNNConfig:
     n_classes: int = 1000
     policy: MatmulPolicy = MatmulPolicy.NATIVE_BF16
     conv_path: str = "auto"  # auto | im2col | systolic (substrate dispatch)
+    family: str = "cnn"      # registry/launcher dispatch tag
+
+    def replace(self, **kw) -> "CNNConfig":
+        return dataclasses.replace(self, **kw)
 
 
 def _vgg_layers(block_sizes: List[int]) -> Tuple[tuple, ...]:
@@ -57,6 +61,34 @@ ALEXNET = CNNConfig(
 )
 VGG16 = CNNConfig("vgg16", _vgg_layers([2, 2, 3, 3, 3]), img_size=224)
 VGG19 = CNNConfig("vgg19", _vgg_layers([2, 2, 4, 4, 4]), img_size=224)
+
+
+def cnn_reduced(cfg: CNNConfig, *, img_size: int | None = None,
+                max_channels: int = 16, max_fc: int = 32,
+                n_classes: int = 16) -> CNNConfig:
+    """CPU-smoke-test twin of a CNN config: same topology, tiny widths.
+
+    Keeps every layer (all kernel sizes/strides/pools of the full network,
+    so the conv-path dispatch sees the same shapes-of-interest) but caps
+    channel and FC widths.  AlexNet keeps its VALID 11x11/stride-4 first
+    layer by defaulting to img_size=67; the VGGs shrink to 32 (five pools
+    -> 1x1 feature map, as in the full network's 224 -> 7x7).
+    """
+    if img_size is None:
+        img_size = 67 if cfg.name == "alexnet" else 32
+    layers = []
+    for spec in cfg.layers:
+        if spec[0] == "conv":
+            _, k, cout, stride = spec
+            layers.append(("conv", k, min(cout, max_channels), stride))
+        elif spec[0] == "fc":
+            layers.append(("fc", min(spec[1], max_fc)))
+        else:
+            layers.append(spec)
+    # the classifier head keeps its own width
+    layers[-1] = ("fc", n_classes)
+    return cfg.replace(layers=tuple(layers), img_size=img_size,
+                       n_classes=n_classes)
 
 
 def cnn_init(cfg: CNNConfig, key, dtype=jnp.float32):

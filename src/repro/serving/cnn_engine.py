@@ -1,0 +1,168 @@
+"""Batched CNN serving engine: the paper's AlexNet/VGG16/VGG19, production-shaped.
+
+The FPGA accelerator literature (Shen et al.'s resource partitioning, the
+Abdelouahab et al. survey) gets CNN throughput from *fixed-shape* batched
+pipelines with weights resident in quantized form.  This engine is that
+discipline on the KOM substrate:
+
+  * **Admission + microbatching** -- requests join the shared
+    :class:`~repro.serving.scheduler.RequestQueue`; the
+    :class:`~repro.serving.scheduler.Microbatcher` drains it in FIFO order
+    into a small set of batch buckets (default 1/4/16/64), zero-padding each
+    microbatch up to its bucket.  The jitted forward therefore only ever
+    sees ``len(buckets)`` distinct shapes: after :meth:`warmup` (or the
+    first pass through each bucket) every step is a jit cache hit.
+  * **Quantize-once weights** -- under the integer KOM policies the float
+    params are converted to cached :class:`~repro.core.substrate.QWeight`
+    leaves (int16 values + per-output-channel scales) ONCE at engine build
+    via :func:`~repro.models.cnn.cnn_quantize_params`; each step quantizes
+    activations only, with per-row scales so a request's logits are
+    bit-identical whatever batch-mates or padding it is served with
+    (DESIGN.md section 9).
+  * **Data parallelism** -- pass a ``launch.mesh`` mesh and the batch axis
+    is sharded over its data axes via ``shard_map`` (params replicated);
+    buckets are rounded up to multiples of the data-parallel degree so
+    every shard sees a full slice.  Unpadding/gather stays on host.
+  * **Accounting** -- per-request latency stamps from the queue plus
+    per-step bucket occupancy roll up into :meth:`stats` (images/sec, p95
+    latency, padding overhead), the serving analogue of
+    ``benchmarks/table_convnets.py``'s per-layer cost rows.
+
+Typical use::
+
+    cfg = get_config("alexnet", policy=MatmulPolicy.KOM_INT14)
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    eng = CNNServeEngine(cfg, params, buckets=(1, 4, 16))
+    for uid, img in enumerate(images):
+        eng.submit(ImageRequest(uid=uid, image=img))
+    done = eng.run()             # {uid: ImageRequest with .logits/.label}
+    print(eng.stats())
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.substrate import policy_int_spec
+from repro.models.cnn import CNNConfig, cnn_forward, cnn_quantize_params
+from repro.serving.scheduler import Microbatcher
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    uid: int
+    image: np.ndarray                     # (H, W, C) float32
+    logits: Optional[np.ndarray] = None   # (n_classes,) set at completion
+    label: Optional[int] = None           # argmax(logits)
+
+
+class CNNServeEngine:
+    """Serve batched image-classification requests for a :class:`CNNConfig`."""
+
+    def __init__(self, cfg: CNNConfig, params, *,
+                 buckets: Sequence[int] = (1, 4, 16, 64),
+                 mesh=None, prequantize: bool | None = None):
+        self.cfg = cfg
+        # Integer-KOM policies: weights become cached QWeight leaves ONCE
+        # here; every step then quantizes activations only.
+        spec = policy_int_spec(cfg.policy)
+        if prequantize is None:
+            prequantize = spec is not None
+        if prequantize and spec is not None:
+            params = cnn_quantize_params(params, cfg)
+        self.params = params
+        self.mesh = mesh
+        self._dp_axes: tuple = ()
+        dp = 1
+        if mesh is not None:
+            from repro.launch.mesh import dp_axes
+            self._dp_axes = dp_axes(mesh)
+            for a in self._dp_axes:
+                dp *= mesh.shape[a]
+        self.dp = dp
+        # buckets rounded up to the data-parallel degree: every mesh slice
+        # gets a full (possibly padded) batch shard
+        buckets = sorted({-(-int(b) // dp) * dp for b in buckets})
+        self.batcher = Microbatcher(buckets)
+        self._forward = jax.jit(self._make_forward())
+
+    def _make_forward(self):
+        cfg = self.cfg
+
+        def fwd(params, x):
+            return cnn_forward(params, cfg, x)
+
+        if self.mesh is None:
+            return fwd
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import shard_map_compat
+        batch_spec = P(self._dp_axes, None, None, None)
+        # params replicated (P() prefix over the whole tree, QWeight leaves
+        # included); only the image batch axis is sharded.
+        return shard_map_compat(
+            fwd, self.mesh,
+            in_specs=(P(), batch_spec),
+            out_specs=P(self._dp_axes, None),
+        )
+
+    @property
+    def buckets(self) -> tuple:
+        return self.batcher.buckets
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: ImageRequest) -> None:
+        img = np.asarray(req.image, np.float32)
+        h = self.cfg.img_size
+        if img.shape != (h, h, self.cfg.in_channels):
+            raise ValueError(
+                f"{self.cfg.name} serves ({h}, {h}, {self.cfg.in_channels}) "
+                f"images, got {img.shape}")
+        self.batcher.submit(req, img)
+
+    # -- execution -----------------------------------------------------------
+
+    def _run_batch(self, batch: np.ndarray) -> np.ndarray:
+        out = self._forward(self.params, jnp.asarray(batch))
+        return np.asarray(jax.block_until_ready(out))
+
+    def warmup(self) -> None:
+        """Compile every bucket shape up front (steady-state = cache hits)."""
+        h, c = self.cfg.img_size, self.cfg.in_channels
+        for b in self.batcher.buckets:
+            zeros = jnp.zeros((b, h, h, c), jnp.float32)
+            jax.block_until_ready(self._forward(self.params, zeros))
+
+    def step(self) -> List[ImageRequest]:
+        """Serve one microbatch; returns the requests completed by it."""
+        completed = self.batcher.step(self._run_batch)
+        out = []
+        for req, logits in completed:
+            req.logits = logits
+            req.label = int(np.argmax(logits))
+            out.append(req)
+        return out
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, ImageRequest]:
+        """Drain the queue (mixed request streams welcome); returns done."""
+        steps = 0
+        while len(self.batcher.queue) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.batcher.queue.done
+
+    # -- accounting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Latency/throughput roll-up, images/sec included."""
+        s = self.batcher.stats()
+        s["images_done"] = s.pop("requests_done")
+        s["images_per_s"] = s.pop("throughput_rps")
+        s["buckets"] = self.batcher.buckets
+        s["data_parallel"] = self.dp
+        return s

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core.substrate import policy_int_spec
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.serving.scheduler import RequestQueue
 from repro.serving.weight_quant import quantize_params_inline
 
 
@@ -56,8 +57,10 @@ class ServeEngine:
         self.cache = transformer.init_cache(cfg, slots, max_len)
         self.pos = np.zeros((slots,), np.int64)      # next position per slot
         self.active: List[Optional[Request]] = [None] * slots
-        self.queue: List[Request] = []
-        self.done: Dict[int, Request] = {}
+        # The ONE admission queue implementation (serving/scheduler.py):
+        # FIFO order, done ledger and latency stamps shared with the CNN
+        # engine rather than re-implemented per engine.
+        self._rq = RequestQueue()
         self._rng = np.random.default_rng(rng_seed)
         self._decode = jax.jit(
             lambda p, c, t, pos: transformer.serve_step(p, cfg, c, t, pos)
@@ -68,15 +71,25 @@ class ServeEngine:
 
     # -- admission -----------------------------------------------------------
 
+    @property
+    def queue(self) -> List[Request]:
+        return list(self._rq.pending)
+
+    @property
+    def done(self) -> Dict[int, Request]:
+        return self._rq.done
+
     def submit(self, req: Request):
         req.out_tokens = []
-        self.queue.append(req)
+        self._rq.submit(req)
 
     def _admit(self):
         for s in range(self.slots):
-            if self.active[s] is None and self.queue:
-                req = self.queue.pop(0)
-                self._prefill_slot(s, req)
+            if self.active[s] is None:
+                admitted = self._rq.take(1)
+                if not admitted:
+                    break
+                self._prefill_slot(s, admitted[0])
 
     def _prefill_slot(self, slot: int, req: Request):
         """Run the prompt through the decode path token-by-token.
@@ -140,14 +153,14 @@ class ServeEngine:
                 self.pos[s] += 1
                 if (len(req.out_tokens) >= req.max_new_tokens
                         or self.pos[s] >= self.max_len - 1):
-                    self.done[req.uid] = req
+                    self._rq.finish(req)
                     self.active[s] = None
         return True
 
     def run(self, max_steps: int = 10_000):
         steps = 0
-        while (self.queue or any(r is not None for r in self.active)) \
+        while (len(self._rq) or any(r is not None for r in self.active)) \
                 and steps < max_steps:
             self.step()
             steps += 1
-        return self.done
+        return self._rq.done

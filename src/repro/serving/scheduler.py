@@ -1,0 +1,221 @@
+"""The one admission queue + fixed-shape microbatcher for every engine.
+
+Both serving engines -- the transformer decode :class:`~repro.serving.engine.
+ServeEngine` (slot-based continuous batching) and the CNN image
+:class:`~repro.serving.cnn_engine.CNNServeEngine` (bucketed microbatching) --
+admit work through the SAME :class:`RequestQueue`: FIFO order, completion
+ledger and per-request latency stamps are defined once, here, and nowhere
+else (DESIGN.md section 9.1; the single-definition invariant is enforced by
+a grep test, like the limb split's).
+
+:class:`Microbatcher` adds the fixed-shape batching discipline on top: the
+queue drains into a small set of batch *buckets* (e.g. 1/4/16/64), each
+microbatch zero-padded up to its bucket so the jitted forward only ever sees
+those shapes -- every steady-state step is a jit cache hit.  Padding and
+unpadding bookkeeping lives on host; the forward fn never learns which rows
+were real.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestTiming:
+    """Host-clock stamps for one request's life cycle."""
+
+    submitted: float
+    admitted: Optional[float] = None
+    completed: Optional[float] = None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.completed is None:
+            return None
+        return self.completed - self.submitted
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.admitted is None:
+            return None
+        return self.admitted - self.submitted
+
+
+class RequestQueue:
+    """FIFO admission queue + completion ledger (the single implementation).
+
+    Requests are any objects with a ``uid`` attribute.  ``take`` pops in
+    strict submission order; ``finish`` moves a request to the ``done``
+    ledger.  Every transition is stamped with the host clock so engines get
+    per-request latency accounting for free.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self._clock = clock
+        self._pending: List[Any] = []
+        self.done: Dict[int, Any] = {}
+        self.timing: Dict[int, RequestTiming] = {}
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending(self) -> Tuple[Any, ...]:
+        return tuple(self._pending)
+
+    @property
+    def drained(self) -> bool:
+        return not self._pending
+
+    def submit(self, req) -> None:
+        self.timing[req.uid] = RequestTiming(submitted=self._clock())
+        self._pending.append(req)
+
+    def take(self, max_n: int) -> List[Any]:
+        """Admit up to ``max_n`` requests, oldest first."""
+        if max_n <= 0:
+            return []
+        admitted = self._pending[:max_n]
+        del self._pending[:max_n]
+        now = self._clock()
+        for req in admitted:
+            self.timing[req.uid].admitted = now
+        return admitted
+
+    def finish(self, req) -> None:
+        self.timing[req.uid].completed = self._clock()
+        self.done[req.uid] = req
+
+    def latency(self, uid: int) -> Optional[float]:
+        return self.timing[uid].latency
+
+    def latencies(self) -> List[float]:
+        """Completed-request latencies, in completion order."""
+        return [self.timing[uid].latency for uid in self.done]
+
+
+def select_bucket(pending: int, buckets: Sequence[int]) -> int:
+    """Fixed-shape bucket for ``pending`` waiting requests.
+
+    The smallest bucket that fits them all (minimal padding), or the largest
+    bucket when more are waiting than any bucket holds (the queue drains at
+    full batches until the tail).  ``buckets`` must be sorted ascending.
+    """
+    if pending <= 0:
+        raise ValueError("select_bucket needs pending >= 1")
+    for b in buckets:
+        if pending <= b:
+            return b
+    return buckets[-1]
+
+
+def pad_batch(rows: List[np.ndarray], bucket: int) -> np.ndarray:
+    """Stack ``rows`` and zero-pad the batch axis up to ``bucket``."""
+    n = len(rows)
+    if n > bucket:
+        raise ValueError(f"{n} rows exceed bucket {bucket}")
+    batch = np.stack(rows, axis=0)
+    if n < bucket:
+        pad = np.zeros((bucket - n,) + batch.shape[1:], batch.dtype)
+        batch = np.concatenate([batch, pad], axis=0)
+    return batch
+
+
+class Microbatcher:
+    """Bucketed fixed-shape batching over a :class:`RequestQueue`.
+
+    Payloads (one ndarray per request, all the same shape) are stacked and
+    zero-padded to the selected bucket; the step fn sees only bucket-shaped
+    batches, and only the first ``n_real`` output rows are handed back to
+    their requests.  Everything here is host bookkeeping -- no device math --
+    so the scheduling policy is unit-testable with a stubbed forward fn.
+    """
+
+    def __init__(self, buckets: Sequence[int] = (1, 4, 16, 64),
+                 clock: Callable[[], float] = time.monotonic):
+        if not buckets:
+            raise ValueError("need at least one bucket size")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        if self.buckets[0] < 1:
+            raise ValueError(f"bucket sizes must be >= 1: {self.buckets}")
+        self.queue = RequestQueue(clock)
+        self._clock = clock
+        # padding/throughput bookkeeping
+        self.steps = 0
+        self.real_rows = 0
+        self.padded_rows = 0
+        self.bucket_counts: Dict[int, int] = {b: 0 for b in self.buckets}
+        self.step_log: List[dict] = []
+
+    def submit(self, req, payload: np.ndarray) -> None:
+        req._payload = np.asarray(payload)
+        self.queue.submit(req)
+
+    def step(self, run_batch: Callable[[np.ndarray], np.ndarray]
+             ) -> List[Tuple[Any, np.ndarray]]:
+        """Admit one microbatch, run it, unpad, and finish its requests.
+
+        Returns ``[(request, output_row), ...]`` for the real rows only;
+        an empty list when the queue is drained.
+        """
+        n_pending = len(self.queue)
+        if n_pending == 0:
+            return []
+        bucket = select_bucket(n_pending, self.buckets)
+        admitted = self.queue.take(bucket)
+        batch = pad_batch([r._payload for r in admitted], bucket)
+        t0 = self._clock()
+        out = np.asarray(run_batch(batch))
+        dt = self._clock() - t0
+        if out.shape[0] != bucket:
+            raise ValueError(
+                f"run_batch returned leading dim {out.shape[0]}, "
+                f"expected bucket {bucket}")
+        self.steps += 1
+        self.real_rows += len(admitted)
+        self.padded_rows += bucket - len(admitted)
+        self.bucket_counts[bucket] += 1
+        self.step_log.append({"bucket": bucket, "real": len(admitted),
+                              "seconds": dt})
+        results = []
+        for i, req in enumerate(admitted):
+            del req._payload  # long-lived engines must not retain input copies
+            self.queue.finish(req)
+            results.append((req, out[i]))
+        return results
+
+    def run(self, run_batch: Callable[[np.ndarray], np.ndarray],
+            max_steps: int = 10_000) -> Dict[int, Any]:
+        """Drain the queue: step until empty (or ``max_steps``)."""
+        steps = 0
+        while len(self.queue) and steps < max_steps:
+            self.step(run_batch)
+            steps += 1
+        return self.queue.done
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def padding_fraction(self) -> float:
+        total = self.real_rows + self.padded_rows
+        return self.padded_rows / total if total else 0.0
+
+    def stats(self) -> dict:
+        lats = [v for v in self.queue.latencies() if v is not None]
+        wall = sum(s["seconds"] for s in self.step_log)
+        return {
+            "requests_done": len(self.queue.done),
+            "steps": self.steps,
+            "real_rows": self.real_rows,
+            "padded_rows": self.padded_rows,
+            "padding_fraction": self.padding_fraction,
+            "bucket_counts": dict(self.bucket_counts),
+            "batch_seconds": wall,
+            "throughput_rps": (self.real_rows / wall) if wall > 0 else 0.0,
+            "latency_mean_s": float(np.mean(lats)) if lats else 0.0,
+            "latency_p95_s": float(np.percentile(lats, 95)) if lats else 0.0,
+        }

@@ -1,0 +1,209 @@
+"""Scheduler contract: admission order, buckets, padding, drain -- no device math.
+
+The whole scheduling policy (serving/scheduler.py) is host bookkeeping, so
+everything here runs against a stubbed forward fn: no jax arrays, no jit.
+Also holds the single-definition invariant for the admission queue -- both
+engines must share the scheduler's FIFO pop instead of keeping a copy.
+"""
+import dataclasses
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import (
+    Microbatcher,
+    RequestQueue,
+    pad_batch,
+    select_bucket,
+)
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+@dataclasses.dataclass
+class Req:
+    uid: int
+
+
+# -- single-definition invariant (like the limb split's) ----------------------
+
+def test_fifo_pop_defined_once():
+    """The admission pop exists exactly once in src/ (the scheduler); both
+    serving engines import RequestQueue instead of re-implementing it.
+    Neither a list-pop nor the scheduler's slice-pop may appear anywhere
+    else (engine.py's old ``self.queue.pop(0)`` copy stays deleted)."""
+    for needle, owners in ((".pop(0)", []),
+                           ("del self._pending[:", ["scheduler.py"])):
+        hits = [p for p in SRC.rglob("*.py") if needle in p.read_text()]
+        assert [p.name for p in hits] == owners, (needle, hits)
+
+
+def test_engines_share_scheduler_queue():
+    import repro.serving.cnn_engine as cnn_engine
+    import repro.serving.engine as engine
+    import repro.serving.scheduler as scheduler
+
+    assert engine.RequestQueue is scheduler.RequestQueue
+    assert cnn_engine.Microbatcher is scheduler.Microbatcher
+
+
+# -- queue admission order ----------------------------------------------------
+
+def test_queue_fifo_order_and_ledger():
+    t = [0.0]
+    q = RequestQueue(clock=lambda: t[0])
+    for uid in (3, 1, 4, 15, 9):
+        q.submit(Req(uid))
+        t[0] += 1.0
+    assert len(q) == 5
+    first = q.take(2)
+    assert [r.uid for r in first] == [3, 1]          # strict submission order
+    assert [r.uid for r in q.take(10)] == [4, 15, 9]  # take clamps to pending
+    assert q.take(3) == [] and q.drained
+    for r in first:
+        q.finish(r)
+    assert sorted(q.done) == [1, 3]
+    # latency = completed - submitted, from the injected clock
+    assert q.latency(3) == t[0] - 0.0
+    assert q.latency(1) == t[0] - 1.0
+    assert q.timing[3].queue_wait is not None
+
+
+def test_queue_take_zero_is_noop():
+    q = RequestQueue()
+    q.submit(Req(1))
+    assert q.take(0) == [] and len(q) == 1
+
+
+# -- fixed-shape bucket selection ---------------------------------------------
+
+def test_select_bucket_smallest_fit():
+    buckets = (1, 4, 16, 64)
+    assert select_bucket(1, buckets) == 1
+    assert select_bucket(2, buckets) == 4
+    assert select_bucket(4, buckets) == 4
+    assert select_bucket(5, buckets) == 16
+    assert select_bucket(17, buckets) == 64
+    assert select_bucket(1000, buckets) == 64  # overflow drains at max batch
+    with pytest.raises(ValueError):
+        select_bucket(0, buckets)
+
+
+def test_pad_batch_zero_pads_to_bucket():
+    rows = [np.full((2, 3), i, np.float32) for i in (1, 2)]
+    out = pad_batch(rows, 4)
+    assert out.shape == (4, 2, 3)
+    assert (out[0] == 1).all() and (out[1] == 2).all()
+    assert (out[2:] == 0).all()
+    with pytest.raises(ValueError):
+        pad_batch(rows, 1)
+
+
+# -- padding/unpadding bookkeeping with a stubbed forward ---------------------
+
+def _stub_forward(seen):
+    """Identity-ish stub: records batch shapes, tags each row with its sum."""
+    def run(batch):
+        seen.append(batch.shape)
+        return batch.reshape(batch.shape[0], -1).sum(axis=1, keepdims=True)
+    return run
+
+
+def test_microbatcher_pads_and_unpads():
+    mb = Microbatcher(buckets=(1, 4))
+    for uid in range(3):
+        mb.submit(Req(uid), np.full((2, 2), uid + 1, np.float32))
+    seen = []
+    done = mb.step(_stub_forward(seen))
+    # 3 pending -> bucket 4, one padded row the stub saw but nobody got back
+    assert seen == [(4, 2, 2)]
+    assert [r.uid for r, _ in done] == [0, 1, 2]
+    assert [float(v[0]) for _, v in done] == [4.0, 8.0, 12.0]
+    assert mb.real_rows == 3 and mb.padded_rows == 1
+    assert mb.padding_fraction == pytest.approx(0.25)
+    assert mb.bucket_counts == {1: 0, 4: 1}
+
+
+def test_microbatcher_bucket_shapes_are_fixed():
+    """Every batch the forward fn ever sees is one of the bucket shapes --
+    the property that makes steady-state serving all jit cache hits."""
+    mb = Microbatcher(buckets=(1, 4))
+    seen = []
+    run = _stub_forward(seen)
+    uid = 0
+    for burst in (1, 2, 5, 4, 9, 1):
+        for _ in range(burst):
+            mb.submit(Req(uid), np.zeros((2,), np.float32))
+            uid += 1
+        while len(mb.queue):
+            mb.step(run)
+    assert {s[0] for s in seen} <= {1, 4}
+    assert len(mb.queue.done) == uid
+
+
+def test_microbatcher_rejects_bad_forward():
+    mb = Microbatcher(buckets=(2,))
+    mb.submit(Req(0), np.zeros((2,), np.float32))
+    with pytest.raises(ValueError, match="leading dim"):
+        mb.step(lambda b: b[:1])  # stub dropped the padded row on device
+
+
+def test_microbatcher_step_on_empty_queue():
+    mb = Microbatcher(buckets=(1,))
+    assert mb.step(lambda b: b) == []
+    assert mb.steps == 0
+
+
+# -- drain-on-run termination -------------------------------------------------
+
+def test_run_drains_and_terminates():
+    mb = Microbatcher(buckets=(1, 4))
+    for uid in range(11):
+        mb.submit(Req(uid), np.zeros((2,), np.float32))
+    calls = []
+    done = mb.run(_stub_forward(calls), max_steps=100)
+    assert sorted(done) == list(range(11))
+    assert len(mb.queue) == 0
+    # 11 = 4 + 4 + 4(pad 1): three fixed-shape steps, then run() stopped
+    assert calls == [(4, 2), (4, 2), (4, 2)]
+    # run() on a drained queue is a no-op, not a livelock
+    assert mb.run(_stub_forward(calls)) is mb.queue.done
+    assert len(calls) == 3
+
+
+def test_run_respects_max_steps():
+    mb = Microbatcher(buckets=(1,))
+    for uid in range(5):
+        mb.submit(Req(uid), np.zeros((1,), np.float32))
+    mb.run(lambda b: b, max_steps=2)
+    assert len(mb.queue) == 3 and len(mb.queue.done) == 2
+
+
+def test_stats_rollup():
+    mb = Microbatcher(buckets=(1, 4), clock=_FakeClock().tick)
+    for uid in range(5):
+        mb.submit(Req(uid), np.zeros((1,), np.float32))
+    mb.run(lambda b: b)
+    s = mb.stats()
+    assert s["requests_done"] == 5
+    assert s["steps"] == 2 and s["real_rows"] == 5 and s["padded_rows"] == 0
+    assert s["batch_seconds"] > 0
+    assert s["latency_mean_s"] > 0 and s["latency_p95_s"] >= s["latency_mean_s"]
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def tick(self):
+        self.t += 0.5
+        return self.t
+
+
+def test_bucket_validation():
+    with pytest.raises(ValueError):
+        Microbatcher(buckets=())
+    with pytest.raises(ValueError):
+        Microbatcher(buckets=(0, 4))
+    assert Microbatcher(buckets=(4, 1, 4)).buckets == (1, 4)

@@ -1,0 +1,228 @@
+"""Differential batch-invariance for the CNN serving engine.
+
+The engine's contract (DESIGN.md section 9): a request's logits do not depend
+on which microbatch served it.  Padded-microbatch logits must match a
+single-image ``cnn_forward`` bitwise under the integer policies (per-row
+activation scales + exact int32 limb accumulation) and to fp tolerance under
+fp32 (XLA may reassociate float accumulation across batch shapes) -- for all
+three of the paper's CNNs, through BOTH conv paths.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNN_ARCHS, get_config, reduced
+from repro.core.precision import MatmulPolicy
+from repro.core.substrate import QWeight
+from repro.models.cnn import ALEXNET, VGG16, VGG19, cnn_forward, cnn_init, cnn_quantize_params
+from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
+
+
+def _small(name, policy, path):
+    return reduced(get_config(name)).replace(policy=policy, conv_path=path)
+
+
+def _images(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(
+        (cfg.img_size, cfg.img_size, cfg.in_channels)).astype(np.float32)
+        for _ in range(n)]
+
+
+def _solo_logits(cfg, params, img):
+    """Reference: the jitted single-image forward on the same param tree."""
+    fwd = jax.jit(lambda p, x: cnn_forward(p, cfg, x))
+    return np.asarray(fwd(params, jnp.asarray(img[None])))[0]
+
+
+@pytest.mark.parametrize("arch", ["alexnet", "vgg16", "vgg19"])
+@pytest.mark.parametrize("path", ["im2col", "systolic"])
+def test_batch_invariance_int_policy(arch, path):
+    """Padded-microbatch logits == single-image logits, BITWISE."""
+    cfg = _small(arch, MatmulPolicy.KOM_INT14, path)
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    eng = CNNServeEngine(cfg, params, buckets=(4,))
+    imgs = _images(cfg, 3)  # 3 real rows + 1 zero-padded row per microbatch
+    for uid, img in enumerate(imgs):
+        eng.submit(ImageRequest(uid=uid, image=img))
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2]
+    assert eng.batcher.padded_rows == 1
+    qp = cnn_quantize_params(params, cfg)
+    for uid, img in enumerate(imgs):
+        solo = _solo_logits(cfg, qp, img)
+        np.testing.assert_array_equal(
+            done[uid].logits, solo,
+            err_msg=f"{arch}/{path}: batch-mates changed request {uid}")
+
+
+@pytest.mark.parametrize("arch", ["alexnet", "vgg16", "vgg19"])
+@pytest.mark.parametrize("path", ["im2col", "systolic"])
+def test_batch_invariance_fp32(arch, path):
+    """fp32: same contract to float tolerance (XLA may retile per shape)."""
+    cfg = _small(arch, MatmulPolicy.FP32, path)
+    params = cnn_init(cfg, jax.random.PRNGKey(1))
+    eng = CNNServeEngine(cfg, params, buckets=(4,))
+    imgs = _images(cfg, 3, seed=1)
+    for uid, img in enumerate(imgs):
+        eng.submit(ImageRequest(uid=uid, image=img))
+    done = eng.run()
+    # float policy: no prequantization happened
+    assert not any(isinstance(l, QWeight)
+                   for l in jax.tree.leaves(
+                       eng.params,
+                       is_leaf=lambda x: isinstance(x, QWeight)))
+    for uid, img in enumerate(imgs):
+        solo = _solo_logits(cfg, eng.params, img)
+        np.testing.assert_allclose(done[uid].logits, solo,
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{arch}/{path}")
+
+
+def test_schoolbook_policy_also_bitwise():
+    cfg = _small("alexnet", MatmulPolicy.SCHOOLBOOK_INT16, "im2col")
+    params = cnn_init(cfg, jax.random.PRNGKey(2))
+    eng = CNNServeEngine(cfg, params, buckets=(1, 4))
+    imgs = _images(cfg, 5, seed=2)
+    for uid, img in enumerate(imgs):
+        eng.submit(ImageRequest(uid=uid, image=img))
+    done = eng.run()
+    qp = cnn_quantize_params(params, cfg)
+    for uid in (0, 4):  # one from the full bucket, one from the tail
+        np.testing.assert_array_equal(done[uid].logits,
+                                      _solo_logits(cfg, qp, imgs[uid]))
+
+
+# -- engine behavior ----------------------------------------------------------
+
+def test_mixed_size_request_stream_all_cnns():
+    """Acceptance: mixed-size streams for all three registered CNN configs
+    with prequantized int-policy weights."""
+    assert CNN_ARCHS == ["alexnet", "vgg16", "vgg19"]
+    for arch in CNN_ARCHS:
+        cfg = _small(arch, MatmulPolicy.KOM_INT14, "im2col")
+        params = cnn_init(cfg, jax.random.PRNGKey(0))
+        eng = CNNServeEngine(cfg, params, buckets=(1, 4))
+        # weights became cached QWeight leaves ONCE at engine build
+        is_q = lambda x: isinstance(x, QWeight)
+        n_q = sum(map(is_q, jax.tree.leaves(eng.params, is_leaf=is_q)))
+        n_w = sum(1 for p in params if "w" in p)
+        assert n_q == n_w > 0, arch
+        uid = 0
+        for burst in (1, 5, 2):  # mixed burst sizes -> mixed buckets
+            for _ in range(burst):
+                eng.submit(ImageRequest(uid=uid, image=_images(cfg, 1)[0]))
+                uid += 1
+            eng.run()
+        assert sorted(eng.batcher.queue.done) == list(range(8))
+        s = eng.stats()
+        assert s["images_done"] == 8
+        assert set(k for k, v in s["bucket_counts"].items() if v) <= {1, 4}
+        assert all(lat > 0 for lat in eng.batcher.queue.latencies())
+
+
+def test_engine_data_parallel_mesh_matches_single_device():
+    """shard_map over a launch.mesh mesh: same bitwise logits, batch axis
+    sharded over 'data', buckets rounded to the dp degree."""
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = _small("alexnet", MatmulPolicy.KOM_INT14, "im2col")
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    imgs = _images(cfg, 3)
+    mesh = make_host_mesh(1, 1)
+    eng_mesh = CNNServeEngine(cfg, params, buckets=(1, 4), mesh=mesh)
+    eng_solo = CNNServeEngine(cfg, params, buckets=(1, 4))
+    assert eng_mesh.dp == 1 and eng_mesh.buckets == (1, 4)
+    for uid, img in enumerate(imgs):
+        eng_mesh.submit(ImageRequest(uid=uid, image=img))
+        eng_solo.submit(ImageRequest(uid=uid, image=img))
+    dm, ds = eng_mesh.run(), eng_solo.run()
+    for uid in dm:
+        np.testing.assert_array_equal(dm[uid].logits, ds[uid].logits)
+
+
+def test_engine_data_parallel_dp2_subprocess():
+    """dp=2: the REAL sharded path (batch axis split over two host devices,
+    buckets rounded up to the dp degree, host unpad after the gather) must
+    reproduce the single-device engine bitwise.  Needs its own process for
+    the device-count flag (conftest forbids it globally)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        from repro.configs import get_config, reduced
+        from repro.core.precision import MatmulPolicy
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.cnn import cnn_init
+        from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
+        assert jax.device_count() == 2
+        cfg = reduced(get_config('alexnet')).replace(
+            policy=MatmulPolicy.KOM_INT14, conv_path='im2col')
+        params = cnn_init(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        imgs = [rng.standard_normal((cfg.img_size, cfg.img_size, 3))
+                .astype(np.float32) for _ in range(3)]
+        mesh = make_host_mesh(2, 1)
+        eng = CNNServeEngine(cfg, params, buckets=(1, 4, 6), mesh=mesh)
+        assert eng.dp == 2 and eng.buckets == (2, 4, 6), eng.buckets
+        solo = CNNServeEngine(cfg, params, buckets=(1, 4, 6))
+        for uid, img in enumerate(imgs):
+            eng.submit(ImageRequest(uid=uid, image=img))
+            solo.submit(ImageRequest(uid=uid, image=img))
+        dm, ds = eng.run(), solo.run()
+        # 3 pending -> dp-rounded bucket 4 (one padded row per shard pair)
+        assert eng.batcher.bucket_counts[4] == 1, eng.batcher.bucket_counts
+        for uid in dm:
+            assert np.array_equal(dm[uid].logits, ds[uid].logits), uid
+        print('DP2_BITWISE_OK', len(dm))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "DP2_BITWISE_OK 3" in r.stdout
+
+
+def test_engine_rejects_wrong_image_shape():
+    cfg = _small("alexnet", MatmulPolicy.KOM_INT14, "im2col")
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    eng = CNNServeEngine(cfg, params, buckets=(1,))
+    with pytest.raises(ValueError, match="serves"):
+        eng.submit(ImageRequest(uid=0, image=np.zeros((8, 8, 3), np.float32)))
+
+
+def test_warmup_precompiles_every_bucket():
+    cfg = _small("alexnet", MatmulPolicy.KOM_INT14, "im2col")
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    eng = CNNServeEngine(cfg, params, buckets=(1, 2))
+    eng.warmup()
+    sizes = eng._forward._cache_size()
+    assert sizes == 2  # one executable per bucket shape, none at serve time
+
+
+# -- full-size sweeps (paper-scale images; not in the default lane) -----------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("full_cfg", [ALEXNET, VGG16, VGG19],
+                         ids=lambda c: c.name)
+def test_full_size_serving_sweep(full_cfg):
+    """Full 227/224 images through the engine under the paper's multiplier."""
+    cfg = dataclasses.replace(full_cfg, policy=MatmulPolicy.KOM_INT14,
+                              conv_path="im2col")
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    eng = CNNServeEngine(cfg, params, buckets=(2,))
+    for uid, img in enumerate(_images(cfg, 2)):
+        eng.submit(ImageRequest(uid=uid, image=img))
+    done = eng.run()
+    assert sorted(done) == [0, 1]
+    for r in done.values():
+        assert r.logits.shape == (cfg.n_classes,)
+        assert np.isfinite(r.logits).all()
