@@ -2,20 +2,28 @@
 AlexNet, VGG16, VGG19, and what the KOM multiplier saves on each.
 
 For every conv layer: im2col-GEMM FLOPs, MXU passes under each multiplier,
-and the KOM saving.  One CPU wall measurement per network (first conv layer,
-jnp im2col path) keeps the table grounded in an executed number, and one
-end-to-end serving row per network per conv path (reduced config, the
+the KOM saving, and the recombine count per output tile (kh*kw under the old
+per-tap schedule -> 1 under the single-recombine contract, DESIGN.md section
+7.3).  One CPU wall measurement per network (first conv layer, jnp im2col
+path) keeps the table grounded in an executed number, a fused-vs-unfused
+epilogue wall row shows what folding bias+ReLU into the conv call buys, and
+one end-to-end serving row per network per conv path (reduced config, the
 bucketed :class:`~repro.serving.cnn_engine.CNNServeEngine` with weights
 prequantized once) grounds the ROADMAP's throughput story in images/sec.
+
+``--smoke`` (used by CI): reduced configs and single-step measurements only,
+so the whole serving/benchmark path executes in seconds and cannot rot.
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import MatmulPolicy
-from repro.core.substrate import conv2d, quantize_weight
+from repro.core.substrate import conv2d, quantize_weight, select_conv_path
 from repro.models.cnn import ALEXNET, VGG16, VGG19, cnn_init, cnn_reduced
 from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
 
@@ -42,15 +50,27 @@ def _conv_layers(cfg):
             break
 
 
-def run(emit):
+def run(emit, smoke: bool = False):
     rng = np.random.default_rng(0)
+    iters, warmup, n_serve = (1, 1, 4) if smoke else (5, 1, 12)
     for cfg in (ALEXNET, VGG16, VGG19):
         total_flops = 0.0
         kernel_counts = {}
-        for (k, cin, cout, stride, h, oh) in _conv_layers(cfg):
+        for li, (k, cin, cout, stride, h, oh) in enumerate(_conv_layers(cfg)):
             flops = 2.0 * oh * oh * cout * (k * k * cin)
             total_flops += flops
             kernel_counts[k] = kernel_counts.get(k, 0) + cout
+            # single-recombine contract: exactly 1 recombine per output tile
+            # on both engines (systolic: int32 accumulators across all taps,
+            # was kh*kw per tile under the old per-tap schedule; im2col: the
+            # GEMM's K-block scratch).  Path = what TPU dispatch would pick
+            # for this layer shape (DESIGN.md section 7.1).
+            path = select_conv_path(kh=k, kw=k, stride=stride, cin=cin,
+                                    cout=cout, on_tpu=True)
+            was = k * k if path == "systolic" else 1
+            emit(f"convnets/{cfg.name}/recombines/conv{li}", 0.0,
+                 f"k={k} cin={cin} path={path} taps={k * k} "
+                 f"recombines_per_tile=1 was={was}")
         for pol in ("kom_int14", "schoolbook_int16", "native_bf16"):
             passes, rate = POLICY_MODEL[pol]
             v5e_ms = total_flops * passes / (PEAK_BF16 * rate) * 1e3
@@ -58,33 +78,50 @@ def run(emit):
                  f"conv_gflops={total_flops/1e9:.2f} v5e_ms={v5e_ms:.3f}")
         emit(f"convnets/{cfg.name}/kernels", 0.0,
              " ".join(f"{k}x{k}:{c}" for k, c in sorted(kernel_counts.items())))
-        # executed spot-check: first conv layer, reduced batch, through the
-        # substrate entry point with the weight quantized ONCE up front
-        # (per-output-channel scales) -- the serving configuration.
-        (k, cin, cout, stride, h, _) = next(_conv_layers(cfg))
+        # executed spot-check: first conv layer through the substrate entry
+        # point with the weight quantized ONCE up front (per-output-channel
+        # scales) -- the serving configuration.  --smoke uses the reduced
+        # twin so CI measures the same code path in milliseconds.
+        layer_cfg = cnn_reduced(cfg) if smoke else cfg
+        (k, cin, cout, stride, h, _) = next(_conv_layers(layer_cfg))
+        pad = "VALID" if cfg.name == "alexnet" else "SAME"
         x = jnp.array(rng.standard_normal((1, h, h, cin)), jnp.float32)
         w = jnp.array(rng.standard_normal((k, k, cin, cout)) * 0.1, jnp.float32)
+        b = jnp.array(rng.standard_normal((cout,)), jnp.float32)
         qw = quantize_weight(w)
-        fn = jax.jit(lambda a, b: conv2d(
-            a, b, stride=stride,
-            padding="VALID" if cfg.name == "alexnet" else "SAME",
+        fn = jax.jit(lambda a, wq: conv2d(
+            a, wq, stride=stride, padding=pad,
             policy=MatmulPolicy.KOM_INT14, path="im2col"))
-        us = time_call(fn, x, qw, iters=5, warmup=1)
+        us = time_call(fn, x, qw, iters=iters, warmup=warmup)
         emit(f"convnets/{cfg.name}/first_layer_kom_wall", us,
              f"k={k} cin={cin} cout={cout}")
+        # fused vs unfused epilogue: one conv2d(..., bias, relu) call vs the
+        # conv -> +bias -> relu round-trip pipeline, same layer, same weights.
+        fused = jax.jit(lambda a, wq: conv2d(
+            a, wq, stride=stride, padding=pad,
+            policy=MatmulPolicy.KOM_INT14, path="im2col",
+            bias=b, activation="relu"))
+        unfused = jax.jit(lambda a, wq: jax.nn.relu(conv2d(
+            a, wq, stride=stride, padding=pad,
+            policy=MatmulPolicy.KOM_INT14, path="im2col") + b))
+        us_f = time_call(fused, x, qw, iters=iters, warmup=warmup)
+        us_u = time_call(unfused, x, qw, iters=iters, warmup=warmup)
+        emit(f"convnets/{cfg.name}/fused_epilogue_wall", us_f,
+             f"unfused_us={us_u:.2f} fused_us={us_f:.2f} "
+             f"speedup={us_u / us_f if us_f else 0.0:.2f}x")
         # end-to-end serving: images/sec through the bucketed engine per
         # conv path (reduced config on CPU; weights prequantized once,
         # every steady-state step a jit cache hit after warmup).
         small = cnn_reduced(cfg).replace(policy=MatmulPolicy.KOM_INT14)
         params = cnn_init(small, jax.random.PRNGKey(0))
         for path in ("im2col", "systolic"):
-            # buckets the 12-image stream actually hits (8+4): warming an
-            # unused bucket would cost a whole interpret-mode Pallas compile
+            # buckets the image stream actually hits: warming an unused
+            # bucket would cost a whole interpret-mode Pallas compile
             eng = CNNServeEngine(small.replace(conv_path=path), params,
-                                 buckets=(4, 8))
+                                 buckets=(4,) if smoke else (4, 8))
             eng.warmup()
             h, c = small.img_size, small.in_channels
-            for uid in range(12):
+            for uid in range(n_serve):
                 img = rng.standard_normal((h, h, c)).astype(np.float32)
                 eng.submit(ImageRequest(uid=uid, image=img))
             eng.run()
@@ -94,3 +131,18 @@ def run(emit):
                  f"img_per_s={s['images_per_s']:.1f} "
                  f"pad={s['padding_fraction']:.2f} img={small.img_size} "
                  f"p95_ms={1e3 * s['latency_p95_s']:.1f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs, 1-step measurements (CI lane)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}",
+                                           flush=True),
+        smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -54,6 +54,17 @@ def policy_int_spec(policy) -> Optional[tuple[str, int]]:
     return INT_POLICY_SPECS.get(getattr(policy, "value", policy))
 
 
+def systolic_exact(policy) -> bool:
+    """True iff the systolic conv engine implements ``policy`` exactly.
+
+    That is the integer limb policies plus fp32 (native f32 dots).  The one
+    definition shared by :func:`conv2d`'s dispatch/refusal and the serve
+    launcher's arg-parse-time guard -- the policy set must not fork.
+    """
+    return (policy_int_spec(policy) is not None
+            or getattr(policy, "value", policy) == "fp32")
+
+
 # ---------------------------------------------------------------------------
 # Limb decomposition: the one implementation of the balanced digit split.
 # ---------------------------------------------------------------------------
@@ -215,12 +226,13 @@ def quantize_symmetric(
     *,
     qmax: int | None = None,
     base_bits: int = 7,
-    axis: Optional[int] = None,
+    axis: Optional[int | tuple[int, ...]] = None,
 ) -> QTensor:
     """Symmetric (zero-point-free) quantization.
 
-    ``axis``: None -> per-tensor scale; an int -> per-slice scales along that
-    axis (e.g. per-output-feature for weights), kept broadcastable.
+    ``axis``: None -> per-tensor scale; an int or tuple of ints -> per-slice
+    scales along those KEPT axes (e.g. per-output-feature for weights, all
+    leading axes for per-row activation quant), kept broadcastable.
     """
     if qmax is None:
         qmax = kom_qmax(base_bits)
@@ -228,7 +240,8 @@ def quantize_symmetric(
     if axis is None:
         amax = jnp.max(jnp.abs(x))
     else:
-        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        keep = (axis,) if isinstance(axis, int) else tuple(axis)
+        reduce_axes = tuple(i for i in range(x.ndim) if i not in keep)
         amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
     scale = jnp.maximum(amax, 1e-12) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
@@ -337,21 +350,25 @@ def prequant_dot_general(
 
     The serving hot path: the weight's limbs come from int16 storage (no
     per-forward requantization); only the activation is quantized on the fly.
-    For the canonical (m, k) x (k, n) case each activation ROW gets its own
-    scale (a row is one token / one im2col patch), so a request's logits are
-    bit-identical whatever batch-mates or padding rows it is served with --
-    the batch-invariance contract the serving engines test differentially
-    (DESIGN.md section 9.3).  Non-matmul dimension numbers fall back to a
-    per-tensor scale.
+    For ANY last-dim contraction -- (m, k), (b, t, k), deeper stacks -- each
+    activation ROW (all leading axes) gets its own scale (a row is one token
+    / one im2col patch), so a request's logits are bit-identical whatever
+    batch-mates or padding rows it is served with, without callers having to
+    pre-flatten -- the batch-invariance contract the serving engines test
+    differentially (DESIGN.md section 9.3).  Only genuinely non-matmul
+    dimension numbers (batched or non-trailing contractions) fall back to a
+    per-tensor scale, which voids per-row invariance and is documented as
+    such.
 
     INFERENCE-ONLY: unlike the quantize-on-the-fly policy path (which
     installs a straight-through VJP), this path refuses differentiation --
     training must run on the float params and quantize at deployment.
     """
     x = _inference_only(x)  # raises under jax.grad instead of silent zeros
-    per_row = dimension_numbers == MATMUL_DNUMS and x.ndim == 2
+    (lcs, _), (lb, rb) = dimension_numbers
+    per_row = tuple(lcs) == (x.ndim - 1,) and not lb and not rb
     qx = quantize_symmetric(x, base_bits=w.base_bits,
-                            axis=0 if per_row else None)
+                            axis=tuple(range(x.ndim - 1)) if per_row else None)
     raw = limb_dot_general(
         qx.values, w.values.astype(jnp.int32), dimension_numbers,
         variant=variant, base_bits=w.base_bits,
@@ -422,32 +439,46 @@ def conv2d(
     padding: str = "SAME",
     policy="native_bf16",
     path: str = "auto",
+    bias: jax.Array | None = None,
+    activation: Optional[str] = None,
     interpret: bool | None = None,
 ):
-    """NHWC conv behind one policy-driven entry point.
+    """NHWC conv behind one policy-driven entry point, epilogue fused.
 
     ``w`` is an HWIO float array or a cached :class:`QWeight`.  ``path`` is
     ``"auto"`` (shape-driven, :func:`select_conv_path`), ``"im2col"`` or
-    ``"systolic"``.  Integer policies run every tap/GEMM on the limb
-    substrate; on the systolic path float policies run native f32 dots, so
-    ``"auto"`` only routes policies the systolic engine implements exactly
-    (the integer policies and fp32) -- multi-pass bf16 emulation policies
-    stay on im2col rather than being silently downgraded.
+    ``"systolic"``.  ``bias`` (cout,) and ``activation`` ("relu") are fused
+    into the conv epilogue on both paths -- together with the dequant scale
+    under integer policies, a conv layer is ONE call and one HBM write
+    instead of three round-trips (DESIGN.md section 7.3).
+
+    Integer policies run every contraction on the limb substrate.  The
+    systolic engine implements exactly the integer policies and fp32;
+    ``"auto"`` keeps the multi-pass bf16 emulation policies on im2col, and
+    an EXPLICIT ``path="systolic"`` with such a policy raises rather than
+    silently downgrading to native f32 dots.
     """
     # Lazy imports: systolic/kernels import this module for the limb core.
     from .systolic import conv2d_im2col
     from repro.kernels.conv2d import conv2d_systolic
 
     kh, kw, cin, cout = w.shape
+    exact = systolic_exact(policy)
     if path == "auto":
         path = select_conv_path(kh=kh, kw=kw, stride=stride, cin=cin, cout=cout)
-        systolic_exact = (policy_int_spec(policy) is not None
-                          or getattr(policy, "value", policy) == "fp32")
-        if path == "systolic" and not systolic_exact:
+        if path == "systolic" and not exact:
             path = "im2col"
     if path == "im2col":
-        return conv2d_im2col(x, w, stride=stride, padding=padding, policy=policy)
+        return conv2d_im2col(x, w, stride=stride, padding=padding,
+                             policy=policy, bias=bias, activation=activation)
     if path == "systolic":
+        if not exact:
+            raise ValueError(
+                f"path='systolic' cannot run policy "
+                f"{getattr(policy, 'value', policy)!r} exactly: the systolic "
+                "engine implements the integer limb policies and fp32 only, "
+                "and multi-pass bf16 emulation must not silently become "
+                "native f32 dots -- use path='auto' or path='im2col'")
         spec = policy_int_spec(policy)
         if spec is None:
             variant, base_bits = "native", 7
@@ -457,6 +488,7 @@ def conv2d(
             variant, base_bits = spec
         return conv2d_systolic(
             x, w, stride=stride, padding=padding,
-            variant=variant, base_bits=base_bits, interpret=interpret,
+            variant=variant, base_bits=base_bits,
+            bias=bias, activation=activation, interpret=interpret,
         )
     raise ValueError(f"unknown conv path: {path!r}")

@@ -45,12 +45,16 @@ def conv2d_im2col(
     stride: int = 1,
     padding: str = "SAME",
     policy: MatmulPolicy = MatmulPolicy.NATIVE_BF16,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
 ) -> jax.Array:
     """NHWC conv as im2col-GEMM -- the MXU mapping of the systolic conv array.
 
     x: (n, h, w, cin); w: (kh, kw, cin, cout) float HWIO or a cached
     :class:`~repro.core.substrate.QWeight`.  The GEMM goes through the
-    precision policy, so conv layers inherit the KOM path.
+    precision policy, so conv layers inherit the KOM path.  ``bias`` (cout,)
+    and ``activation`` ("relu") are applied post-GEMM in the same jit scope
+    -- the im2col half of the fused conv epilogue (DESIGN.md section 7.3).
     """
     kh, kw, cin, cout = w.shape
     _, _, pads = conv_pads(x.shape[1], x.shape[2], kh, kw, stride, padding)
@@ -71,7 +75,14 @@ def conv2d_im2col(
     else:
         wmat = w.transpose(2, 0, 1, 3).reshape(ck, cout)
     out = policy_matmul(cols, wmat, policy=policy)
-    return out.reshape(n, oh, ow, cout)
+    out = out.reshape(n, oh, ow, cout)
+    if bias is not None:
+        out = out + bias
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation is not None:
+        raise ValueError(f"unknown activation: {activation!r}")
+    return out
 
 
 def pool2d(x: jax.Array, *, window: int, stride: int, kind: str = "max") -> jax.Array:

@@ -8,14 +8,33 @@ operand (index maps i and i+1), so no overlapping-BlockSpec support is
 needed and the halo never round-trips through HBM.
 
 Variants:
-  native     -- dots in the input dtype (bf16/f32) -> f32.
-  karatsuba  -- inputs are pre-quantized integers; every tap runs the 3-pass
-                limb decomposition (the paper's multiplier).
+  native     -- dots in the input dtype (bf16/f32) -> one f32 accumulator.
+  karatsuba  -- inputs are pre-quantized integers; the 3-pass limb
+                decomposition (the paper's multiplier).
   schoolbook -- same integer path with the 4-pass schedule.
 
-The limb split/schedule is NOT reimplemented here: each tap calls the shared
-:func:`repro.core.substrate.limb_dot_general` builder, the same code path as
-``kom_dot_general`` and the KOM GEMM kernel (DESIGN.md section 2.3).
+Single-recombine contract (DESIGN.md section 7.3): the integer variants keep
+THREE int32 partial accumulators (acc_hh / acc_mid / acc_ll) across all
+KH*KW taps via the shared :func:`repro.core.substrate.limb_partials` and call
+:func:`repro.core.substrate.limb_recombine` exactly ONCE per output tile, in
+the epilogue -- the same dataflow as the KOM GEMM kernel's VMEM scratch
+accumulators, and the TPU analogue of the FPGA design's partial-product
+registers.  (The old per-tap ``limb_dot_general`` paid kh*kw recombines per
+tile AND summed the taps in f32, silently losing bit-exactness once partial
+sums passed 2^24 -- the deep-Cin VGG layers.)
+
+Overflow bound: each int32 accumulator element sums kh*kw*cin digit-product
+terms.  :func:`int_accum_bound` gives the worst case (the Karatsuba mid
+accumulator dominates at 6*half^2 per term); the ops wrapper checks it fits
+int31 and falls back to the im2col-GEMM otherwise, so the kernel itself only
+asserts.
+
+The dequant scale (per-sample x per-channel) is fused into the kernel
+epilogue, immediately after the single recombine.  Bias add + activation are
+fused one level up, in the ops wrapper's jit scope (one user-level call, one
+XLA epilogue fusion): folding them into the kernel body itself would let the
+backend contract the dequant multiply and the bias add into an FMA, breaking
+the bitwise fused==unfused contract (see _conv_kernel).
 """
 from __future__ import annotations
 
@@ -25,42 +44,88 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.substrate import limb_dot_general
+from repro.core.substrate import limb_partials, limb_recombine
 
 _CIN_DNUMS = (((2,), (0,)), ((), ()))  # (bh, WO, Cin) x (Cin, bc)
 
 
-def _tap_dot(patch, wtap, *, variant, base_bits):
-    """(bh, WO, Cin) x (Cin, bc) -> (bh, WO, bc) under the chosen multiplier."""
-    if variant == "native":
-        return jax.lax.dot_general(
-            patch, wtap, _CIN_DNUMS, preferred_element_type=jnp.float32
-        )
-    # KOM: narrow passes per tap via the shared limb substrate.
-    return limb_dot_general(
-        patch, wtap, _CIN_DNUMS, variant=variant, base_bits=base_bits
-    )
+def int_accum_bound(kh: int, kw: int, cin: int, *, variant: str,
+                    base_bits: int) -> int:
+    """Worst-case |value| of the widest int32 partial accumulator element.
+
+    Balanced digits lie in [-half, half-1], half = 2^(base_bits-1).  Per
+    contraction term the mid accumulator is bounded by 6*half^2 for Karatsuba
+    (|(Ah+Al)(Bh+Bl)| <= 4*half^2 plus the subtracted p_hh and p_ll) and
+    2*half^2 for schoolbook (Ah*Bl + Al*Bh); hh/ll terms are at most half^2.
+    The systolic path accumulates kh*kw*cin such terms in int32, so callers
+    must keep this below 2^31 (the ops wrapper falls back to im2col when a
+    layer shape violates it; every systolic-routed layer of AlexNet/VGG16/
+    VGG19 satisfies it -- the deepest, 3x3 cin=512, with ~19x headroom).
+    """
+    half = 1 << (base_bits - 1)
+    per_term = (6 if variant == "karatsuba" else 2) * half * half
+    return per_term * kh * kw * cin
 
 
 def _conv_kernel(
-    x0_ref, x1_ref, w_ref, o_ref, *, kh, kw, stride, bh, wo, variant, base_bits
+    *refs, kh, kw, stride, bh, wo, variant, base_bits, has_scale,
 ):
+    it = iter(refs)
+    x0_ref, x1_ref, w_ref = next(it), next(it), next(it)
+    scale_ref = next(it) if has_scale else None
+    o_ref = next(it)
+    bc = o_ref.shape[-1]
+
     # Two row-blocks give bh*stride*2 input rows: enough for the halo since
     # bh*stride >= (kh - stride) is checked at call time.
     x = jnp.concatenate([x0_ref[0], x1_ref[0]], axis=0)  # (2*bh*s, W, Cin)
-    acc = jnp.zeros((bh, wo, o_ref.shape[-1]), jnp.float32)
-    for dy in range(kh):
-        for dx in range(kw):
-            rows = jax.lax.slice(
-                x,
-                (dy, dx, 0),
-                (dy + (bh - 1) * stride + 1, dx + (wo - 1) * stride + 1, x.shape[2]),
-                (stride, stride, 1),
-            )  # (bh, wo, Cin)
-            acc = acc + _tap_dot(
-                rows, w_ref[dy, dx], variant=variant, base_bits=base_bits
+
+    def taps():
+        for dy in range(kh):
+            for dx in range(kw):
+                yield jax.lax.slice(
+                    x,
+                    (dy, dx, 0),
+                    (dy + (bh - 1) * stride + 1,
+                     dx + (wo - 1) * stride + 1, x.shape[2]),
+                    (stride, stride, 1),
+                ), w_ref[dy, dx]  # (bh, wo, Cin), (Cin, bc)
+
+    if variant == "native":
+        out = jnp.zeros((bh, wo, bc), jnp.float32)
+        for rows, wtap in taps():
+            out = out + jax.lax.dot_general(
+                rows, wtap, _CIN_DNUMS, preferred_element_type=jnp.float32
             )
-    o_ref[0] = acc
+    else:
+        # Three int32 partial accumulators held across ALL kh*kw taps -- the
+        # partial-product registers.  |acc| < 2^31 by int_accum_bound.
+        acc_hh = jnp.zeros((bh, wo, bc), jnp.int32)
+        acc_mid = jnp.zeros((bh, wo, bc), jnp.int32)
+        acc_ll = jnp.zeros((bh, wo, bc), jnp.int32)
+        for rows, wtap in taps():
+            p_hh, p_mid, p_ll = limb_partials(
+                rows, wtap, _CIN_DNUMS, variant=variant, base_bits=base_bits
+            )
+            acc_hh = acc_hh + p_hh
+            acc_mid = acc_mid + p_mid
+            acc_ll = acc_ll + p_ll
+        # The ONE recombine per output tile (grep-tested single call site).
+        out = limb_recombine(
+            acc_hh, acc_mid, acc_ll, base_bits=base_bits, dtype=jnp.float32
+        )
+
+    # Kernel epilogue: the dequant scale rides the single recombine's output.
+    # Bias/activation deliberately live one level up (the ops wrapper, same
+    # jit scope): an in-kernel mul+add gets contracted into an FMA by the
+    # backend (even across lax.optimization_barrier), which would skip the
+    # dequant multiply's own rounding and drift the fused logits one ulp off
+    # the unfused pipeline -- the bitwise fused==unfused differential
+    # contract (DESIGN.md section 7.3).  The pallas output materialization
+    # is what pins fl(raw*scale) before the bias add.
+    if has_scale:
+        out = out * scale_ref[...]          # (1, bc) broadcasts over (bh, wo, bc)
+    o_ref[0] = out
 
 
 def conv2d_systolic_raw(
@@ -73,21 +138,32 @@ def conv2d_systolic_raw(
     block_c: int = 128,
     variant: str = "native",
     base_bits: int = 7,
+    scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """x: (N, H, W, Cin) pre-padded; w: (KH, KW, Cin, Cout).
 
     ``variant``: "native" | "karatsuba" | "schoolbook".
 
-    Requirements (the ops wrapper arranges them):
+    ``scale`` (N, Cout, optional) is the per-sample x per-channel dequant
+    product, multiplied in the kernel epilogue right after the single
+    recombine.  Requirements (the ops wrapper arranges them):
       * out_h (output rows to produce; default derived from H) divisible by
         block_h,
       * H >= (out_h/block_h + 1) * block_h * stride  (one spare halo block),
-      * Cout divisible by block_c.
-    Returns (N, out_h, WO, Cout) raw f32 (KOM variant: un-dequantized).
+      * Cout divisible by block_c,
+      * integer variants: int_accum_bound(kh, kw, cin) < 2^31.
+    Returns (N, out_h, WO, Cout) f32 (un-dequantized unless ``scale`` given).
     """
     n, h, wdim, cin = x.shape
     kh, kw, _, cout = w.shape
+    if variant != "native":
+        bound = int_accum_bound(kh, kw, cin, variant=variant,
+                                base_bits=base_bits)
+        assert bound < 2**31, (
+            f"int32 accumulator overflow: worst case {bound} >= 2^31 for "
+            f"kh*kw*cin={kh * kw * cin}; route this layer through im2col"
+        )
     ho = out_h if out_h is not None else (h - kh) // stride + 1
     wo = (wdim - kw) // stride + 1
     bh = block_h
@@ -102,23 +178,30 @@ def conv2d_systolic_raw(
         _conv_kernel,
         kh=kh, kw=kw, stride=stride, bh=bh, wo=wo,
         variant=variant, base_bits=base_bits,
+        has_scale=scale is not None,
     )
     row_rows = bh * stride
     nin_blocks = h // row_rows
+    in_specs = [
+        pl.BlockSpec(
+            (1, row_rows, wdim, cin), lambda i, j, c: (i, j, 0, 0)
+        ),
+        pl.BlockSpec(
+            (1, row_rows, wdim, cin),
+            lambda i, j, c, nb=nin_blocks: (i, jnp.minimum(j + 1, nb - 1), 0, 0),
+        ),
+        pl.BlockSpec((kh, kw, cin, bc), lambda i, j, c: (0, 0, 0, c)),
+    ]
+    operands = [x, x, w]  # x bound twice: row-blocks i and i+1 form the halo
+    if scale is not None:
+        assert scale.shape == (n, cout), (scale.shape, (n, cout))
+        in_specs.append(pl.BlockSpec((1, bc), lambda i, j, c: (i, c)))
+        operands.append(scale.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(
-                (1, row_rows, wdim, cin), lambda i, j, c: (i, j, 0, 0)
-            ),
-            pl.BlockSpec(
-                (1, row_rows, wdim, cin),
-                lambda i, j, c, nb=nin_blocks: (i, jnp.minimum(j + 1, nb - 1), 0, 0),
-            ),
-            pl.BlockSpec((kh, kw, cin, bc), lambda i, j, c: (0, 0, 0, c)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bh, wo, bc), lambda i, j, c: (i, j, 0, c)),
         out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), jnp.float32),
         interpret=interpret,
-    )(x, x, w)  # x bound twice: row-blocks i and i+1 form the halo
+    )(*operands)

@@ -2,9 +2,16 @@
 
 Handles SAME/VALID padding (via the substrate's shared plan), the spare halo
 row-block, output-channel padding and -- for the integer variants --
-quantization + fused dequantization.  Weights may arrive as a cached
-:class:`~repro.core.substrate.QWeight` (quantized once, per-output-channel
-scales), in which case only the activations are quantized per call.
+quantization plus the fused dequantization/bias/activation epilogue.
+Weights may arrive as a cached :class:`~repro.core.substrate.QWeight`
+(quantized once, per-output-channel scales), in which case only the
+activations are quantized per call.
+
+The int32 accumulator overflow bound (:func:`~repro.kernels.conv2d.conv2d.
+int_accum_bound`) is checked here: a layer whose kh*kw*cin is too deep for
+exact int32 partial accumulation falls back to the im2col-GEMM path (which
+tiles the contraction inside the KOM GEMM kernel) instead of silently
+wrapping around.
 """
 from __future__ import annotations
 
@@ -13,9 +20,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.substrate import QWeight, conv_pads, quantize_symmetric
+from repro.core.substrate import (
+    INT_POLICY_SPECS,
+    QWeight,
+    conv_pads,
+    quantize_symmetric,
+)
 
-from .conv2d import conv2d_systolic_raw
+from .conv2d import conv2d_systolic_raw, int_accum_bound
 
 
 def _default_interpret() -> bool:
@@ -37,7 +49,7 @@ def _plan(h, w, kh, kw, stride, padding, block_h):
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "block_h", "block_c", "variant",
-                     "base_bits", "interpret"),
+                     "base_bits", "activation", "interpret"),
 )
 def conv2d_systolic(
     x: jax.Array,
@@ -49,16 +61,26 @@ def conv2d_systolic(
     block_c: int = 128,
     variant: str = "native",
     base_bits: int = 7,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """NHWC conv through the Pallas systolic engine.
+    """NHWC conv through the Pallas systolic engine, epilogue fused.
 
     variant='native': dots in input dtype.  variant='karatsuba' (alias
-    'kom') / 'schoolbook': run every tap as narrow limb passes on the shared
-    substrate, dequantizing the result (the paper's conv layer, end to end).
-    Integer variants symmetric-quantize the activations per call; ``w`` may
-    be a float HWIO array (quantized per-tensor on the fly) or a QWeight
-    (cached int16 values + per-output-channel scales, quantized once).
+    'kom') / 'schoolbook': narrow limb passes on the shared substrate with
+    THREE int32 partial accumulators across all taps and a single recombine
+    in the kernel epilogue (the paper's conv layer, end to end).  Integer
+    variants symmetric-quantize the activations per SAMPLE per call; ``w``
+    may be a float HWIO array (quantized per-tensor on the fly) or a QWeight
+    (cached int16 values + per-output-channel scales, quantized once).  The
+    dequant scale, optional ``bias`` (Cout,) and ``activation`` ("relu") are
+    folded into the kernel epilogue -- no extra HBM round-trips.
+
+    Layers too deep for exact int32 partial accumulation
+    (int_accum_bound >= 2^31, e.g. kh*kw*cin beyond ~87k for int14) reroute
+    to :func:`~repro.core.systolic.conv2d_im2col` under the matching integer
+    policy rather than overflowing.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -66,6 +88,23 @@ def conv2d_systolic(
         variant = "karatsuba"
     n, h, wdim, cin = x.shape
     kh, kw, _, cout = w.shape
+    if isinstance(w, QWeight) and variant != "native":
+        base_bits = w.base_bits  # cached weights carry their own digit base
+    if (variant != "native"
+            and int_accum_bound(kh, kw, cin, variant=variant,
+                                base_bits=base_bits) >= 2**31):
+        # Exact int32 tap accumulation impossible at this depth: the im2col
+        # GEMM tiles the kh*kw*cin contraction across K blocks instead.
+        policy = {spec: name for name, spec in INT_POLICY_SPECS.items()}.get(
+            (variant, base_bits))
+        if policy is None:
+            raise ValueError(
+                f"kh*kw*cin={kh * kw * cin} overflows int32 partial "
+                f"accumulation for variant={variant!r}/base_bits={base_bits} "
+                "and no integer policy matches for the im2col fallback")
+        from repro.core.systolic import conv2d_im2col
+        return conv2d_im2col(x, w, stride=stride, padding=padding,
+                             policy=policy, bias=bias, activation=activation)
     block_h = min(block_h, 32)
     while block_h * stride < kh - stride:  # halo feasibility
         block_h *= 2
@@ -73,7 +112,6 @@ def conv2d_systolic(
     scale = None
     if variant != "native":
         if isinstance(w, QWeight):
-            base_bits = w.base_bits
             w_vals, w_scale = w.values, w.scale  # cached: no requantization
         else:
             qw = quantize_symmetric(w, base_bits=base_bits)
@@ -81,24 +119,40 @@ def conv2d_systolic(
         # Per-SAMPLE activation scales (axis 0): each image's quantization is
         # independent of its batch-mates, so a request's output is identical
         # whatever microbatch it rides in (the engines' batch-invariance
-        # contract, DESIGN.md section 9.3).  Scale shape (n,1,1,1) broadcasts
-        # against the (n, ho, wo, cout) output below.
+        # contract, DESIGN.md section 9.3).  The per-sample x per-channel
+        # dequant product is folded into the kernel epilogue as an (n, cout)
+        # operand.
         qx = quantize_symmetric(x, base_bits=base_bits, axis=0)
         x = qx.values.astype(jnp.int16)
         w = w_vals.astype(jnp.int16)
-        scale = qx.scale * w_scale  # (n,1,1,1) x (scalar | (cout,))
+        ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(-1),
+                              (cout,))
+        scale = qx.scale.reshape(n, 1) * ws[None, :]  # (n, cout)
     elif isinstance(w, QWeight):
         raise TypeError("variant='native' expects a float weight, not QWeight")
     xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
     bc = min(block_c, cout)
     pc = (-cout) % bc
-    wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pc))) if pc else w
+    if pc:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pc)))
+        if scale is not None:
+            scale = jnp.pad(scale, ((0, 0), (0, pc)))
     out = conv2d_systolic_raw(
-        xp, wp,
+        xp, w,
         stride=stride, out_h=ho_pad, block_h=block_h, block_c=bc,
-        variant=variant, base_bits=base_bits, interpret=interpret,
+        variant=variant, base_bits=base_bits, scale=scale,
+        interpret=interpret,
     )
     out = out[:, :ho, :wo, :cout]
-    if scale is not None:
-        out = out * scale  # (n,1,1,1)|(n,1,1,cout) broadcasts batch+channel
+    # Fused epilogue, wrapper half: bias + activation in the same jit scope
+    # (one XLA elementwise fusion over the kernel's output).  Kept OUTSIDE
+    # the Pallas body so the dequant multiply's rounding is pinned by the
+    # kernel output materialization -- in-kernel mul+add would be contracted
+    # to an FMA, breaking bitwise fused==unfused (see conv2d.py).
+    if bias is not None:
+        out = out + bias
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation is not None:
+        raise ValueError(f"unknown activation: {activation!r}")
     return out

@@ -100,6 +100,16 @@ def main(argv=None):
     if cfg.family == "cnn":
         if args.conv_path:
             cfg = cfg.replace(conv_path=args.conv_path)
+        if cfg.conv_path == "systolic":
+            # Fail at arg-parse time, not mid-warmup: the systolic engine
+            # only runs the integer limb policies and fp32 exactly
+            # (substrate.conv2d raises the same refusal, DESIGN.md 7.1).
+            from repro.core.substrate import systolic_exact
+            if not systolic_exact(cfg.policy):
+                ap.error(
+                    f"--conv-path systolic cannot run policy "
+                    f"{cfg.policy.value!r} exactly; pass --policy "
+                    "kom_int14 | schoolbook_int16 | fp32")
         return _serve_cnn(cfg, args)
     return _serve_lm(cfg, args)
 

@@ -157,26 +157,30 @@ def cnn_forward(params, cfg: CNNConfig, x):
     ``params`` may hold float weights or cached QWeight leaves (from
     :func:`cnn_quantize_params`); both route through the same substrate.
     """
-    i = 0
     first_conv = True
-    for spec in cfg.layers:
+    for i, spec in enumerate(cfg.layers):
         p = params[i]
         if spec[0] == "conv":
             _, k, cout, stride = spec
             padding = "VALID" if (cfg.name == "alexnet" and first_conv) else "SAME"
             first_conv = False
+            # One fused call per conv layer: bias add + ReLU (and the dequant
+            # scale under integer policies) ride the conv epilogue instead of
+            # three HBM round-trips (DESIGN.md section 7.3).
             x = conv2d(x, p["w"], stride=stride, padding=padding,
-                       policy=cfg.policy, path=cfg.conv_path) + p["b"]
-            x = jax.nn.relu(x)
+                       policy=cfg.policy, path=cfg.conv_path,
+                       bias=p["b"], activation="relu")
         elif spec[0] == "pool":
             x = pool2d(x, window=2, stride=2, kind="max")
         else:
             if x.ndim == 4:
                 x = x.reshape(x.shape[0], -1)
             x = policy_linear(x, p["w"], policy=cfg.policy) + p["b"]
-            if spec != cfg.layers[-1]:
+            # Positional check: every FC but the classifier head gets ReLU.
+            # (Comparing specs by VALUE would skip ReLU on any hidden FC whose
+            # spec equals the classifier's, e.g. duplicate ("fc", n) layers.)
+            if i != len(cfg.layers) - 1:
                 x = jax.nn.relu(x)
-        i += 1
     return x
 
 

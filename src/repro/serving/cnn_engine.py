@@ -19,6 +19,12 @@ discipline on the KOM substrate:
     activations only, with per-row scales so a request's logits are
     bit-identical whatever batch-mates or padding it is served with
     (DESIGN.md section 9).
+  * **Fused conv epilogue** -- the forward it serves is
+    :func:`~repro.models.cnn.cnn_forward`, whose conv layers issue ONE fused
+    ``conv2d(..., bias=..., activation="relu")`` call each (dequant scale +
+    bias + ReLU in the conv epilogue, DESIGN.md section 7.3); the engine
+    needs no knowledge of the fusion and serves bitwise-identical logits to
+    the unfused pipeline under the integer policies.
   * **Data parallelism** -- pass a ``launch.mesh`` mesh and the batch axis
     is sharded over its data axes via ``shard_map`` (params replicated);
     buckets are rounded up to multiples of the data-parallel degree so

@@ -86,6 +86,18 @@ class RequestQueue:
             self.timing[req.uid].admitted = now
         return admitted
 
+    def requeue_front(self, reqs: Sequence[Any]) -> None:
+        """Return admitted-but-unserved requests to the HEAD of the queue.
+
+        Used when a forward fails after admission: the requests go back in
+        their original relative order ahead of everything newer (FIFO
+        preserved), and their admission stamp is cleared so ``queue_wait``
+        reflects the admission that actually served them.
+        """
+        self._pending[:0] = list(reqs)
+        for req in reqs:
+            self.timing[req.uid].admitted = None
+
     def finish(self, req) -> None:
         self.timing[req.uid].completed = self._clock()
         self.done[req.uid] = req
@@ -169,12 +181,20 @@ class Microbatcher:
         admitted = self.queue.take(bucket)
         batch = pad_batch([r._payload for r in admitted], bucket)
         t0 = self._clock()
-        out = np.asarray(run_batch(batch))
+        try:
+            out = np.asarray(run_batch(batch))
+            if out.shape[0] != bucket:
+                raise ValueError(
+                    f"run_batch returned leading dim {out.shape[0]}, "
+                    f"expected bucket {bucket}")
+        except BaseException:
+            # A failed forward (OOM, bad shape) must not lose its admitted
+            # requests: they are neither pending nor done at this point.
+            # Re-queue them at the FRONT -- FIFO preserved, step counters
+            # untouched, payloads still attached -- then re-raise.
+            self.queue.requeue_front(admitted)
+            raise
         dt = self._clock() - t0
-        if out.shape[0] != bucket:
-            raise ValueError(
-                f"run_batch returned leading dim {out.shape[0]}, "
-                f"expected bucket {bucket}")
         self.steps += 1
         self.real_rows += len(admitted)
         self.padded_rows += bucket - len(admitted)

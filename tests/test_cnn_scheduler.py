@@ -147,6 +147,45 @@ def test_microbatcher_rejects_bad_forward():
     mb.submit(Req(0), np.zeros((2,), np.float32))
     with pytest.raises(ValueError, match="leading dim"):
         mb.step(lambda b: b[:1])  # stub dropped the padded row on device
+    # ... and even then the admitted request is NOT lost (requeued at front)
+    assert [r.uid for r in mb.queue.pending] == [0]
+
+
+def test_step_requeues_admitted_requests_on_forward_failure():
+    """A forward that raises (OOM, bad shape) must not lose the admitted
+    microbatch: requests go back to the FRONT of the queue in order, step
+    counters stay untouched, and the exception propagates.  A retry then
+    serves the same requests FIFO."""
+    mb = Microbatcher(buckets=(1, 4))
+    for uid in range(6):  # first microbatch admits 0..3, leaves 4..5 pending
+        mb.submit(Req(uid), np.full((2,), uid, np.float32))
+    attempts = []
+
+    def flaky(batch):
+        attempts.append(batch.shape)
+        if len(attempts) == 1:
+            raise RuntimeError("device OOM")
+        return batch[:, :1]
+
+    with pytest.raises(RuntimeError, match="OOM"):
+        mb.step(flaky)
+    # neither lost nor done; FIFO preserved ahead of the un-admitted tail
+    assert [r.uid for r in mb.queue.pending] == [0, 1, 2, 3, 4, 5]
+    assert mb.queue.done == {}
+    # counters untouched by the failed step
+    assert (mb.steps, mb.real_rows, mb.padded_rows) == (0, 0, 0)
+    assert mb.bucket_counts == {1: 0, 4: 0}
+    assert mb.step_log == []
+    # admission stamp cleared: queue_wait will reflect the serving admission
+    assert all(mb.queue.timing[u].admitted is None for u in range(4))
+    # the retry succeeds and serves the SAME requests, oldest first
+    done = mb.step(flaky)
+    assert [r.uid for r, _ in done] == [0, 1, 2, 3]
+    assert [float(v[0]) for _, v in done] == [0.0, 1.0, 2.0, 3.0]
+    assert (mb.steps, mb.real_rows) == (1, 4)
+    mb.run(flaky)
+    assert sorted(mb.queue.done) == list(range(6))
+    assert attempts == [(4, 2), (4, 2), (4, 2)]  # tail of 2 pads to bucket 4
 
 
 def test_microbatcher_step_on_empty_queue():

@@ -1,0 +1,300 @@
+"""The systolic conv kernel's single-recombine contract + fused epilogue.
+
+Three claims (ISSUE 3 / DESIGN.md section 7.3):
+
+  1. **Single recombine.** The integer variants accumulate the three limb
+     partial products in int32 across ALL kh*kw taps and call
+     ``limb_recombine`` exactly once per output tile -- grep-enforced the
+     same way as the limb split's single definition, and verified bitwise
+     against an int64-exact partial accumulation at deep Cin, where the old
+     per-tap f32 recombine demonstrably diverges (partial sums past 2^24).
+  2. **Overflow bound.** |digit product| * kh*kw*cin must fit int31
+     (``int_accum_bound``); the ops wrapper reroutes too-deep layers to the
+     im2col GEMM (which tiles the contraction) instead of wrapping around.
+  3. **Fused epilogue.** ``conv2d(..., bias=..., activation="relu")`` is
+     bitwise equal to the unfused conv -> +bias -> relu pipeline for the
+     integer policies on BOTH conv paths, eager and jitted, end to end
+     through ``cnn_forward`` and ``CNNServeEngine``.
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.precision import MatmulPolicy
+from repro.core.substrate import (
+    balanced_split,
+    conv2d,
+    kom_qmax,
+    limb_recombine,
+    policy_int_spec,
+    quantize_weight,
+)
+from repro.core.systolic import pool2d
+from repro.kernels.conv2d.conv2d import conv2d_systolic_raw, int_accum_bound
+from repro.models.cnn import cnn_forward, cnn_init, cnn_quantize_params
+from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
+
+rng = np.random.default_rng(0)
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+CONV_KERNEL = SRC / "repro" / "kernels" / "conv2d" / "conv2d.py"
+
+
+# -- 1a. the grep contract ----------------------------------------------------
+
+def test_conv_kernel_recombines_exactly_once():
+    """Exactly ONE limb_recombine call site in the conv kernel (executed once
+    per output tile), and no per-tap limb_dot_general left."""
+    text = CONV_KERNEL.read_text()
+    assert text.count("limb_recombine(") == 1, (
+        "the systolic conv kernel must recombine once per output tile")
+    assert "limb_dot_general(" not in text, (
+        "per-tap recombine (limb_dot_general per tap) must stay deleted")
+    # the partials accumulate through the shared schedule, not a local copy
+    assert "limb_partials(" in text
+
+
+# -- 1b. deep-Cin bit-exactness against the int64-exact accumulation ----------
+
+def _exact_partials(x, w, *, variant, base_bits, ho, wo):
+    """int64-exact accumulation of the three limb partials over all taps."""
+    split = lambda v: tuple(np.asarray(d, np.int64)
+                            for d in balanced_split(jnp.asarray(v), base_bits))
+    xh, xl = split(x)
+    wh, wl = split(w)
+    kh, kw = w.shape[:2]
+    shape = x.shape[:1] + (ho, wo, w.shape[-1])
+    acc_hh = np.zeros(shape, np.int64)
+    acc_mid = np.zeros(shape, np.int64)
+    acc_ll = np.zeros(shape, np.int64)
+    for dy in range(kh):
+        for dx in range(kw):
+            ah, al = (v[:, dy:dy + ho, dx:dx + wo, :] for v in (xh, xl))
+            bh, bl = wh[dy, dx], wl[dy, dx]
+            p_hh = np.einsum("nhwc,co->nhwo", ah, bh)
+            p_ll = np.einsum("nhwc,co->nhwo", al, bl)
+            if variant == "karatsuba":
+                p_mid = np.einsum("nhwc,co->nhwo", ah + al, bh + bl) - p_hh - p_ll
+            else:
+                p_mid = (np.einsum("nhwc,co->nhwo", ah, bl)
+                         + np.einsum("nhwc,co->nhwo", al, bh))
+            acc_hh += p_hh
+            acc_mid += p_mid
+            acc_ll += p_ll
+    return acc_hh, acc_mid, acc_ll
+
+
+def _deep_cin_case(variant, base_bits, cin, k=3, wo_in=10, seed=0):
+    r = np.random.default_rng(seed)
+    qm = kom_qmax(base_bits)
+    # ho=8 = one row block; +8 spare halo rows as conv2d_systolic_raw requires
+    x = r.integers(-qm, qm + 1, (1, 8 + k - 1 + 8, wo_in, cin)).astype(np.int32)
+    w = r.integers(-qm, qm + 1, (k, k, cin, 128)).astype(np.int32)
+    return x, w
+
+
+def _old_per_tap_recombine(acc_parts, x, w, *, variant, base_bits, ho, wo):
+    """Emulate the OLD kernel: recombine every tap in f32, sum taps in f32."""
+    split = lambda v: tuple(np.asarray(d, np.int64)
+                            for d in balanced_split(jnp.asarray(v), base_bits))
+    xh, xl = split(x)
+    wh, wl = split(w)
+    kh, kw = w.shape[:2]
+    beta = np.float32(1 << base_bits)
+    old = np.zeros(x.shape[:1] + (ho, wo, w.shape[-1]), np.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            ah, al = (v[:, dy:dy + ho, dx:dx + wo, :] for v in (xh, xl))
+            bh, bl = wh[dy, dx], wl[dy, dx]
+            p_hh = np.einsum("nhwc,co->nhwo", ah, bh)
+            p_ll = np.einsum("nhwc,co->nhwo", al, bl)
+            if variant == "karatsuba":
+                p_mid = np.einsum("nhwc,co->nhwo", ah + al, bh + bl) - p_hh - p_ll
+            else:
+                p_mid = (np.einsum("nhwc,co->nhwo", ah, bl)
+                         + np.einsum("nhwc,co->nhwo", al, bh))
+            old = old + (p_hh.astype(np.float32) * beta * beta
+                         + p_mid.astype(np.float32) * beta
+                         + p_ll.astype(np.float32))
+    return old
+
+
+def _assert_deep_cin_exact(variant, base_bits, cin):
+    x, w = _deep_cin_case(variant, base_bits, cin)
+    k = w.shape[0]
+    ho, wo = 8, x.shape[2] - k + 1
+    got = np.asarray(conv2d_systolic_raw(
+        jnp.asarray(x, jnp.int16), jnp.asarray(w, jnp.int16),
+        stride=1, out_h=ho, variant=variant, base_bits=base_bits,
+        interpret=True))
+    acc_hh, acc_mid, acc_ll = _exact_partials(
+        x, w, variant=variant, base_bits=base_bits, ho=ho, wo=wo)
+    bound = int_accum_bound(k, k, cin, variant=variant, base_bits=base_bits)
+    assert bound < 2**31
+    for acc in (acc_hh, acc_mid, acc_ll):  # the int32 kernel can be exact
+        assert np.abs(acc).max() <= bound
+    # The kernel's single f32 recombine of EXACT partials, via the same
+    # shared limb_recombine it calls -- must match BITWISE.
+    ref = np.asarray(limb_recombine(
+        jnp.asarray(acc_hh, jnp.int32), jnp.asarray(acc_mid, jnp.int32),
+        jnp.asarray(acc_ll, jnp.int32), base_bits=base_bits,
+        dtype=jnp.float32))
+    np.testing.assert_array_equal(got, ref, err_msg=(
+        f"{variant}/cin={cin}: kernel partial accumulation is not exact"))
+    # ... where the old per-tap f32 recombine demonstrably was NOT exact:
+    # partial sums pass 2^24 and the tap-by-tap f32 summation loses bits.
+    old = _old_per_tap_recombine(
+        None, x, w, variant=variant, base_bits=base_bits, ho=ho, wo=wo)
+    exact = acc_hh * (1 << base_bits) ** 2 + acc_mid * (1 << base_bits) + acc_ll
+    assert np.abs(exact).max() > 2**24
+    assert not np.array_equal(old, ref), (
+        "deep-Cin case too shallow to expose the per-tap recombine bug")
+    # and the fix strictly reduces the error against the exact int64 value
+    err_new = np.abs(ref.astype(np.float64) - exact).max()
+    err_old = np.abs(old.astype(np.float64) - exact).max()
+    assert err_new < err_old
+
+
+def test_deep_cin_exactness_kom():
+    """cin=256 (VGG-depth): int-policy systolic conv == int64-exact partial
+    accumulation + the single shared recombine, bitwise."""
+    _assert_deep_cin_exact("karatsuba", 7, 256)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant,base_bits", [("karatsuba", 7),
+                                               ("schoolbook", 8)])
+@pytest.mark.parametrize("cin", [256, 512])
+def test_deep_cin_exactness_sweep(variant, base_bits, cin):
+    _assert_deep_cin_exact(variant, base_bits, cin)
+
+
+# -- 2. the int32 overflow bound ----------------------------------------------
+
+def test_int_accum_bound_model():
+    # karatsuba b=7: mid term worst case 6 * 64^2 per contraction element
+    assert int_accum_bound(3, 3, 64, variant="karatsuba", base_bits=7) \
+        == 6 * 64 * 64 * 9 * 64
+    # schoolbook b=8: 2 * 128^2 per element
+    assert int_accum_bound(1, 1, 1, variant="schoolbook", base_bits=8) \
+        == 2 * 128 * 128
+    # every systolic-routed layer of the paper's CNNs has headroom
+    for k, cin in [(3, 512), (5, 256), (7, 512)]:
+        assert int_accum_bound(k, k, cin, variant="karatsuba", base_bits=7) \
+            < 2**31
+
+
+def test_overflow_bound_falls_back_to_im2col(monkeypatch):
+    """A layer too deep for exact int32 accumulation reroutes to the im2col
+    GEMM (contraction tiled there) instead of silently wrapping around."""
+    import repro.core.systolic as systolic_mod
+    from repro.kernels.conv2d import conv2d_systolic
+
+    k, cin = 7, 1792  # 6*64^2 * 7*7*1792 = 2.16e9 >= 2^31
+    assert int_accum_bound(k, k, cin, variant="karatsuba", base_bits=7) \
+        >= 2**31
+    calls = []
+    real = systolic_mod.conv2d_im2col
+    monkeypatch.setattr(systolic_mod, "conv2d_im2col",
+                        lambda *a, **kw: calls.append(kw) or real(*a, **kw))
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, cin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, cin, 8)) * 0.05, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    out = conv2d_systolic(x, w, variant="karatsuba", base_bits=7,
+                          bias=b, activation="relu")
+    assert len(calls) == 1
+    assert calls[0]["policy"] == "kom_int14"  # limb substrate preserved
+    assert calls[0]["bias"] is not None and calls[0]["activation"] == "relu"
+    # jitted like the fallback (conv2d_systolic is jitted) so both sides get
+    # the same XLA fusion choices on the dequant chain -> bitwise comparable
+    ref = np.asarray(jax.jit(lambda a, kw_, bb: real(
+        a, kw_, policy=MatmulPolicy.KOM_INT14, bias=bb,
+        activation="relu"))(x, w, b))
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    # shallow layers never take the fallback
+    calls.clear()
+    conv2d_systolic(x[..., :64], w[:3, :3, :64], variant="karatsuba")
+    assert calls == []
+
+
+# -- 3. fused epilogue bitwise == unfused -------------------------------------
+
+INT_POLICIES = [MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16]
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+@pytest.mark.parametrize("path", ["im2col", "systolic"])
+def test_fused_conv_bitwise_equals_unfused(policy, path):
+    x = jnp.asarray(rng.standard_normal((2, 16, 16, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 8, 16)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((16,)), jnp.float32)
+    qw = quantize_weight(w, base_bits=policy_int_spec(policy)[1])
+    fused = jax.jit(lambda v: conv2d(v, qw, policy=policy, path=path,
+                                     bias=b, activation="relu"))(x)
+    unfused = jax.jit(lambda v: jax.nn.relu(
+        conv2d(v, qw, policy=policy, path=path) + b))(x)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+    # eager regime too (no whole-pipeline jit to homogenize fusion choices)
+    np.testing.assert_array_equal(
+        np.asarray(conv2d(x, qw, policy=policy, path=path,
+                          bias=b, activation="relu")),
+        np.asarray(jax.nn.relu(conv2d(x, qw, policy=policy, path=path) + b)))
+
+
+def test_unknown_activation_rejected():
+    x = jnp.zeros((1, 8, 8, 4), jnp.float32)
+    w = jnp.zeros((3, 3, 4, 8), jnp.float32)
+    for path in ("im2col", "systolic"):
+        with pytest.raises(ValueError, match="activation"):
+            conv2d(x, w, policy=MatmulPolicy.FP32, path=path,
+                   activation="gelu")
+
+
+def _unfused_forward(params, cfg, x):
+    """The PRE-fusion pipeline: conv -> +bias -> relu as separate calls."""
+    first_conv = True
+    for i, spec in enumerate(cfg.layers):
+        p = params[i]
+        if spec[0] == "conv":
+            padding = ("VALID" if (cfg.name == "alexnet" and first_conv)
+                       else "SAME")
+            first_conv = False
+            x = conv2d(x, p["w"], stride=spec[3], padding=padding,
+                       policy=cfg.policy, path=cfg.conv_path) + p["b"]
+            x = jax.nn.relu(x)
+        elif spec[0] == "pool":
+            x = pool2d(x, window=2, stride=2, kind="max")
+        else:
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            from repro.core.precision import policy_linear
+            x = policy_linear(x, p["w"], policy=cfg.policy) + p["b"]
+            if i != len(cfg.layers) - 1:
+                x = jax.nn.relu(x)
+    return x
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+@pytest.mark.parametrize("path", ["im2col", "systolic"])
+def test_fused_forward_bitwise_through_serving_engine(policy, path):
+    """End to end: cnn_forward's fused conv layers, served through
+    CNNServeEngine, produce logits bitwise equal to the unfused pipeline."""
+    cfg = reduced(get_config("alexnet")).replace(policy=policy,
+                                                 conv_path=path)
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    qp = cnn_quantize_params(params, cfg)
+    imgs = [np.asarray(
+        rng.standard_normal((cfg.img_size, cfg.img_size, 3)), np.float32)
+        for _ in range(3)]
+    eng = CNNServeEngine(cfg, params, buckets=(4,))  # fused forward inside
+    for uid, img in enumerate(imgs):
+        eng.submit(ImageRequest(uid=uid, image=img))
+    done = eng.run()
+    unfused = jax.jit(lambda p, v: _unfused_forward(p, cfg, v))
+    for uid, img in enumerate(imgs):
+        ref = np.asarray(unfused(qp, jnp.asarray(img[None])))[0]
+        np.testing.assert_array_equal(done[uid].logits, ref, err_msg=(
+            f"{policy.value}/{path}: fused serving logits != unfused"))

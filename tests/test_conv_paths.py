@@ -37,9 +37,11 @@ def _case(k, h=23, cin=4, cout=8, seed=0):
 def test_native_paths_match_xla(k, s, pad):
     x, w = _case(k)
     ref = conv2d_ref(x, w, stride=s, padding=pad)
+    # fp32 is the one float policy the systolic engine implements exactly
+    # (explicit systolic + bf16 emulation policies raise, tested below).
     for path in ("im2col", "systolic"):
-        policy = MatmulPolicy.FP32 if path == "im2col" else MatmulPolicy.NATIVE_BF16
-        got = conv2d(x, w, stride=s, padding=pad, policy=policy, path=path)
+        got = conv2d(x, w, stride=s, padding=pad,
+                     policy=MatmulPolicy.FP32, path=path)
         assert got.shape == ref.shape, (path, got.shape, ref.shape)
         rel = float(jnp.abs(got - ref).max() / jnp.abs(ref).max())
         assert rel < 1e-4, (path, rel)
@@ -121,6 +123,22 @@ def test_auto_never_downgrades_multipass_policies(monkeypatch):
     # int + fp32 policies are allowed through to the systolic engine
     out = substrate.conv2d(x, w, policy=MatmulPolicy.KOM_INT14, path="auto")
     assert float(jnp.abs(out - ref).max() / jnp.abs(ref).max()) < 1e-2
+
+
+@pytest.mark.parametrize("policy", [MatmulPolicy.BF16X3, MatmulPolicy.BF16X6,
+                                    MatmulPolicy.NATIVE_BF16])
+def test_explicit_systolic_rejects_inexact_policies(policy):
+    """Explicit path='systolic' with a bf16-emulation policy must raise, not
+    silently run native f32 dots -- the same silent downgrade path='auto'
+    refuses (DESIGN.md section 7.1)."""
+    x, w = _case(3)
+    with pytest.raises(ValueError, match="systolic"):
+        conv2d(x, w, policy=policy, path="systolic")
+    # auto still reroutes those policies to im2col instead of raising,
+    # and explicit systolic stays open for the exact policies.
+    conv2d(x, w, policy=policy, path="auto")
+    conv2d(x, w, policy=MatmulPolicy.FP32, path="systolic")
+    conv2d(x, w, policy=MatmulPolicy.KOM_INT14, path="systolic")
 
 
 @pytest.mark.parametrize("pad", ["SAME", "VALID"])

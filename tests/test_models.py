@@ -88,6 +88,39 @@ def test_cnn_forward(cfg, sz):
     assert bool(jnp.isfinite(loss))
 
 
+def test_hidden_fc_relu_fires_for_duplicate_specs():
+    """Regression: ReLU placement is POSITIONAL, not spec-value-based.
+
+    With three identical ("fc", n) specs (e.g. cnn_reduced(..., max_fc=16,
+    n_classes=16)), comparing `spec != cfg.layers[-1]` matched every hidden
+    FC against the classifier's spec by VALUE and silently skipped their
+    ReLUs, leaving a linear head stack.  Drive the second hidden FC fully
+    negative: with ReLU its output is exactly 0, so the logits are exactly
+    the classifier bias."""
+    from repro.models.cnn import CNNConfig, cnn_reduced
+
+    dup = cnn_reduced(VGG16, max_fc=16, n_classes=16)
+    fc_specs = [s for s in dup.layers if s[0] == "fc"]
+    assert fc_specs == [("fc", 16)] * 3  # the duplicate-spec trap
+    cfg = CNNConfig("dupfc", (("fc", 8), ("fc", 8), ("fc", 8)),
+                    img_size=4, in_channels=2, n_classes=8,
+                    policy=MatmulPolicy.FP32)
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    params[1]["b"] = jnp.full((8,), -1e3, jnp.float32)  # pre-ReLU all < 0
+    params[2]["b"] = jnp.arange(8, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 4, 2))
+    logits = cnn_forward(params, cfg, x)
+    # hidden ReLU fired -> layer-2 input is exactly zero -> logits == bias
+    np.testing.assert_array_equal(
+        np.asarray(logits),
+        np.broadcast_to(np.arange(8, dtype=np.float32), (3, 8)))
+    # the classifier head itself must stay linear (logits may go negative)
+    neg = dataclasses.replace(cfg)
+    p2 = cnn_init(neg, jax.random.PRNGKey(0))
+    p2[2]["b"] = jnp.full((8,), -5.0, jnp.float32)
+    assert float(cnn_forward(p2, neg, x).min()) < 0
+
+
 def test_cnn_kom_policy_close_to_fp32():
     small = dataclasses.replace(VGG16, img_size=32,
                                 policy=MatmulPolicy.KOM_INT14)

@@ -122,3 +122,30 @@ def test_balanced_split_edge_magnitudes(bb):
     np.testing.assert_array_equal(
         np.asarray(hi).astype(np.int64) * (1 << bb) + np.asarray(lo),
         np.asarray(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5), st.integers(1, 6),
+       st.integers(1, 24))
+def test_prequant_3d_batch_invariance_bitwise(seed, b, t, k):
+    """prequant_dot_general quantizes per ROW over ALL leading axes: a
+    (B, T, k) activation stack served whole is BITWISE equal to serving each
+    batch entry alone -- callers need not pre-flatten, and no entry's
+    logits depend on its batch-mates (the serving invariance contract)."""
+    from repro.core.substrate import prequant_dot_general, quantize_weight
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, t, k)).astype(np.float32)
+    # wildly different row magnitudes: a per-tensor fallback would couple them
+    x *= rng.uniform(1e-3, 1e3, (b, t, 1)).astype(np.float32)
+    w = quantize_weight(jnp.array(
+        rng.standard_normal((k, 8)).astype(np.float32)))
+    dn3 = (((2,), (0,)), ((), ()))
+    full = np.asarray(prequant_dot_general(jnp.array(x), w, dn3))
+    for i in range(b):
+        solo = np.asarray(prequant_dot_general(jnp.array(x[i:i + 1]), w, dn3))
+        np.testing.assert_array_equal(full[i], solo[0])
+    # and the 3D result equals the pre-flattened 2D call (same scales/rows)
+    flat = np.asarray(prequant_dot_general(
+        jnp.array(x.reshape(-1, k)), w)).reshape(b, t, 8)
+    np.testing.assert_array_equal(full, flat)

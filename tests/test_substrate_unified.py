@@ -55,10 +55,15 @@ def test_kernels_import_shared_limb_core():
     conv_mod = importlib.import_module("repro.kernels.conv2d.conv2d")
     gemm_mod = importlib.import_module("repro.kernels.kom_matmul.kom_matmul")
 
-    assert conv_mod.limb_dot_general is substrate.limb_dot_general
+    # Both Pallas kernels accumulate partials and recombine once via the
+    # SHARED schedule -- neither re-implements it (nor the digit split).
+    assert conv_mod.limb_partials is substrate.limb_partials
+    assert conv_mod.limb_recombine is substrate.limb_recombine
     assert gemm_mod.limb_partials is substrate.limb_partials
+    assert gemm_mod.limb_recombine is substrate.limb_recombine
     assert not hasattr(conv_mod, "_split_limbs")
     assert not hasattr(gemm_mod, "_split_limbs")
+    assert not hasattr(conv_mod, "limb_dot_general")  # per-tap recombine gone
 
 
 # -- deterministic exactness (hypothesis-free core coverage) ------------------
@@ -140,6 +145,25 @@ def test_prequant_dot_matches_float():
     ref = np.asarray(x) @ w
     rel = np.abs(np.asarray(out) - ref).max() / np.abs(ref).max()
     assert rel < 2e-3, rel
+
+
+def test_prequant_3d_per_row_batch_invariance():
+    """Deterministic twin of the hypothesis property: non-2D activations on
+    a last-dim contraction get per-ROW scales over all leading axes (no
+    silent per-tensor fallback), so batch entries cannot couple and callers
+    need not pre-flatten.  Bitwise."""
+    x = rng.standard_normal((3, 5, 16)).astype(np.float32)
+    x *= rng.uniform(1e-3, 1e3, (3, 5, 1)).astype(np.float32)  # wild rows
+    qw = quantize_weight(jnp.array(
+        rng.standard_normal((16, 8)).astype(np.float32)))
+    dn3 = (((2,), (0,)), ((), ()))
+    full = np.asarray(prequant_dot_general(jnp.array(x), qw, dn3))
+    for i in range(3):
+        solo = np.asarray(prequant_dot_general(jnp.array(x[i:i + 1]), qw, dn3))
+        np.testing.assert_array_equal(full[i], solo[0])
+    # identical to the pre-flattened 2D call: same rows, same scales
+    flat = np.asarray(prequant_dot_general(jnp.array(x.reshape(-1, 16)), qw))
+    np.testing.assert_array_equal(full, flat.reshape(3, 5, 8))
 
 
 def test_prequant_dot_refuses_differentiation():
