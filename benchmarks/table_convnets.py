@@ -11,12 +11,23 @@ one end-to-end serving row per network per conv path (reduced config, the
 bucketed :class:`~repro.serving.cnn_engine.CNNServeEngine` with weights
 prequantized once) grounds the ROADMAP's throughput story in images/sec.
 
+ISSUE 4 additions: per-layer implicit-GEMM vs materialized-im2col walls for
+the deep-Cin layers (the paper-scale VGG16 cin>=256 shapes, real channel
+widths even under ``--smoke``), the modeled HBM-bytes-per-image delta
+(materialized patch matrix vs streamed patches,
+:func:`repro.core.tuning.conv_hbm_bytes`), an ``implicit`` serving row, and
+``--json PATH`` emitting the whole run as a machine-readable perf record
+(per model x path x policy: images/sec, wall per step, HBM bytes) -- CI's
+smoke lane uploads it as an artifact so the bench trajectory stops being
+empty.
+
 ``--smoke`` (used by CI): reduced configs and single-step measurements only,
 so the whole serving/benchmark path executes in seconds and cannot rot.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -24,10 +35,24 @@ import numpy as np
 
 from repro.core.precision import MatmulPolicy
 from repro.core.substrate import conv2d, quantize_weight, select_conv_path
+from repro.core.tuning import conv_hbm_bytes
 from repro.models.cnn import ALEXNET, VGG16, VGG19, cnn_init, cnn_reduced
 from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
 
 from .common import PEAK_BF16, POLICY_MODEL, time_call
+
+#: The deep-Cin layers the implicit GEMM exists for (model, k, cin, cout,
+#: stride, feature-map size) -- REAL channel widths even in --smoke, since
+#: the acceptance claim is about cin >= 256 at paper scale.
+DEEP_LAYERS = {
+    "vgg16": [
+        (3, 256, 256, 1, 56),
+        (3, 256, 512, 1, 28),
+        (3, 512, 512, 1, 28),
+        (3, 512, 512, 1, 14),
+    ],
+}
+SMOKE_DEEP = {"vgg16": [(3, 256, 256, 1, 28), (3, 512, 512, 1, 14)]}
 
 
 def _conv_layers(cfg):
@@ -50,7 +75,57 @@ def _conv_layers(cfg):
             break
 
 
-def run(emit, smoke: bool = False):
+def _deep_layer_rows(emit, record, smoke: bool):
+    """Implicit-GEMM vs materialized im2col on the deep-Cin layers: wall,
+    images/sec and the modeled HBM-bytes-per-image delta (the ISSUE 4
+    acceptance rows)."""
+    rng = np.random.default_rng(7)
+    iters, warmup = (1, 1) if smoke else (3, 1)
+    layers = SMOKE_DEEP if smoke else DEEP_LAYERS
+    policies = ([MatmulPolicy.KOM_INT14] if smoke
+                else [MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16])
+    for model, shapes in layers.items():
+        for (k, cin, cout, stride, h) in shapes:
+            x = jnp.asarray(rng.standard_normal((1, h, h, cin)), jnp.float32)
+            w = jnp.asarray(
+                rng.standard_normal((k, k, cin, cout)) * 0.1, jnp.float32)
+            for pol in policies:
+                from repro.core.substrate import policy_int_spec
+                variant, base_bits = policy_int_spec(pol)
+                qw = quantize_weight(w, base_bits=base_bits)
+                walls = {}
+                for path in ("im2col", "implicit"):
+                    fn = jax.jit(lambda a, q, p=path: conv2d(
+                        a, q, stride=stride, padding="SAME",
+                        policy=pol, path=p))
+                    walls[path] = time_call(fn, x, qw, iters=iters,
+                                            warmup=warmup)
+                hbm = {path: conv_hbm_bytes(
+                    path, kh=k, kw=k, stride=stride, h=h, cin=cin, cout=cout,
+                    variant=variant, base_bits=base_bits)
+                    for path in ("im2col", "implicit")}
+                speedup = walls["im2col"] / walls["implicit"] \
+                    if walls["implicit"] else 0.0
+                name = (f"convnets/{model}/deep_layer"
+                        f"/k{k}_cin{cin}_cout{cout}_h{h}/{pol.value}")
+                emit(name, walls["implicit"],
+                     f"implicit_us={walls['implicit']:.1f} "
+                     f"im2col_us={walls['im2col']:.1f} "
+                     f"speedup={speedup:.2f}x "
+                     f"hbm_implicit_mb={hbm['implicit'] / 2**20:.1f} "
+                     f"hbm_im2col_mb={hbm['im2col'] / 2**20:.1f} "
+                     f"hbm_ratio={hbm['im2col'] / hbm['implicit']:.2f}x")
+                for path in ("im2col", "implicit"):
+                    record("layers", dict(
+                        model=model, k=k, cin=cin, cout=cout, stride=stride,
+                        h=h, policy=pol.value, path=path,
+                        wall_us=round(walls[path], 2),
+                        images_per_s=round(1e6 / walls[path], 3)
+                        if walls[path] else None,
+                        hbm_bytes_per_image=hbm[path]))
+
+
+def run(emit, smoke: bool = False, record=lambda *a, **k: None):
     rng = np.random.default_rng(0)
     iters, warmup, n_serve = (1, 1, 4) if smoke else (5, 1, 12)
     for cfg in (ALEXNET, VGG16, VGG19):
@@ -61,12 +136,14 @@ def run(emit, smoke: bool = False):
             total_flops += flops
             kernel_counts[k] = kernel_counts.get(k, 0) + cout
             # single-recombine contract: exactly 1 recombine per output tile
-            # on both engines (systolic: int32 accumulators across all taps,
-            # was kh*kw per tile under the old per-tap schedule; im2col: the
-            # GEMM's K-block scratch).  Path = what TPU dispatch would pick
-            # for this layer shape (DESIGN.md section 7.1).
+            # on every engine (systolic: int32 accumulators across all taps;
+            # im2col: the GEMM's K-block scratch; implicit: the per-K-block
+            # fold schedule, 1 group for every layer under the int31 bound).
+            # Path = what TPU dispatch picks for this layer shape on the
+            # cached-weight serving path (DESIGN.md sections 7.1/7.4).
             path = select_conv_path(kh=k, kw=k, stride=stride, cin=cin,
-                                    cout=cout, on_tpu=True)
+                                    cout=cout, on_tpu=True,
+                                    policy="kom_int14", cached_weight=True)
             was = k * k if path == "systolic" else 1
             emit(f"convnets/{cfg.name}/recombines/conv{li}", 0.0,
                  f"k={k} cin={cin} path={path} taps={k * k} "
@@ -114,7 +191,9 @@ def run(emit, smoke: bool = False):
         # every steady-state step a jit cache hit after warmup).
         small = cnn_reduced(cfg).replace(policy=MatmulPolicy.KOM_INT14)
         params = cnn_init(small, jax.random.PRNGKey(0))
-        for path in ("im2col", "systolic"):
+        for path in ("auto", "im2col", "systolic", "implicit"):
+            # "auto" is what users get: per-layer selection (thin stem on
+            # the small patch GEMM, deep layers streamed -- DESIGN.md 7.4).
             # buckets the image stream actually hits: warming an unused
             # bucket would cost a whole interpret-mode Pallas compile
             eng = CNNServeEngine(small.replace(conv_path=path), params,
@@ -126,22 +205,49 @@ def run(emit, smoke: bool = False):
                 eng.submit(ImageRequest(uid=uid, image=img))
             eng.run()
             s = eng.stats()
-            emit(f"convnets/{cfg.name}/serve_{path}",
-                 1e6 / s["images_per_s"] if s["images_per_s"] else 0.0,
+            wall_us = 1e6 / s["images_per_s"] if s["images_per_s"] else 0.0
+            emit(f"convnets/{cfg.name}/serve_{path}", wall_us,
                  f"img_per_s={s['images_per_s']:.1f} "
                  f"pad={s['padding_fraction']:.2f} img={small.img_size} "
                  f"p95_ms={1e3 * s['latency_p95_s']:.1f}")
+            record("serving", dict(
+                model=cfg.name, path=path, policy=small.policy.value,
+                images_per_s=round(s["images_per_s"], 3),
+                wall_us_per_image=round(wall_us, 2),
+                p95_ms=round(1e3 * s["latency_p95_s"], 3),
+                padding_fraction=round(s["padding_fraction"], 4),
+                img_size=small.img_size, reduced=True))
+    _deep_layer_rows(emit, record, smoke)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="reduced configs, 1-step measurements (CI lane)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the run as a machine-readable JSON "
+                         "perf record (e.g. BENCH_convnets.json)")
     args = ap.parse_args()
+    payload = {"schema": "bench-convnets/v1", "smoke": bool(args.smoke),
+               "backend": jax.default_backend(),
+               "records": [], "serving": [], "layers": []}
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.2f},{derived}", flush=True)
+        payload["records"].append({"name": name, "us_per_call": round(us, 2),
+                                   "derived": derived})
+
+    def record(section, row):
+        payload[section].append(row)
+
     print("name,us_per_call,derived")
-    run(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}",
-                                           flush=True),
-        smoke=args.smoke)
+    run(emit, smoke=args.smoke, record=record)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=False)
+        print(f"# wrote {args.json}: {len(payload['records'])} records, "
+              f"{len(payload['serving'])} serving rows, "
+              f"{len(payload['layers'])} layer rows")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,20 @@ def systolic_exact(policy) -> bool:
             or getattr(policy, "value", policy) == "fp32")
 
 
+#: Policies the implicit-GEMM conv engine implements exactly: the limb
+#: policies run on the shared substrate (per-PATCH activation scales), fp32
+#: runs native f32 dots, bf16x3/bf16x6 run their multi-pass emulation
+#: schedules per tap.  Only native_bf16 (whose bf16 accumulation is an
+#: XLA-convolution-level choice) stays on the materialized im2col path.
+IMPLICIT_POLICIES = frozenset(
+    {"kom_int14", "schoolbook_int16", "fp32", "bf16x3", "bf16x6"})
+
+
+def implicit_supported(policy) -> bool:
+    """True iff the implicit-GEMM conv engine implements ``policy`` exactly."""
+    return getattr(policy, "value", policy) in IMPLICIT_POLICIES
+
+
 # ---------------------------------------------------------------------------
 # Limb decomposition: the one implementation of the balanced digit split.
 # ---------------------------------------------------------------------------
@@ -402,33 +416,61 @@ def conv_pads(h, w, kh, kw, stride, padding):
 
 def select_conv_path(
     *, kh: int, kw: int, stride: int, cin: int, cout: int,
-    on_tpu: bool | None = None,
+    on_tpu: bool | None = None, policy=None, cached_weight: bool = False,
 ) -> str:
-    """Shape-driven conv dispatch (DESIGN.md section 7.1).
+    """Shape- and policy-driven conv dispatch (DESIGN.md sections 7.1/7.4).
 
-    The Pallas systolic engine wins when its row-block/halo scheme is cheap
-    and the channels fill the MXU; everything else goes through im2col-GEMM,
-    which handles any shape:
+    Shape rules (the systolic engine's niche -- whole-Cin taps, int16
+    activation streams -- is where its row-block/halo scheme is cheap and
+    the channels fill the MXU):
 
-      * off TPU: im2col (interpret-mode Pallas is a test vehicle, not a path);
-      * kernel > 7 or stride > 2: im2col -- the halo grows with kh-stride and
-        large strides waste most of each streamed row block (this routes the
-        AlexNet 11x11/stride-4 first layer to the GEMM);
-      * cin < 16: im2col -- each systolic tap contracts only over Cin, so
-        thin input channels starve the MXU; im2col contracts kh*kw*cin;
-      * cout not a multiple of 128: im2col -- channel blocks would pad lanes.
+      * kernel <= 7, stride <= 2, cin >= 16, cout % 128 == 0, on TPU, the
+        policy exact on the engine, and (for integer policies) a cached
+        weight -> ``systolic``;
+      * everything else used to mean the materialized im2col-GEMM.
+
+    With ``policy`` given, the implicit-GEMM engine is preferred over the
+    MATERIALIZED im2col path wherever it runs the policy exactly AND its
+    per-tap contraction is not starved:
+
+      * integer policies with a cached :class:`QWeight` (the serving path)
+        stream patches through ``implicit`` on every backend when
+        ``cin >= 16`` -- off-TPU the engine runs its bitwise lax mirror,
+        not interpret-mode Pallas.  Thin stems (``cin < 16``, e.g. the RGB
+        first layer) keep the SMALL patch GEMM: their per-tap contraction
+        depth starves any streaming engine (measured ~35x slower at
+        11x11/cin=3) while their patch matrix is only kh*kw*cin <~ 400
+        wide -- per-layer algorithm selection, exactly Shen et al.'s
+        point.  Float weights under an integer policy keep the im2col
+        straight-through-estimator path (it is the trainable one);
+      * fp32 / bf16x3 / bf16x6 stream through ``implicit`` on TPU (off-TPU
+        XLA's native patch GEMM is the right float call);
+      * native_bf16 stays on im2col (not implemented by either engine).
+
+    ``policy=None`` keeps the legacy shape-only rules (im2col/systolic).
     """
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
+    systolic_shape = (max(kh, kw) <= 7 and stride <= 2 and cin >= 16
+                      and cout % 128 == 0)
+    if policy is not None:
+        pv = getattr(policy, "value", policy)
+        is_int = pv in INT_POLICY_SPECS
+        # The systolic engine keeps its TPU niche -- but an integer policy
+        # with FLOAT weights is the trainable configuration, and both Pallas
+        # engines quantize weights with a plain round/clip (no straight-
+        # through estimator): only the im2col STE path carries gradients.
+        if (on_tpu and systolic_shape and systolic_exact(policy)
+                and (cached_weight or not is_int)):
+            return "systolic"
+        if is_int:
+            return "implicit" if (cached_weight and cin >= 16) else "im2col"
+        if implicit_supported(policy) and on_tpu and cin >= 16:
+            return "implicit"
+        return "im2col"
     if not on_tpu:
         return "im2col"
-    if max(kh, kw) > 7 or stride > 2:
-        return "im2col"
-    if cin < 16:
-        return "im2col"
-    if cout % 128 != 0:
-        return "im2col"
-    return "systolic"
+    return "systolic" if systolic_shape else "im2col"
 
 
 def conv2d(
@@ -446,33 +488,42 @@ def conv2d(
     """NHWC conv behind one policy-driven entry point, epilogue fused.
 
     ``w`` is an HWIO float array or a cached :class:`QWeight`.  ``path`` is
-    ``"auto"`` (shape-driven, :func:`select_conv_path`), ``"im2col"`` or
-    ``"systolic"``.  ``bias`` (cout,) and ``activation`` ("relu") are fused
-    into the conv epilogue on both paths -- together with the dequant scale
-    under integer policies, a conv layer is ONE call and one HBM write
-    instead of three round-trips (DESIGN.md section 7.3).
+    ``"auto"`` (shape- and policy-driven, :func:`select_conv_path`),
+    ``"im2col"``, ``"systolic"`` or ``"implicit"``.  ``bias`` (cout,) and
+    ``activation`` ("relu") are fused into the conv epilogue on every path
+    -- together with the dequant scale under integer policies, a conv layer
+    is ONE call and one HBM write instead of three round-trips (DESIGN.md
+    section 7.3).
 
     Integer policies run every contraction on the limb substrate.  The
-    systolic engine implements exactly the integer policies and fp32;
-    ``"auto"`` keeps the multi-pass bf16 emulation policies on im2col, and
-    an EXPLICIT ``path="systolic"`` with such a policy raises rather than
-    silently downgrading to native f32 dots.
+    systolic engine implements exactly the integer policies and fp32; the
+    implicit-GEMM engine additionally runs bf16x3/bf16x6 (streamed patches,
+    per-K-block recombine schedule, no HBM patch matrix -- DESIGN.md
+    section 7.4).  ``"auto"`` keeps native_bf16 on im2col, and an EXPLICIT
+    ``path="systolic"``/``path="implicit"`` with an unimplemented policy
+    raises rather than silently downgrading to native dots.
     """
     # Lazy imports: systolic/kernels import this module for the limb core.
     from .systolic import conv2d_im2col
-    from repro.kernels.conv2d import conv2d_systolic
+    from repro.kernels.conv2d import conv2d_implicit, conv2d_systolic
 
     kh, kw, cin, cout = w.shape
-    exact = systolic_exact(policy)
     if path == "auto":
-        path = select_conv_path(kh=kh, kw=kw, stride=stride, cin=cin, cout=cout)
-        if path == "systolic" and not exact:
+        path = select_conv_path(kh=kh, kw=kw, stride=stride, cin=cin,
+                                cout=cout, policy=policy,
+                                cached_weight=isinstance(w, QWeight))
+        # Defense in depth: even if the selector is overridden/buggy, auto
+        # must never downgrade a policy to an engine that cannot run it
+        # exactly -- reroute to im2col, which honors every policy.
+        if path == "systolic" and not systolic_exact(policy):
+            path = "im2col"
+        if path == "implicit" and not implicit_supported(policy):
             path = "im2col"
     if path == "im2col":
         return conv2d_im2col(x, w, stride=stride, padding=padding,
                              policy=policy, bias=bias, activation=activation)
     if path == "systolic":
-        if not exact:
+        if not systolic_exact(policy):
             raise ValueError(
                 f"path='systolic' cannot run policy "
                 f"{getattr(policy, 'value', policy)!r} exactly: the systolic "
@@ -487,6 +538,27 @@ def conv2d(
         else:
             variant, base_bits = spec
         return conv2d_systolic(
+            x, w, stride=stride, padding=padding,
+            variant=variant, base_bits=base_bits,
+            bias=bias, activation=activation, interpret=interpret,
+        )
+    if path == "implicit":
+        if not implicit_supported(policy):
+            raise ValueError(
+                f"path='implicit' cannot run policy "
+                f"{getattr(policy, 'value', policy)!r} exactly: the implicit "
+                "GEMM engine implements the integer limb policies, fp32 and "
+                "the bf16x3/bf16x6 emulation schedules -- native_bf16 must "
+                "not silently become native f32 dots; use path='auto' or "
+                "path='im2col'")
+        spec = policy_int_spec(policy)
+        if spec is None:
+            pv = getattr(policy, "value", policy)
+            variant = "native" if pv == "fp32" else pv
+            base_bits = 7
+        else:
+            variant, base_bits = spec
+        return conv2d_implicit(
             x, w, stride=stride, padding=padding,
             variant=variant, base_bits=base_bits,
             bias=bias, activation=activation, interpret=interpret,

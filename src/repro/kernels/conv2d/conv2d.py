@@ -49,22 +49,30 @@ from repro.core.substrate import limb_partials, limb_recombine
 _CIN_DNUMS = (((2,), (0,)), ((), ()))  # (bh, WO, Cin) x (Cin, bc)
 
 
+def limb_term_bound(variant: str, base_bits: int) -> int:
+    """Worst-case |contribution| of ONE contraction term to the widest int32
+    partial accumulator: the Karatsuba mid term is bounded by 6*half^2
+    (|(Ah+Al)(Bh+Bl)| <= 4*half^2 plus the subtracted p_hh and p_ll),
+    schoolbook's by 2*half^2 (Ah*Bl + Al*Bh); hh/ll terms are at most
+    half^2.  The ONE definition every overflow model derives from
+    (``int_accum_bound``, the implicit kernel's ``max_cin_block`` /
+    ``recombine_schedule`` / wrap-free assert)."""
+    half = 1 << (base_bits - 1)
+    return (6 if variant == "karatsuba" else 2) * half * half
+
+
 def int_accum_bound(kh: int, kw: int, cin: int, *, variant: str,
                     base_bits: int) -> int:
     """Worst-case |value| of the widest int32 partial accumulator element.
 
-    Balanced digits lie in [-half, half-1], half = 2^(base_bits-1).  Per
-    contraction term the mid accumulator is bounded by 6*half^2 for Karatsuba
-    (|(Ah+Al)(Bh+Bl)| <= 4*half^2 plus the subtracted p_hh and p_ll) and
-    2*half^2 for schoolbook (Ah*Bl + Al*Bh); hh/ll terms are at most half^2.
-    The systolic path accumulates kh*kw*cin such terms in int32, so callers
-    must keep this below 2^31 (the ops wrapper falls back to im2col when a
+    Balanced digits lie in [-half, half-1], half = 2^(base_bits-1); one
+    term contributes at most :func:`limb_term_bound`.  The systolic path
+    accumulates kh*kw*cin such terms in int32, so callers must keep this
+    below 2^31 (the ops wrapper falls back to the implicit GEMM when a
     layer shape violates it; every systolic-routed layer of AlexNet/VGG16/
     VGG19 satisfies it -- the deepest, 3x3 cin=512, with ~19x headroom).
     """
-    half = 1 << (base_bits - 1)
-    per_term = (6 if variant == "karatsuba" else 2) * half * half
-    return per_term * kh * kw * cin
+    return limb_term_bound(variant, base_bits) * kh * kw * cin
 
 
 def _conv_kernel(

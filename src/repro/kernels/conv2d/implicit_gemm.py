@@ -1,0 +1,297 @@
+"""Pallas TPU kernel: implicit-GEMM convolution on the KOM substrate.
+
+The materialized im2col path (``core/systolic.conv2d_im2col``) pays a
+KH*KW x HBM blowup before the GEMM ever runs: every input element is
+written into the patch matrix once per tap that reads it (~9x for a 3x3
+layer).  This kernel runs the *same GEMM* -- M = N*HO*WO patch rows,
+K = KH*KW*Cin, N = Cout -- without the patch matrix ever existing in HBM:
+the grid tiles (M, Cout, K) and each A-block's patch rows are gathered
+straight from the padded NHWC input via BlockSpec index maps (the dual
+row-block halo binding the systolic kernel introduced), with the per-tap
+shift/stride slicing done on the VMEM-resident block.
+
+Grid: ``(N, HO/bm, Cout/bc, Cin/bk)`` -- the K axis of the GEMM is walked
+as ``bk``-channel chunks with the KH*KW taps unrolled inside each step, so
+one grid step contracts a ``(kh*kw*bk)``-term slice of K.  Like the KOM
+GEMM kernel, the integer variants accumulate the three limb partial
+products in int32 VMEM scratch across K steps and recombine on the last
+step.
+
+Per-K-block recombine schedule: a single int32 accumulation across all of
+K is only exact while ``int_accum_bound(kh, kw, cin) < 2^31`` -- the bound
+that forces the systolic engine to give up on deep-Cin layers.  Here the
+schedule folds the int32 partials into an f32 group accumulator every
+``fold_every`` K steps (:func:`recombine_schedule`), each group sized so
+its worst-case int32 accumulation cannot wrap.  Layers under the bound get
+``fold_every = nk`` -- exactly one recombine, PR 3's single-recombine
+contract, bitwise equal to the materialized im2col GEMM.  Layers over the
+bound become a short, deterministic sequence of exact group sums -- the
+first KOM path with no practical depth limit, which is where the
+``int_accum_bound`` reroutes now land.
+
+Activation quantization is per PATCH (one scale per output position), the
+same granularity the materialized path gets from per-row activation quant
+on the patch matrix -- it happens in-kernel, on the gathered VMEM rows, so
+neither the patch matrix nor its quantized twin is ever written to HBM.
+The per-patch x per-channel dequant scale multiplies in the kernel
+epilogue right after the last fold; bias/activation stay one level up in
+the ops wrapper (the fused==unfused bitwise placement, DESIGN.md
+section 7.3/7.4).
+
+Float variants stream the same dataflow: ``native`` does f32 dots into one
+f32 accumulator; ``bf16x3``/``bf16x6`` run the multi-pass bf16 emulation
+schedules per tap -- the bf16 policies no longer materialize patches
+either.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.karatsuba import float_split
+from repro.core.substrate import limb_partials, limb_recombine
+
+from .conv2d import int_accum_bound, limb_term_bound
+
+_CIN_DNUMS = (((2,), (0,)), ((), ()))  # (bm, WO, bk) x (bk, bc)
+
+INT_VARIANTS = ("karatsuba", "schoolbook")
+
+#: bf16 emulation pass schedules: limb-index pairs per variant (DESIGN.md
+#: section 2.2; same schedules as karatsuba.bf16xn_dot_general).
+_BF16_PAIRS = {
+    "bf16x3": (2, ((0, 0), (0, 1), (1, 0))),
+    "bf16x6": (3, ((0, 0), (0, 1), (1, 0), (0, 2), (1, 1), (2, 0))),
+}
+
+
+def max_cin_block(kh: int, kw: int, *, variant: str, base_bits: int) -> int:
+    """Largest bk whose single K-step (kh*kw*bk terms) cannot wrap int32."""
+    return max((2**31 - 1) // (limb_term_bound(variant, base_bits) * kh * kw),
+               1)
+
+
+def recombine_schedule(kh: int, kw: int, cin: int, block_cin: int, *,
+                       variant: str, base_bits: int) -> int:
+    """K steps between int32 -> f32 partial folds (``fold_every``).
+
+    When the whole contraction fits int32 (``int_accum_bound < 2^31``) the
+    schedule is a SINGLE fold on the last K step -- the one-recombine
+    contract, bitwise equal to the materialized im2col GEMM.  Deeper layers
+    fold every ``floor((2^31-1) / (per_term*kh*kw*block_cin))`` steps, so
+    each group's worst-case int32 accumulation is provably wrap-free and
+    the result is a short deterministic sum of exact group recombines.
+    """
+    nk = -(-cin // block_cin)
+    if int_accum_bound(kh, kw, cin, variant=variant,
+                       base_bits=base_bits) < 2**31:
+        return nk
+    every = (2**31 - 1) // (limb_term_bound(variant, base_bits)
+                            * kh * kw * block_cin)
+    if every < 1:
+        raise ValueError(
+            f"block_cin={block_cin} too wide for wrap-free int32 groups at "
+            f"kh*kw={kh * kw}: need block_cin <= "
+            f"{max_cin_block(kh, kw, variant=variant, base_bits=base_bits)}")
+    return min(every, nk)
+
+
+def group_spans(cin: int, block_cin: int, fold_every: int) -> tuple:
+    """Channel spans [(c0, c1), ...] of the recombine groups.
+
+    Group boundaries sit at ``fold_every`` K-step (= ``block_cin``-channel)
+    multiples -- the host mirror in the ops wrapper contracts each span in
+    one exact int32 pass, reproducing the kernel's fold points bitwise.
+    """
+    step = fold_every * block_cin
+    return tuple((c0, min(c0 + step, cin)) for c0 in range(0, cin, step))
+
+
+def _implicit_kernel(
+    *refs, kh, kw, stride, bm, wo, variant, base_bits, qmax, nk, fold_every,
+    has_scale,
+):
+    it = iter(refs)
+    x0_ref, x1_ref, w_ref = next(it), next(it), next(it)
+    ascale_ref = next(it) if has_scale else None
+    wscale_ref = next(it) if has_scale else None
+    o_ref = next(it)
+    integer = variant in INT_VARIANTS
+    if integer:
+        acc_hh, acc_mid, acc_ll, acc_f = next(it), next(it), next(it), next(it)
+    else:
+        acc_f = next(it)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_f[...] = jnp.zeros_like(acc_f)
+        if integer:
+            acc_hh[...] = jnp.zeros_like(acc_hh)
+            acc_mid[...] = jnp.zeros_like(acc_mid)
+            acc_ll[...] = jnp.zeros_like(acc_ll)
+
+    # Dual row-block binding (index maps i and i+1): 2*bm*stride input rows
+    # cover the bm output rows plus the kh-stride halo.
+    x = jnp.concatenate([x0_ref[0], x1_ref[0]], axis=0)  # (2*bm*s, Wp, bk)
+
+    def taps():
+        for dy in range(kh):
+            for dx in range(kw):
+                yield jax.lax.slice(
+                    x,
+                    (dy, dx, 0),
+                    (dy + (bm - 1) * stride + 1,
+                     dx + (wo - 1) * stride + 1, x.shape[2]),
+                    (stride, stride, 1),
+                ), w_ref[dy, dx]  # (bm, wo, bk), (bk, bc)
+
+    if variant == "native":
+        for rows, wtap in taps():
+            acc_f[...] += jax.lax.dot_general(
+                rows, wtap, _CIN_DNUMS, preferred_element_type=jnp.float32)
+    elif variant in _BF16_PAIRS:
+        terms, pairs = _BF16_PAIRS[variant]
+        for rows, wtap in taps():
+            als, bls = float_split(rows, terms), float_split(wtap, terms)
+            for i, j in pairs:
+                acc_f[...] += jax.lax.dot_general(
+                    als[i], bls[j], _CIN_DNUMS,
+                    preferred_element_type=jnp.float32)
+    else:
+        # Per-PATCH quantization of the gathered rows, in VMEM: the same
+        # scale granularity the materialized path gets from per-row quant on
+        # the patch matrix, with neither matrix ever written to HBM.
+        s = ascale_ref[0][..., None]  # (bm, wo, 1)
+        for rows, wtap in taps():
+            q = jnp.clip(jnp.round(rows / s), -qmax, qmax).astype(jnp.int32)
+            p_hh, p_mid, p_ll = limb_partials(
+                q, wtap, _CIN_DNUMS, variant=variant, base_bits=base_bits)
+            acc_hh[...] += p_hh
+            acc_mid[...] += p_mid
+            acc_ll[...] += p_ll
+
+        # The per-K-block recombine schedule: fold the exact int32 partials
+        # into the f32 group accumulator every `fold_every` steps (and on
+        # the last).  Single-group layers hit this exactly once -- the
+        # one-recombine contract (grep-tested single call site).
+        @pl.when(jnp.logical_or((k + 1) % fold_every == 0, k == nk - 1))
+        def _fold():
+            acc_f[...] += limb_recombine(
+                acc_hh[...], acc_mid[...], acc_ll[...],
+                base_bits=base_bits, dtype=jnp.float32)
+            acc_hh[...] = jnp.zeros_like(acc_hh)
+            acc_mid[...] = jnp.zeros_like(acc_mid)
+            acc_ll[...] = jnp.zeros_like(acc_ll)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        out = acc_f[...]
+        if has_scale:
+            # Dequant epilogue: per-patch x per-channel scale product, the
+            # same two f32 multiplies (s_row*s_col, then raw*t) as the
+            # materialized GEMM's dequant -- bias/activation live one level
+            # up (ops wrapper) for the bitwise fused==unfused contract.
+            t = ascale_ref[0][..., None] * wscale_ref[...]  # (bm, wo, bc)
+            out = out * t
+        o_ref[0] = out
+
+
+def conv2d_implicit_raw(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    out_h: int | None = None,
+    block: tuple[int, int, int] = (8, 128, 512),
+    variant: str = "native",
+    base_bits: int = 7,
+    qmax: int = 0,
+    ascale: jax.Array | None = None,
+    wscale: jax.Array | None = None,
+    fold_every: int | None = None,
+    true_cin: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (N, H, W, Cin) pre-padded NHWC; w: (KH, KW, Cin, Cout).
+
+    ``block = (bm, bc, bk)``: output-row / Cout / Cin-chunk tile sizes.
+    Integer variants take pre-split operands: ``w`` integer-valued
+    (int16 container), ``ascale`` (N, out_h, WO) per-patch activation
+    scales, ``wscale`` (1, Cout) per-channel weight scales, ``qmax`` the
+    clip range.  Requirements (the ops wrapper arranges them): out_h % bm
+    == 0, Cout % bc == 0, Cin % bk == 0, bm*stride >= kh-stride, one spare
+    halo row block, and for integer variants fold_every*kh*kw*bk wrap-free
+    (:func:`recombine_schedule`).  ``true_cin``: the layer's REAL channel
+    count when the caller zero-padded Cin up to a bk multiple -- padded
+    channels contribute exact zeros, so the wrap-free model must not count
+    them.  Returns (N, out_h, WO, Cout) f32.
+    """
+    n, h, wdim, cin = x.shape
+    kh, kw, _, cout = w.shape
+    if true_cin is None:
+        true_cin = cin
+    bm, bc, bk = block
+    bc = min(bc, cout)
+    bk = min(bk, cin)
+    integer = variant in INT_VARIANTS
+    ho = out_h if out_h is not None else (h - kh) // stride + 1
+    wo = (wdim - kw) // stride + 1
+    assert ho % bm == 0, (ho, bm)
+    assert cout % bc == 0, (cout, bc)
+    assert cin % bk == 0, (cin, bk)
+    assert bm * stride >= kh - stride, "halo: need bm*stride >= kh-stride"
+    nk = cin // bk
+    if integer:
+        if fold_every is None:
+            fold_every = recombine_schedule(kh, kw, true_cin, bk,
+                                            variant=variant,
+                                            base_bits=base_bits)
+        # Worst-case terms per group: a group spans fold_every*bk channel
+        # slots, but only real (non-zero-padded) channels can contribute.
+        group_terms = min(fold_every * bk, true_cin)
+        assert limb_term_bound(variant, base_bits) * kh * kw * group_terms \
+            < 2**31, "recombine group too deep for wrap-free int32 accumulation"
+    else:
+        fold_every = nk
+    n_row_blocks = ho // bm
+    row_rows = bm * stride
+    assert h >= (n_row_blocks + 1) * row_rows, "need one spare halo block"
+    nin_blocks = h // row_rows
+    grid = (n, n_row_blocks, cout // bc, nk)
+    kernel = functools.partial(
+        _implicit_kernel,
+        kh=kh, kw=kw, stride=stride, bm=bm, wo=wo, variant=variant,
+        base_bits=base_bits, qmax=qmax, nk=nk, fold_every=fold_every,
+        has_scale=ascale is not None,
+    )
+    in_specs = [
+        pl.BlockSpec((1, row_rows, wdim, bk), lambda b, i, j, c: (b, i, 0, c)),
+        pl.BlockSpec(
+            (1, row_rows, wdim, bk),
+            lambda b, i, j, c, nb=nin_blocks: (b, jnp.minimum(i + 1, nb - 1), 0, c),
+        ),
+        pl.BlockSpec((kh, kw, bk, bc), lambda b, i, j, c: (0, 0, c, j)),
+    ]
+    operands = [x, x, w]  # x bound twice: row blocks i and i+1 form the halo
+    if ascale is not None:
+        assert ascale.shape == (n, ho, wo), (ascale.shape, (n, ho, wo))
+        assert wscale is not None and wscale.shape == (1, cout)
+        in_specs.append(pl.BlockSpec((1, bm, wo), lambda b, i, j, c: (b, i, 0)))
+        in_specs.append(pl.BlockSpec((1, bc), lambda b, i, j, c: (0, j)))
+        operands += [ascale.astype(jnp.float32), wscale.astype(jnp.float32)]
+    scratch = [pltpu.VMEM((bm, wo, bc), jnp.int32) for _ in range(3)] if integer else []
+    scratch.append(pltpu.VMEM((bm, wo, bc), jnp.float32))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, wo, bc), lambda b, i, j, c: (b, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)

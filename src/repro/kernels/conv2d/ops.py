@@ -1,17 +1,34 @@
-"""Jitted public wrapper for the systolic conv kernel.
+"""Jitted public wrappers for the Pallas conv kernels.
 
-Handles SAME/VALID padding (via the substrate's shared plan), the spare halo
-row-block, output-channel padding and -- for the integer variants --
-quantization plus the fused dequantization/bias/activation epilogue.
+Two engines share this module:
+
+* :func:`conv2d_systolic` -- the direct systolic engine (whole-Cin taps,
+  int16 activation streams, per-SAMPLE scales).  Handles SAME/VALID padding
+  via the substrate's shared plan, the spare halo row-block, output-channel
+  padding and the fused dequantization/bias/activation epilogue.
+* :func:`conv2d_implicit` -- the implicit-GEMM engine (K-tiled over
+  KH*KW*Cin, per-PATCH scales, the per-K-block recombine schedule).  The
+  patch matrix never exists in HBM; off-TPU the same dataflow runs as a
+  bitwise-identical streamed lax mirror (:func:`_stream_conv_int`) instead
+  of interpret-mode Pallas, so CPU CI and serving measure the real
+  streaming schedule rather than the interpreter.
+
 Weights may arrive as a cached :class:`~repro.core.substrate.QWeight`
-(quantized once, per-output-channel scales), in which case only the
-activations are quantized per call.
+(quantized once, per-output-channel scales) on either engine; a float HWIO
+weight is quantized on the fly with the SAME per-output-channel granularity
+(:func:`~repro.core.substrate.quantize_weight`), so float-weight and
+QWeight calls agree bitwise.
 
 The int32 accumulator overflow bound (:func:`~repro.kernels.conv2d.conv2d.
 int_accum_bound`) is checked here: a layer whose kh*kw*cin is too deep for
-exact int32 partial accumulation falls back to the im2col-GEMM path (which
-tiles the contraction inside the KOM GEMM kernel) instead of silently
-wrapping around.
+exact whole-contraction int32 accumulation reroutes from the systolic
+engine to :func:`conv2d_implicit`, whose per-K-block recombine schedule is
+wrap-free at any depth.
+
+Tile schedules (block_h/block_c, bm/bc/bk) default to the VMEM-aware
+autotuner (:mod:`repro.core.tuning`): a persistent per-layer-shape cache
+consulted at trace time, so ``cnn_forward`` and ``CNNServeEngine`` pick up
+tuned tiles for every conv layer without plumbing.
 """
 from __future__ import annotations
 
@@ -19,15 +36,29 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro.core.karatsuba import bf16xn_dot_general
 from repro.core.substrate import (
-    INT_POLICY_SPECS,
     QWeight,
+    balanced_split,
     conv_pads,
+    dequantize_weight,
+    kom_qmax,
+    limb_recombine,
     quantize_symmetric,
+    quantize_weight,
 )
 
 from .conv2d import conv2d_systolic_raw, int_accum_bound
+from .implicit_gemm import (
+    INT_VARIANTS,
+    conv2d_implicit_raw,
+    group_spans,
+    recombine_schedule,
+)
+
+_NHWC_DNUMS = (((3,), (0,)), ((), ()))  # (n, ho, wo, ck) x (ck, bc)
 
 
 def _default_interpret() -> bool:
@@ -46,76 +77,46 @@ def _plan(h, w, kh, kw, stride, padding, block_h):
     return ho, wo, ho_pad, pads
 
 
+def _resolve_block(kind, **key):
+    from repro.core.tuning import resolve_block  # lazy: tuning imports kernels
+    return resolve_block(kind, **key)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "block_h", "block_c", "variant",
-                     "base_bits", "activation", "interpret"),
+                     "base_bits", "interpret"),
 )
-def conv2d_systolic(
+def _conv2d_systolic_core(
     x: jax.Array,
     w,
     *,
-    stride: int = 1,
-    padding: str = "SAME",
-    block_h: int = 8,
-    block_c: int = 128,
-    variant: str = "native",
-    base_bits: int = 7,
-    bias: jax.Array | None = None,
-    activation: str | None = None,
-    interpret: bool | None = None,
+    stride: int,
+    padding: str,
+    block_h: int | None,
+    block_c: int | None,
+    variant: str,
+    base_bits: int,
+    interpret: bool | None,
 ) -> jax.Array:
-    """NHWC conv through the Pallas systolic engine, epilogue fused.
-
-    variant='native': dots in input dtype.  variant='karatsuba' (alias
-    'kom') / 'schoolbook': narrow limb passes on the shared substrate with
-    THREE int32 partial accumulators across all taps and a single recombine
-    in the kernel epilogue (the paper's conv layer, end to end).  Integer
-    variants symmetric-quantize the activations per SAMPLE per call; ``w``
-    may be a float HWIO array (quantized per-tensor on the fly) or a QWeight
-    (cached int16 values + per-output-channel scales, quantized once).  The
-    dequant scale, optional ``bias`` (Cout,) and ``activation`` ("relu") are
-    folded into the kernel epilogue -- no extra HBM round-trips.
-
-    Layers too deep for exact int32 partial accumulation
-    (int_accum_bound >= 2^31, e.g. kh*kw*cin beyond ~87k for int14) reroute
-    to :func:`~repro.core.systolic.conv2d_im2col` under the matching integer
-    policy rather than overflowing.
-    """
+    """The jitted body of :func:`conv2d_systolic`, WITHOUT the epilogue."""
     if interpret is None:
         interpret = _default_interpret()
-    if variant == "kom":
-        variant = "karatsuba"
     n, h, wdim, cin = x.shape
     kh, kw, _, cout = w.shape
-    if isinstance(w, QWeight) and variant != "native":
-        base_bits = w.base_bits  # cached weights carry their own digit base
-    if (variant != "native"
-            and int_accum_bound(kh, kw, cin, variant=variant,
-                                base_bits=base_bits) >= 2**31):
-        # Exact int32 tap accumulation impossible at this depth: the im2col
-        # GEMM tiles the kh*kw*cin contraction across K blocks instead.
-        policy = {spec: name for name, spec in INT_POLICY_SPECS.items()}.get(
-            (variant, base_bits))
-        if policy is None:
-            raise ValueError(
-                f"kh*kw*cin={kh * kw * cin} overflows int32 partial "
-                f"accumulation for variant={variant!r}/base_bits={base_bits} "
-                "and no integer policy matches for the im2col fallback")
-        from repro.core.systolic import conv2d_im2col
-        return conv2d_im2col(x, w, stride=stride, padding=padding,
-                             policy=policy, bias=bias, activation=activation)
+    if block_h is None or block_c is None:
+        th, tc = _resolve_block("systolic", kh=kh, kw=kw, stride=stride, h=h,
+                                cin=cin, cout=cout, variant=variant,
+                                base_bits=base_bits)
+        block_h = block_h if block_h is not None else th
+        block_c = block_c if block_c is not None else tc
     block_h = min(block_h, 32)
     while block_h * stride < kh - stride:  # halo feasibility
         block_h *= 2
     ho, wo, ho_pad, pads = _plan(h, wdim, kh, kw, stride, padding, block_h)
     scale = None
     if variant != "native":
-        if isinstance(w, QWeight):
-            w_vals, w_scale = w.values, w.scale  # cached: no requantization
-        else:
-            qw = quantize_symmetric(w, base_bits=base_bits)
-            w_vals, w_scale = qw.values, qw.scale
+        w_vals, w_scale = w.values, w.scale  # cached: no requantization
         # Per-SAMPLE activation scales (axis 0): each image's quantization is
         # independent of its batch-mates, so a request's output is identical
         # whatever microbatch it rides in (the engines' batch-invariance
@@ -128,8 +129,6 @@ def conv2d_systolic(
         ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(-1),
                               (cout,))
         scale = qx.scale.reshape(n, 1) * ws[None, :]  # (n, cout)
-    elif isinstance(w, QWeight):
-        raise TypeError("variant='native' expects a float weight, not QWeight")
     xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
     bc = min(block_c, cout)
     pc = (-cout) % bc
@@ -143,12 +142,374 @@ def conv2d_systolic(
         variant=variant, base_bits=base_bits, scale=scale,
         interpret=interpret,
     )
-    out = out[:, :ho, :wo, :cout]
-    # Fused epilogue, wrapper half: bias + activation in the same jit scope
-    # (one XLA elementwise fusion over the kernel's output).  Kept OUTSIDE
-    # the Pallas body so the dequant multiply's rounding is pinned by the
-    # kernel output materialization -- in-kernel mul+add would be contracted
-    # to an FMA, breaking bitwise fused==unfused (see conv2d.py).
+    return out[:, :ho, :wo, :cout]
+
+
+def conv2d_systolic(
+    x: jax.Array,
+    w,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    block_h: int | None = None,
+    block_c: int | None = None,
+    variant: str = "native",
+    base_bits: int = 7,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """NHWC conv through the Pallas systolic engine, epilogue fused.
+
+    variant='native': dots in input dtype.  variant='karatsuba' (alias
+    'kom') / 'schoolbook': narrow limb passes on the shared substrate with
+    THREE int32 partial accumulators across all taps and a single recombine
+    in the kernel epilogue (the paper's conv layer, end to end).  Integer
+    variants symmetric-quantize the activations per SAMPLE per call; ``w``
+    may be a float HWIO array -- quantized HERE, outside the jitted core,
+    with the SAME per-output-channel granularity as a cached QWeight, so
+    float-weight and QWeight calls agree bitwise -- or a QWeight (cached
+    int16 values + per-output-channel scales, quantized once).  The dequant
+    scale rides the kernel epilogue; optional ``bias`` (Cout,) and
+    ``activation`` ("relu") apply in the caller's regime over the jitted
+    core's materialized output (bitwise fused==unfused, DESIGN.md section
+    7.3) -- no extra HBM round-trips under an outer jit.
+
+    ``block_h``/``block_c`` default to the autotuner's per-layer-shape
+    schedule (:func:`repro.core.tuning.resolve_block`).
+
+    Layers too deep for exact whole-contraction int32 accumulation
+    (int_accum_bound >= 2^31, e.g. kh*kw*cin beyond ~87k for int14) reroute
+    to :func:`conv2d_implicit`, whose per-K-block recombine schedule keeps
+    every partial group wrap-free at any depth.
+    """
+    if variant == "kom":
+        variant = "karatsuba"
+    kh, kw, cin = w.shape[0], w.shape[1], w.shape[2]
+    if variant != "native":
+        if isinstance(w, QWeight):
+            base_bits = w.base_bits  # cached weights carry their digit base
+        else:
+            w = quantize_weight(w, base_bits=base_bits)
+        if int_accum_bound(kh, kw, cin, variant=variant,
+                           base_bits=base_bits) >= 2**31:
+            # Exact whole-contraction int32 accumulation impossible at this
+            # depth: stream the patches through the implicit GEMM, whose
+            # per-K-block recombine schedule is wrap-free at any depth.
+            return conv2d_implicit(x, w, stride=stride, padding=padding,
+                                   variant=variant, base_bits=base_bits,
+                                   bias=bias, activation=activation,
+                                   interpret=interpret)
+    elif isinstance(w, QWeight):
+        raise TypeError("variant='native' expects a float weight, not QWeight")
+    out = _conv2d_systolic_core(
+        x, w, stride=stride, padding=padding, block_h=block_h,
+        block_c=block_c, variant=variant, base_bits=base_bits,
+        interpret=interpret)
+    if bias is not None:
+        out = out + bias
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation is not None:
+        raise ValueError(f"unknown activation: {activation!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Implicit GEMM: streamed patches, per-patch scales, K-tiled contraction.
+# ---------------------------------------------------------------------------
+
+def _patch_scales(xp: jax.Array, kh: int, kw: int, stride: int,
+                  qmax: int) -> jax.Array:
+    """Per-PATCH activation scales from the padded input, no patch matrix.
+
+    The materialized path quantizes each im2col row with
+    ``max|row| / qmax``; the same number is the windowed max of the
+    per-pixel channel max -- a reduce_window over |x|, kh*kw times cheaper
+    in HBM than materializing the rows.  (fp max is exact whatever the
+    reduction order, so this is bitwise the patch-row amax.)
+    """
+    cmax = jnp.max(jnp.abs(xp.astype(jnp.float32)), axis=3)  # (n, Hp, Wp)
+    amax = lax.reduce_window(
+        cmax, -jnp.inf, lax.max,
+        window_dimensions=(1, kh, kw),
+        window_strides=(1, stride, stride),
+        padding="VALID",
+    )  # (n, HO', WO')
+    return jnp.maximum(amax, 1e-12) / qmax
+
+
+#: Largest integer f32 represents exactly -- the per-dot partial-sum budget
+#: of the mirror's f32-digit GEMM strategy.
+_F32_EXACT = 1 << 24
+
+
+def _limb_partials_f32(q, wtap, *, variant, base_bits):
+    """The narrow limb passes as f32 GEMMs -- bitwise-equal, host-fast.
+
+    XLA:CPU has no fast integer GEMM (an int8 dot runs ~7x slower than the
+    same-shape f32 Eigen contraction), so the mirror runs each pass as an
+    f32 dot over K sub-chunks small enough that every WORST-CASE partial
+    sum is an exactly-representable f32 integer (< 2^24: karatsuba digit
+    sums bound products by 4*half^2, plain digits by half^2).  Converted
+    back to int32 and summed, the totals are bit-identical to the MXU int8
+    passes in any order -- same digits, same integers, different ALU.
+    ``Precision.HIGHEST`` keeps accelerators from downcasting the f32 dot
+    (tf32/bf16 would break integer exactness).
+    """
+    half = 1 << (base_bits - 1)
+    per = (4 if variant == "karatsuba" else 1) * half * half
+    safe_k = max(_F32_EXACT // per, 1)
+    kdim = q.shape[-1]
+    ah, al = balanced_split(q, base_bits)
+    bh, bl = balanced_split(wtap, base_bits)
+    dotf = lambda a, b: lax.dot_general(
+        a.astype(jnp.float32), b.astype(jnp.float32), _NHWC_DNUMS,
+        precision=lax.Precision.HIGHEST,
+        preferred_element_type=jnp.float32).astype(jnp.int32)
+    hh = mid = ll = jnp.zeros((), jnp.int32)
+    for c0 in range(0, kdim, safe_k):
+        sl = slice(c0, min(c0 + safe_k, kdim))
+        a_h, a_l, b_h, b_l = ah[..., sl], al[..., sl], bh[sl], bl[sl]
+        p_hh = dotf(a_h, b_h)
+        p_ll = dotf(a_l, b_l)
+        if variant == "karatsuba":
+            p_mid = dotf(a_h + a_l, b_h + b_l) - p_hh - p_ll
+        else:
+            p_mid = dotf(a_h, b_l) + dotf(a_l, b_h)
+        hh, mid, ll = hh + p_hh, mid + p_mid, ll + p_ll
+    return hh, mid, ll
+
+
+def _stream_conv_int(xp, w_vals, ascale, spans, *, stride, ho, wo, variant,
+                     base_bits, qmax):
+    """The lax mirror of the integer implicit-GEMM kernel, bitwise.
+
+    Same dataflow, same numbers: per-tap strided slices of the padded
+    input, per-patch quantization of the gathered rows, exact int32 limb
+    accumulation within each recombine group (``spans``, the kernel's fold
+    boundaries), one f32 ``limb_recombine`` per group, groups summed in
+    order.  Int accumulation order inside a group is irrelevant (exact), so
+    the f32-digit sub-chunked dots (:func:`_limb_partials_f32`) equal the
+    kernel's int8 grid steps bitwise.
+    """
+    kh, kw = w_vals.shape[:2]
+    n = xp.shape[0]
+    s4 = ascale[..., None]  # (n, ho, wo, 1)
+    acc = None
+    for c0, c1 in spans:
+        p_hh = p_mid = p_ll = jnp.zeros((n, ho, wo, w_vals.shape[-1]),
+                                        jnp.int32)
+        for dy in range(kh):
+            for dx in range(kw):
+                rows = lax.slice(
+                    xp,
+                    (0, dy, dx, c0),
+                    (n, dy + (ho - 1) * stride + 1,
+                     dx + (wo - 1) * stride + 1, c1),
+                    (1, stride, stride, 1),
+                )
+                q = jnp.clip(jnp.round(rows / s4), -qmax, qmax
+                             ).astype(jnp.int32)
+                hh, mid, ll = _limb_partials_f32(
+                    q, w_vals[dy, dx, c0:c1],
+                    variant=variant, base_bits=base_bits)
+                p_hh, p_mid, p_ll = p_hh + hh, p_mid + mid, p_ll + ll
+        g = limb_recombine(p_hh, p_mid, p_ll, base_bits=base_bits,
+                           dtype=jnp.float32)
+        acc = g if acc is None else acc + g
+    return acc
+
+
+def _stream_conv_float(xp, w, *, stride, ho, wo, variant):
+    """Float mirror: per-tap streamed dots (native f32 or bf16xN passes)."""
+    kh, kw = w.shape[:2]
+    n = xp.shape[0]
+    out = jnp.zeros((n, ho, wo, w.shape[-1]), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            rows = lax.slice(
+                xp,
+                (0, dy, dx, 0),
+                (n, dy + (ho - 1) * stride + 1,
+                 dx + (wo - 1) * stride + 1, xp.shape[3]),
+                (1, stride, stride, 1),
+            )
+            wtap = w[dy, dx]
+            if variant == "native":
+                out = out + lax.dot_general(
+                    rows, wtap, _NHWC_DNUMS,
+                    preferred_element_type=jnp.float32)
+            else:
+                out = out + bf16xn_dot_general(
+                    rows, wtap, _NHWC_DNUMS,
+                    passes=3 if variant == "bf16x3" else 6)
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "variant", "base_bits",
+                     "block", "fold_every", "use_pallas", "interpret"),
+)
+def _conv2d_implicit_core(
+    x: jax.Array,
+    w,
+    *,
+    stride: int,
+    padding: str,
+    variant: str,
+    base_bits: int,
+    block: tuple[int, int, int] | None,
+    fold_every: int | None,
+    use_pallas: bool | None,
+    interpret: bool | None,
+) -> jax.Array:
+    """The jitted body of :func:`conv2d_implicit`, WITHOUT the epilogue.
+
+    The jit boundary here is load-bearing: it materializes fl(raw * scale)
+    before the caller's bias add (the CPU mirror's analogue of the Pallas
+    kernel-output materialization), so XLA cannot contract the dequant
+    multiply and the bias add into one FMA -- which would skip the
+    multiply's own rounding and break the bitwise fused==unfused contract
+    (XLA:CPU contracts mul+add even across lax.optimization_barrier).
+    """
+    if variant == "kom":
+        variant = "karatsuba"
+    integer = variant in INT_VARIANTS
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = _default_interpret()
+    n, h, wdim, cin = x.shape
+    kh, kw, _, cout = w.shape
+    if isinstance(w, QWeight):
+        if integer:
+            base_bits = w.base_bits
+        else:
+            w = dequantize_weight(w)
+    qmax = kom_qmax(base_bits)
+    if integer:
+        if isinstance(w, QWeight):
+            w_vals, w_scale = w.values, w.scale
+        else:
+            qw = quantize_weight(w, base_bits=base_bits)  # per-output-channel
+            w_vals, w_scale = qw.values, qw.scale
+        w_vals = w_vals.astype(jnp.int16)
+        w_scale = jnp.broadcast_to(
+            jnp.asarray(w_scale, jnp.float32).reshape(-1), (cout,))
+    else:
+        w_vals, w_scale = jnp.asarray(w, jnp.float32), None
+    if block is None:
+        bm, bc, bk = _resolve_block("implicit", kh=kh, kw=kw, stride=stride,
+                                    h=h, cin=cin, cout=cout, variant=variant,
+                                    base_bits=base_bits)
+    else:
+        bm, bc, bk = block
+    bk = min(bk, cin)
+    if integer and fold_every is None:
+        fold_every = recombine_schedule(kh, kw, cin, bk, variant=variant,
+                                        base_bits=base_bits)
+    x = x.astype(jnp.float32)
+
+    if not use_pallas:
+        ho, wo, pads = conv_pads(h, wdim, kh, kw, stride, padding)
+        xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+        if integer:
+            ascale = _patch_scales(xp, kh, kw, stride, qmax)[:, :ho, :wo]
+            raw = _stream_conv_int(
+                xp, w_vals, ascale, group_spans(cin, bk, fold_every),
+                stride=stride, ho=ho, wo=wo, variant=variant,
+                base_bits=base_bits, qmax=qmax)
+            # Same dequant expression as the kernel epilogue / materialized
+            # GEMM: t = s_patch * s_channel, then raw * t.
+            out = raw * (ascale[..., None] * w_scale)
+        else:
+            out = _stream_conv_float(xp, w_vals, stride=stride, ho=ho, wo=wo,
+                                     variant=variant)
+    else:
+        while bm * stride < kh - stride:  # halo feasibility
+            bm *= 2
+        ho, wo, ho_pad, pads = _plan(h, wdim, kh, kw, stride, padding, bm)
+        xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+        ascale = wsc = None
+        if integer:
+            ascale = _patch_scales(xp, kh, kw, stride, qmax)[:, :ho_pad]
+        pk = (-cin) % bk
+        if pk:  # zero channels contribute exact zeros to every partial
+            xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, pk)))
+            w_vals = jnp.pad(w_vals, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        bc = min(bc, cout)
+        pc = (-cout) % bc
+        if pc:
+            w_vals = jnp.pad(w_vals, ((0, 0), (0, 0), (0, 0), (0, pc)))
+            if w_scale is not None:
+                w_scale = jnp.pad(w_scale, ((0, pc),))
+        if integer:
+            wsc = w_scale.reshape(1, -1)
+        raw = conv2d_implicit_raw(
+            xp, w_vals, stride=stride, out_h=ho_pad, block=(bm, bc, bk),
+            variant=variant, base_bits=base_bits, qmax=qmax,
+            ascale=ascale, wscale=wsc, fold_every=fold_every,
+            true_cin=cin, interpret=interpret,
+        )
+        out = raw[:, :ho, :wo, :cout]
+    return out
+
+
+def conv2d_implicit(
+    x: jax.Array,
+    w,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    variant: str = "native",
+    base_bits: int = 7,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    block: tuple[int, int, int] | None = None,
+    fold_every: int | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """NHWC conv as an implicit GEMM: the patch matrix never exists in HBM.
+
+    ``variant``: "native" (f32 dots), "bf16x3"/"bf16x6" (multi-pass bf16
+    emulation) or "karatsuba"/"schoolbook" (the KOM limb substrate,
+    ``base_bits`` digits).  Integer variants quantize activations per PATCH
+    (one scale per output position -- the materialized path's per-row
+    granularity) in VMEM and the weight per OUTPUT CHANNEL (cached
+    :class:`QWeight` or on-the-fly ``quantize_weight``, bitwise-identical
+    forms); the dequant scale rides the core's epilogue, ``bias``/
+    ``activation`` apply here, OUTSIDE the core's jit scope, so the dequant
+    multiply's rounding is pinned by the core's output materialization --
+    bitwise fused==unfused (DESIGN.md sections 7.3/7.4).
+
+    Any kernel size, stride, Cin and Cout are supported; layers whose
+    whole-K int32 accumulation would wrap (``int_accum_bound >= 2^31``) run
+    the per-K-block recombine schedule instead of being rerouted -- this
+    path has no depth limit.  ``block=(bm, bc, bk)`` overrides the
+    autotuned tile schedule; ``fold_every`` overrides the recombine
+    schedule (tests only).
+
+    On TPU the core is the Pallas kernel
+    (:func:`~repro.kernels.conv2d.implicit_gemm.conv2d_implicit_raw`);
+    off-TPU (or ``use_pallas=False``) the SAME dataflow runs as a streamed
+    lax program with identical group boundaries -- bitwise equal for the
+    integer variants, so CPU CI/serving exercise the real schedule at XLA
+    speed instead of interpret-mode Pallas.
+    """
+    v = "karatsuba" if variant == "kom" else variant
+    if v in INT_VARIANTS and not isinstance(w, QWeight):
+        # Quantize float weights HERE, outside the jitted core, so an
+        # on-the-fly call is bitwise identical to the cached-QWeight call
+        # (inside the jit, XLA rewrites the /qmax division to a reciprocal
+        # multiply and the scales drift an ulp from quantize_weight's).
+        w = quantize_weight(w, base_bits=base_bits)
+    out = _conv2d_implicit_core(
+        x, w, stride=stride, padding=padding, variant=variant,
+        base_bits=base_bits, block=block, fold_every=fold_every,
+        use_pallas=use_pallas, interpret=interpret)
     if bias is not None:
         out = out + bias
     if activation == "relu":

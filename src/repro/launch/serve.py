@@ -86,7 +86,7 @@ def main(argv=None):
     ap.add_argument("--buckets", default="1,4,16",
                     help="CNN microbatch bucket sizes (comma-separated)")
     ap.add_argument("--conv-path", default=None,
-                    help="CNN conv dispatch: auto | im2col | systolic")
+                    help="CNN conv dispatch: auto | im2col | systolic | implicit")
     ap.add_argument("--policy", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -110,6 +110,15 @@ def main(argv=None):
                     f"--conv-path systolic cannot run policy "
                     f"{cfg.policy.value!r} exactly; pass --policy "
                     "kom_int14 | schoolbook_int16 | fp32")
+        if cfg.conv_path == "implicit":
+            # Same refusal for the implicit engine (it adds bf16x3/bf16x6;
+            # only native_bf16 is unimplemented -- DESIGN.md 7.4).
+            from repro.core.substrate import implicit_supported
+            if not implicit_supported(cfg.policy):
+                ap.error(
+                    f"--conv-path implicit cannot run policy "
+                    f"{cfg.policy.value!r} exactly; pass --policy "
+                    "kom_int14 | schoolbook_int16 | fp32 | bf16x3 | bf16x6")
         return _serve_cnn(cfg, args)
     return _serve_lm(cfg, args)
 

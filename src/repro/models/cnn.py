@@ -1,10 +1,14 @@
 """The paper's own CNNs -- AlexNet, VGG16, VGG19 -- on the systolic engine.
 
 Every conv goes through the substrate's single ``conv2d`` entry point
-(:func:`repro.core.substrate.conv2d`), which picks the im2col-GEMM or Pallas
-systolic path per layer shape; every FC goes through ``policy_linear``.  The
-paper's resource analysis (Tables 1-4: 3x3/5x5/7x7/11x11 kernels) is thus
-exercised end to end on one multiplier substrate.
+(:func:`repro.core.substrate.conv2d`), which picks the im2col-GEMM, Pallas
+systolic or implicit-GEMM path per layer shape and policy (the integer
+serving path streams patches through the implicit GEMM -- no HBM im2col
+materialization -- with tile schedules resolved per layer by the
+:mod:`repro.core.tuning` autotuner); every FC goes through
+``policy_linear``.  The paper's resource analysis (Tables 1-4:
+3x3/5x5/7x7/11x11 kernels) is thus exercised end to end on one multiplier
+substrate.
 
 For the integer KOM policies, :func:`cnn_quantize_params` converts the float
 weights into cached :class:`~repro.core.substrate.QWeight` leaves ONCE at
@@ -33,7 +37,8 @@ class CNNConfig:
     in_channels: int = 3
     n_classes: int = 1000
     policy: MatmulPolicy = MatmulPolicy.NATIVE_BF16
-    conv_path: str = "auto"  # auto | im2col | systolic (substrate dispatch)
+    # auto | im2col | systolic | implicit (substrate dispatch, DESIGN.md 7.1/7.4)
+    conv_path: str = "auto"
     family: str = "cnn"      # registry/launcher dispatch tag
 
     def replace(self, **kw) -> "CNNConfig":

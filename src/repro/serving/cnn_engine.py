@@ -29,6 +29,11 @@ discipline on the KOM substrate:
     is sharded over its data axes via ``shard_map`` (params replicated);
     buckets are rounded up to multiples of the data-parallel degree so
     every shard sees a full slice.  Unpadding/gather stays on host.
+  * **Tuned conv tiles** -- the jitted forward's conv layers resolve their
+    Pallas tile schedules (the implicit-GEMM ``(bm, bc, bk)`` and systolic
+    ``block_h``/``block_c``) through :mod:`repro.core.tuning` at trace
+    time; ``tune=True`` runs the measured sweep for this config's layer
+    shapes at engine build and persists the argmin (DESIGN.md section 7.4).
   * **Accounting** -- per-request latency stamps from the queue plus
     per-step bucket occupancy roll up into :meth:`stats` (images/sec, p95
     latency, padding overhead), the serving analogue of
@@ -71,8 +76,18 @@ class CNNServeEngine:
 
     def __init__(self, cfg: CNNConfig, params, *,
                  buckets: Sequence[int] = (1, 4, 16, 64),
-                 mesh=None, prequantize: bool | None = None):
+                 mesh=None, prequantize: bool | None = None,
+                 tune: bool = False):
         self.cfg = cfg
+        if tune:
+            # Measured tile sweep for THIS config's conv layers on THIS
+            # backend, persisted to the autotuner cache -- the jitted
+            # forward below then picks the tuned (bm, bc, bk)/block_h/
+            # block_c per layer through tuning.resolve_block.  Without
+            # `tune` the engine still consults any previously persisted
+            # cache (benchmarks/tuned/default.json) at trace time.
+            from repro.core.tuning import tune_config
+            tune_config(cfg)
         # Integer-KOM policies: weights become cached QWeight leaves ONCE
         # here; every step then quantizes activations only.
         spec = policy_int_spec(cfg.policy)

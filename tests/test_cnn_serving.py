@@ -5,7 +5,8 @@ on which microbatch served it.  Padded-microbatch logits must match a
 single-image ``cnn_forward`` bitwise under the integer policies (per-row
 activation scales + exact int32 limb accumulation) and to fp tolerance under
 fp32 (XLA may reassociate float accumulation across batch shapes) -- for all
-three of the paper's CNNs, through BOTH conv paths.
+three of the paper's CNNs, through ALL THREE conv paths (the implicit
+GEMM's per-PATCH scales keep the contract bitwise too).
 """
 import dataclasses
 
@@ -39,7 +40,7 @@ def _solo_logits(cfg, params, img):
 
 
 @pytest.mark.parametrize("arch", ["alexnet", "vgg16", "vgg19"])
-@pytest.mark.parametrize("path", ["im2col", "systolic"])
+@pytest.mark.parametrize("path", ["im2col", "systolic", "implicit"])
 def test_batch_invariance_int_policy(arch, path):
     """Padded-microbatch logits == single-image logits, BITWISE."""
     cfg = _small(arch, MatmulPolicy.KOM_INT14, path)
@@ -60,7 +61,7 @@ def test_batch_invariance_int_policy(arch, path):
 
 
 @pytest.mark.parametrize("arch", ["alexnet", "vgg16", "vgg19"])
-@pytest.mark.parametrize("path", ["im2col", "systolic"])
+@pytest.mark.parametrize("path", ["im2col", "systolic", "implicit"])
 def test_batch_invariance_fp32(arch, path):
     """fp32: same contract to float tolerance (XLA may retile per shape)."""
     cfg = _small(arch, MatmulPolicy.FP32, path)

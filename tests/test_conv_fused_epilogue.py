@@ -187,18 +187,20 @@ def test_int_accum_bound_model():
             < 2**31
 
 
-def test_overflow_bound_falls_back_to_im2col(monkeypatch):
-    """A layer too deep for exact int32 accumulation reroutes to the im2col
-    GEMM (contraction tiled there) instead of silently wrapping around."""
-    import repro.core.systolic as systolic_mod
+def test_overflow_bound_falls_back_to_implicit(monkeypatch):
+    """A layer too deep for exact whole-contraction int32 accumulation
+    reroutes to the implicit GEMM (per-K-block recombine schedule, wrap-free
+    at any depth) instead of silently wrapping around -- and no longer to
+    the MATERIALIZED im2col path (ISSUE 4)."""
+    import repro.kernels.conv2d.ops as ops_mod
     from repro.kernels.conv2d import conv2d_systolic
 
     k, cin = 7, 1792  # 6*64^2 * 7*7*1792 = 2.16e9 >= 2^31
     assert int_accum_bound(k, k, cin, variant="karatsuba", base_bits=7) \
         >= 2**31
     calls = []
-    real = systolic_mod.conv2d_im2col
-    monkeypatch.setattr(systolic_mod, "conv2d_im2col",
+    real = ops_mod.conv2d_implicit
+    monkeypatch.setattr(ops_mod, "conv2d_implicit",
                         lambda *a, **kw: calls.append(kw) or real(*a, **kw))
     x = jnp.asarray(rng.standard_normal((1, 8, 8, cin)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((k, k, cin, 8)) * 0.05, jnp.float32)
@@ -206,13 +208,12 @@ def test_overflow_bound_falls_back_to_im2col(monkeypatch):
     out = conv2d_systolic(x, w, variant="karatsuba", base_bits=7,
                           bias=b, activation="relu")
     assert len(calls) == 1
-    assert calls[0]["policy"] == "kom_int14"  # limb substrate preserved
+    assert calls[0]["variant"] == "karatsuba"  # limb substrate preserved
     assert calls[0]["bias"] is not None and calls[0]["activation"] == "relu"
-    # jitted like the fallback (conv2d_systolic is jitted) so both sides get
-    # the same XLA fusion choices on the dequant chain -> bitwise comparable
-    ref = np.asarray(jax.jit(lambda a, kw_, bb: real(
-        a, kw_, policy=MatmulPolicy.KOM_INT14, bias=bb,
-        activation="relu"))(x, w, b))
+    # both sides: eager per-channel weight quant, the same jitted implicit
+    # core, eager epilogue -> bitwise comparable
+    ref = np.asarray(real(x, w, variant="karatsuba", base_bits=7,
+                          bias=b, activation="relu"))
     np.testing.assert_array_equal(np.asarray(out), ref)
     # shallow layers never take the fallback
     calls.clear()

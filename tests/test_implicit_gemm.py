@@ -1,0 +1,359 @@
+"""The implicit-GEMM conv path (ISSUE 4 / DESIGN.md section 7.4).
+
+Claims under test:
+
+  1. **No patch matrix.**  The implicit path computes the same GEMM as the
+     materialized im2col path without `conv_general_dilated_patches` --
+     enforced structurally (grep) AND on the traced serving path (jaxpr).
+  2. **Bitwise == materialized im2col** on the cached-weight serving path:
+     per-PATCH activation scales + per-channel weight scales + exact int32
+     limb accumulation + one recombine reproduce `conv2d_im2col`'s numbers
+     exactly (same jit regime) for both integer policies.
+  3. **Per-K-block recombine schedule.**  Layers whose whole-K int32
+     accumulation would wrap (`int_accum_bound >= 2^31`, impossible on the
+     systolic engine) run a grouped schedule whose every int32 group is
+     provably wrap-free -- verified bitwise against an int64-exact
+     emulation of the grouped fold at cin = 2^15 with a 3x3 kernel.
+  4. **Kernel == mirror.**  The Pallas kernel (interpret mode) and the
+     off-TPU streamed lax mirror produce bitwise-identical integer results,
+     including forced multi-group schedules.
+  5. **Fused epilogue** bitwise == unfused, and the golden shape sweep
+     (k x stride x padding, k=1 included) against the XLA reference.
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.precision import MatmulPolicy
+from repro.core.substrate import (
+    QWeight,
+    balanced_split,
+    conv2d,
+    kom_qmax,
+    quantize_weight,
+)
+from repro.kernels.conv2d import conv2d_implicit, conv2d_ref
+from repro.kernels.conv2d.conv2d import int_accum_bound
+from repro.kernels.conv2d.implicit_gemm import (
+    group_spans,
+    max_cin_block,
+    recombine_schedule,
+)
+from repro.kernels.conv2d.ops import _patch_scales
+from repro.models.cnn import cnn_forward, cnn_init, cnn_quantize_params
+
+rng = np.random.default_rng(0)
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+KERNEL_FILE = SRC / "repro" / "kernels" / "conv2d" / "implicit_gemm.py"
+OPS_FILE = SRC / "repro" / "kernels" / "conv2d" / "ops.py"
+
+INT_POLICIES = [MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16]
+
+
+def _case(k, s=1, h=14, cin=8, cout=8, n=1, seed=0):
+    r = np.random.default_rng(seed + 100 * k + 10 * s + cin)
+    x = jnp.asarray(r.standard_normal((n, h, h, cin)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((k, k, cin, cout)) * 0.1, jnp.float32)
+    return x, w
+
+
+# -- 1. no patch matrix -------------------------------------------------------
+
+def test_implicit_kernel_grep_contract():
+    """One limb_recombine call site (the fold), shared limb_partials, no
+    local digit split, and no patch materialization anywhere on the path."""
+    text = KERNEL_FILE.read_text()
+    assert text.count("limb_recombine(") == 1, (
+        "the implicit kernel must recombine through ONE fold call site")
+    assert "limb_partials(" in text
+    assert "conv_general_dilated_patches" not in text
+    ops_text = OPS_FILE.read_text()
+    assert "conv_general_dilated_patches" not in ops_text, (
+        "the implicit ops wrapper/mirror must never materialize patches")
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+@pytest.mark.parametrize("arch", ["alexnet", "vgg16"])
+def test_no_patch_materialization_on_int_serving_path(arch, policy):
+    """The traced int-policy serving forward (cached weights, auto dispatch)
+    materializes im2col patches ONLY for the thin RGB stem (cin < 16, whose
+    kh*kw*cin <~ 400-wide patch matrix is no blowup and whose per-tap
+    contraction would starve any streaming engine) -- every deeper conv
+    layer, the ones the KH*KW x HBM blowup actually hurt, streams through
+    the implicit GEMM with no conv_general_dilated in the trace."""
+    cfg = reduced(get_config(arch)).replace(policy=policy)
+    params = cnn_quantize_params(cnn_init(cfg, jax.random.PRNGKey(0)), cfg)
+    x = jnp.zeros((1, cfg.img_size, cfg.img_size, 3), jnp.float32)
+    jaxpr = str(jax.make_jaxpr(lambda p, v: cnn_forward(p, cfg, v))(params, x))
+    cin, n_thin, n_conv = cfg.in_channels, 0, 0
+    for spec in cfg.layers:
+        if spec[0] == "conv":
+            n_conv += 1
+            if cin < 16:
+                n_thin += 1
+            cin = spec[2]
+    assert n_thin == 1  # exactly the RGB stem
+    got = jaxpr.count("conv_general_dilated")
+    assert got == n_thin, (
+        f"{arch}/{policy.value}: {got} materialized conv layers on the "
+        f"serving path, expected only the {n_thin} thin stem(s)")
+    # positive control: the float baseline policy's im2col path materializes
+    # EVERY conv layer, so the assertion above is discriminating.
+    fcfg = cfg.replace(policy=MatmulPolicy.NATIVE_BF16)
+    fparams = cnn_init(fcfg, jax.random.PRNGKey(0))
+    fjaxpr = str(jax.make_jaxpr(
+        lambda p, v: cnn_forward(p, fcfg, v))(fparams, x))
+    assert fjaxpr.count("conv_general_dilated") == n_conv
+
+
+# -- 2. bitwise == materialized im2col (serving path) -------------------------
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+@pytest.mark.parametrize("k,s,pad,cin,cout,h", [
+    (3, 1, "SAME", 8, 16, 12),
+    (5, 2, "SAME", 16, 8, 17),
+    (11, 4, "VALID", 3, 8, 35),
+    (1, 1, "VALID", 8, 8, 9),
+    (3, 1, "SAME", 512, 16, 6),   # deep Cin, still single-group
+])
+def test_implicit_bitwise_equals_im2col(policy, k, s, pad, cin, cout, h):
+    """Cached-weight serving calls: the streamed path reproduces the
+    materialized path's numbers EXACTLY (same jit regime), per-patch scale
+    and all -- dispatch between them can never change a served answer."""
+    x, w = _case(k, s, h=h, cin=cin, cout=cout, n=2)
+    from repro.core.substrate import policy_int_spec
+    qw = quantize_weight(w, base_bits=policy_int_spec(policy)[1])
+    imp = jax.jit(lambda a, q: conv2d(a, q, stride=s, padding=pad,
+                                      policy=policy, path="implicit"))(x, qw)
+    im2 = jax.jit(lambda a, q: conv2d(a, q, stride=s, padding=pad,
+                                      policy=policy, path="im2col"))(x, qw)
+    np.testing.assert_array_equal(np.asarray(imp), np.asarray(im2))
+
+
+def test_implicit_batch_invariance_bitwise():
+    """Per-PATCH scales: a sample's output is bit-identical whatever batch
+    it rides in (the serving engines' batch-invariance contract)."""
+    x, w = _case(3, h=10, cin=8, cout=8, n=4)
+    qw = quantize_weight(w)
+    batched = np.asarray(conv2d(x, qw, policy=MatmulPolicy.KOM_INT14,
+                                path="implicit"))
+    for i in range(4):
+        single = np.asarray(conv2d(x[i:i + 1], qw,
+                                   policy=MatmulPolicy.KOM_INT14,
+                                   path="implicit"))
+        np.testing.assert_array_equal(batched[i:i + 1], single)
+
+
+# -- 3. the per-K-block recombine schedule ------------------------------------
+
+def test_recombine_schedule_model():
+    # under the bound: exactly one group, PR 3's single-recombine contract
+    assert recombine_schedule(3, 3, 512, 512, variant="karatsuba",
+                              base_bits=7) == 1
+    assert recombine_schedule(3, 3, 1024, 512, variant="karatsuba",
+                              base_bits=7) == 2  # nk=2, single fold at end
+    # over the bound: groups sized so per_term*kh*kw*bk*every < 2^31
+    every = recombine_schedule(3, 3, 2**15, 512, variant="karatsuba",
+                               base_bits=7)
+    assert every * 512 * 9 * 6 * 64 * 64 < 2**31
+    # a bk so wide one step would wrap is rejected
+    cap = max_cin_block(3, 3, variant="karatsuba", base_bits=7)
+    with pytest.raises(ValueError):
+        recombine_schedule(3, 3, 10 * (cap + 128), cap + 128,
+                           variant="karatsuba", base_bits=7)
+    # spans tile the channel axis exactly at fold boundaries
+    spans = group_spans(2**15, 512, every)
+    assert spans[0][0] == 0 and spans[-1][1] == 2**15
+    assert all(a1 == b0 for (_, a1), (b0, _) in zip(spans, spans[1:]))
+
+
+@pytest.mark.parametrize("variant,base_bits",
+                         [("karatsuba", 7), ("schoolbook", 8)])
+def test_deep_cin_grouped_schedule_exact(variant, base_bits):
+    """cin = 2^15 with a 3x3 kernel: int_accum_bound >= 2^31 (impossible on
+    the systolic engine, silently wrappable on the old materialized
+    fallback).  The implicit path's grouped schedule is verified BITWISE
+    against an int64-exact emulation of the same fold sequence: every int32
+    group stays under 2^31 and the f32 group sums reproduce exactly."""
+    k, cin, cout, bk = 3, 2**15, 8, 512
+    bound = int_accum_bound(k, k, cin, variant=variant, base_bits=base_bits)
+    assert bound >= 2**31
+    qm = kom_qmax(base_bits)
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.standard_normal((1, 6, 6, cin)), jnp.float32)
+    wv = r.integers(-qm, qm + 1, (k, k, cin, cout)).astype(np.int16)
+    qw = QWeight(values=jnp.asarray(wv), scale=jnp.ones((cout,), jnp.float32),
+                 base_bits=base_bits)
+    out = np.asarray(conv2d_implicit(x, qw, stride=1, padding="VALID",
+                                     variant=variant, block=(8, 128, bk)))
+    # emulate: same per-patch scales (the jitted scale computation), int64
+    # partial accumulation per group, f32 fold in span order
+    ascale = np.asarray(jax.jit(
+        lambda v: _patch_scales(v, k, k, 1, qm))(x))
+    ho = wo = 6 - k + 1
+    every = recombine_schedule(k, k, cin, bk, variant=variant,
+                               base_bits=base_bits)
+    spans = group_spans(cin, bk, every)
+    assert len(spans) > 1, "case too shallow to exercise the group schedule"
+    split = lambda v: tuple(np.asarray(d, np.int64)
+                            for d in balanced_split(jnp.asarray(v), base_bits))
+    xh = np.asarray(x)
+    wh, wl = split(wv)
+    beta = 1 << base_bits
+    acc = np.zeros((1, ho, wo, cout), np.float32)
+    exact = np.zeros((1, ho, wo, cout), np.int64)
+    for c0, c1 in spans:
+        hh = np.zeros((1, ho, wo, cout), np.int64)
+        mid = np.zeros_like(hh)
+        ll = np.zeros_like(hh)
+        for dy in range(k):
+            for dx in range(k):
+                rows = xh[:, dy:dy + ho, dx:dx + wo, c0:c1]
+                q = np.clip(np.round(rows / ascale[..., None]), -qm, qm
+                            ).astype(np.int64)
+                ah, al = split(q)
+                bh, bl = wh[dy, dx, c0:c1], wl[dy, dx, c0:c1]
+                p_hh = np.einsum("nhwc,co->nhwo", ah, bh)
+                p_ll = np.einsum("nhwc,co->nhwo", al, bl)
+                if variant == "karatsuba":
+                    p_mid = np.einsum("nhwc,co->nhwo", ah + al, bh + bl) \
+                        - p_hh - p_ll
+                else:
+                    p_mid = (np.einsum("nhwc,co->nhwo", ah, bl)
+                             + np.einsum("nhwc,co->nhwo", al, bh))
+                hh += p_hh
+                mid += p_mid
+                ll += p_ll
+        for a in (hh, mid, ll):  # every group provably wrap-free in int32
+            assert np.abs(a).max() < 2**31
+        acc = acc + (hh.astype(np.float32) * (beta * beta)
+                     + mid.astype(np.float32) * beta + ll.astype(np.float32))
+        exact += hh * (beta * beta) + mid * beta + ll
+    ref = acc * (ascale[..., None] * np.float32(1.0))
+    np.testing.assert_array_equal(out, ref, err_msg=(
+        f"{variant}: grouped fold diverges from the int64-exact emulation"))
+    # and the grouped f32 fold tracks the int64-exact value to f32 rounding
+    rel = np.abs(out - exact * ascale[..., None]).max() / \
+        np.abs(exact * ascale[..., None]).max()
+    assert rel < 1e-5, rel
+    # determinism: a second run reproduces the same bits
+    again = np.asarray(conv2d_implicit(x, qw, stride=1, padding="VALID",
+                                       variant=variant, block=(8, 128, bk)))
+    np.testing.assert_array_equal(out, again)
+
+
+def test_padded_cin_near_bound_not_rejected():
+    """A layer UNDER the int31 bound whose cin is not a bk multiple must run
+    the single-group schedule on the Pallas path too: zero-padded channels
+    contribute exact zeros, so the wrap-free model must count only REAL
+    channels.  (Regression: the in-kernel assert used the channel-padded
+    cin and spuriously rejected cin=9600 at 3x3/int14, where the padded
+    9728 slots exceed the 9709-term bound the real 9600 sit under.)"""
+    k, cin, cout, bk = 3, 9600, 8, 512
+    assert int_accum_bound(k, k, cin, variant="karatsuba", base_bits=7) \
+        < 2**31
+    assert -(-cin // bk) * bk > 2**31 // (6 * 64 * 64 * k * k)  # padded over
+    x, w = _case(k, h=6, cin=cin, cout=cout)
+    qw = quantize_weight(w)
+    ker = conv2d_implicit(x, qw, stride=1, padding="VALID",
+                          variant="karatsuba", block=(8, 128, bk),
+                          use_pallas=True, interpret=True)
+    mir = conv2d_implicit(x, qw, stride=1, padding="VALID",
+                          variant="karatsuba", block=(8, 128, bk),
+                          use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ker), np.asarray(mir))
+
+
+# -- 4. kernel == mirror ------------------------------------------------------
+
+@pytest.mark.parametrize("variant,base_bits",
+                         [("karatsuba", 7), ("schoolbook", 8)])
+@pytest.mark.parametrize("k,s,pad,cin,fold_every", [
+    (3, 1, "SAME", 8, None),
+    (5, 2, "SAME", 16, None),
+    (3, 1, "VALID", 32, 2),   # forced multi-group: nk=4 chunks, fold every 2
+    (1, 1, "SAME", 16, 1),    # fold on every K step
+])
+def test_pallas_kernel_bitwise_equals_mirror(variant, base_bits, k, s, pad,
+                                             cin, fold_every):
+    """The interpret-mode Pallas kernel and the off-TPU lax mirror run the
+    SAME schedule (same quant, same group boundaries, same fold order) and
+    must agree bitwise for the integer variants."""
+    x, w = _case(k, s, h=12, cin=cin, cout=16, n=2)
+    qw = quantize_weight(w, base_bits=base_bits)
+    block = (8, 128, 8)
+    mir = conv2d_implicit(x, qw, stride=s, padding=pad, variant=variant,
+                          block=block, fold_every=fold_every,
+                          use_pallas=False)
+    ker = conv2d_implicit(x, qw, stride=s, padding=pad, variant=variant,
+                          block=block, fold_every=fold_every,
+                          use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(mir), np.asarray(ker))
+
+
+def test_pallas_kernel_float_variants_match_mirror():
+    x, w = _case(3, h=12, cin=16, cout=8)
+    for variant, tol in (("native", 1e-5), ("bf16x3", 1e-4), ("bf16x6", 1e-5)):
+        mir = conv2d_implicit(x, w, variant=variant, block=(8, 128, 8),
+                              use_pallas=False)
+        ker = conv2d_implicit(x, w, variant=variant, block=(8, 128, 8),
+                              use_pallas=True, interpret=True)
+        rel = float(jnp.abs(mir - ker).max() / jnp.abs(mir).max())
+        assert rel < tol, (variant, rel)
+
+
+# -- 5. golden sweep + fused epilogue + policy guards -------------------------
+
+@pytest.mark.parametrize("k,s,pad", [(k, s, pad)
+                                     for k in (1, 3, 5, 11)
+                                     for s in (1, 2, 4)
+                                     for pad in ("SAME", "VALID")])
+def test_implicit_golden_sweep(k, s, pad):
+    """k=1 through the AlexNet 11x11: fp32 matches XLA to fp tolerance,
+    kom_int14 to the quantization noise floor -- any kernel/stride/padding,
+    no shape restrictions."""
+    x, w = _case(k, s, h=23, cin=4, cout=8)
+    ref = conv2d_ref(x, w, stride=s, padding=pad)
+    got = conv2d(x, w, stride=s, padding=pad, policy=MatmulPolicy.FP32,
+                 path="implicit")
+    assert got.shape == ref.shape
+    assert float(jnp.abs(got - ref).max() / jnp.abs(ref).max()) < 1e-4
+    goti = conv2d(x, quantize_weight(w), stride=s, padding=pad,
+                  policy=MatmulPolicy.KOM_INT14, path="implicit")
+    assert float(jnp.abs(goti - ref).max() / jnp.abs(ref).max()) < 1e-2
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+def test_implicit_fused_bitwise_equals_unfused(policy):
+    from repro.core.substrate import policy_int_spec
+    x, w = _case(3, h=16, cin=8, cout=16, n=2)
+    b = jnp.asarray(rng.standard_normal((16,)), jnp.float32)
+    qw = quantize_weight(w, base_bits=policy_int_spec(policy)[1])
+    fused = jax.jit(lambda v: conv2d(v, qw, policy=policy, path="implicit",
+                                     bias=b, activation="relu"))(x)
+    unfused = jax.jit(lambda v: jax.nn.relu(
+        conv2d(v, qw, policy=policy, path="implicit") + b))(x)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+    # eager regime too
+    np.testing.assert_array_equal(
+        np.asarray(conv2d(x, qw, policy=policy, path="implicit",
+                          bias=b, activation="relu")),
+        np.asarray(jax.nn.relu(conv2d(x, qw, policy=policy,
+                                      path="implicit") + b)))
+
+
+def test_explicit_implicit_rejects_native_bf16():
+    """native_bf16 is implemented by neither Pallas engine: explicit
+    path='implicit' raises instead of silently running native dots, while
+    the bf16 emulation policies (which the engine DOES run exactly) work."""
+    x, w = _case(3)
+    with pytest.raises(ValueError, match="implicit"):
+        conv2d(x, w, policy=MatmulPolicy.NATIVE_BF16, path="implicit")
+    ref = conv2d_ref(x, w)
+    for policy in (MatmulPolicy.BF16X3, MatmulPolicy.BF16X6):
+        out = conv2d(x, w, policy=policy, path="implicit")
+        assert float(jnp.abs(out - ref).max() / jnp.abs(ref).max()) < 5e-2
