@@ -1,0 +1,145 @@
+"""CI perf gate: fail the build on a real throughput regression (ISSUE 6).
+
+Compares a freshly measured bench record (``table_convnets.py --json``,
+CI's ``--smoke`` lane) against the committed baseline
+``BENCH_convnets.json``.  Rows are matched by identity -- serving rows by
+(model, path, policy), deep-layer rows by (model, path, policy, shape) --
+and judged on ``images_per_s``.
+
+The CI runner is not the machine the baseline was measured on, so raw
+ratios are useless: EVERY row reads slow on a loaded shared runner.  The
+gate therefore self-calibrates -- with per-row ratios
+``r = new / baseline``, the median ratio estimates the machine-speed
+factor, and a row fails only when ``r / median(r)`` drops below the
+threshold (default 0.85, i.e. a >15% regression RELATIVE to how every
+other row moved).  A real regression shifts one path's rows while the
+median (dominated by untouched paths) stays put; a slow runner shifts
+everything and cancels.  ``--absolute`` skips calibration for same-machine
+comparisons (local full runs against the committed record).
+
+Fewer than ``--min-rows`` common rows means the records are not
+comparable (schema drift, wrong file) -- the gate SKIPS rather than
+passes vacuously, and says so.
+
+Usage (mirrors .github/workflows/ci.yml):
+
+    python -m benchmarks.perf_gate BENCH_convnets.json BENCH_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from typing import Dict, Tuple
+
+Key = Tuple
+DEFAULT_THRESHOLD = 0.85
+DEFAULT_MIN_ROWS = 3
+
+
+def bench_rows(payload: dict) -> Dict[Key, float]:
+    """Flatten a bench-convnets/v1 payload into {identity key: images/sec}.
+
+    Rows without a throughput number (failed / skipped measurements) are
+    dropped -- a missing row can never fail the gate, only shrink the
+    common set.
+    """
+    rows: Dict[Key, float] = {}
+    for r in payload.get("serving", []):
+        if r.get("images_per_s"):
+            rows[("serving", r["model"], r["path"], r["policy"])] = float(
+                r["images_per_s"])
+    for r in payload.get("layers", []):
+        if r.get("images_per_s"):
+            rows[("layer", r["model"], r["path"], r["policy"],
+                  r["k"], r["cin"], r["cout"], r["stride"], r["h"])] = float(
+                r["images_per_s"])
+    return rows
+
+
+def gate(baseline: dict, new: dict, *, threshold: float = DEFAULT_THRESHOLD,
+         absolute: bool = False, min_rows: int = DEFAULT_MIN_ROWS) -> dict:
+    """Judge ``new`` against ``baseline``.
+
+    Returns a report dict: ``status`` is "pass" / "fail" / "skip",
+    ``calibration`` the machine-speed factor divided out (1.0 under
+    ``absolute``), ``failures`` the offending rows with their raw and
+    calibrated ratios, ``rows`` every compared row (for the CI log).
+    """
+    base_rows = bench_rows(baseline)
+    new_rows = bench_rows(new)
+    common = sorted(set(base_rows) & set(new_rows))
+    if len(common) < min_rows:
+        return {"status": "skip", "n_common": len(common),
+                "min_rows": min_rows, "calibration": None,
+                "failures": [], "rows": []}
+    ratios = {k: new_rows[k] / base_rows[k] for k in common}
+    calibration = 1.0 if absolute else statistics.median(ratios.values())
+    rows, failures = [], []
+    for k in common:
+        rel = ratios[k] / calibration
+        row = {"key": list(k), "baseline": base_rows[k], "new": new_rows[k],
+               "ratio": round(ratios[k], 4), "relative": round(rel, 4),
+               "ok": rel >= threshold}
+        rows.append(row)
+        if not row["ok"]:
+            failures.append(row)
+    return {"status": "fail" if failures else "pass",
+            "n_common": len(common), "min_rows": min_rows,
+            "calibration": round(calibration, 4), "threshold": threshold,
+            "failures": failures, "rows": rows}
+
+
+def _fmt_key(key) -> str:
+    return "/".join(str(p) for p in key)
+
+
+def print_report(report: dict, out=None) -> None:
+    out = out if out is not None else sys.stdout
+    if report["status"] == "skip":
+        print(f"perf gate: SKIP -- only {report['n_common']} comparable "
+              f"rows (< {report['min_rows']}); records not comparable",
+              file=out)
+        return
+    print(f"perf gate: {report['n_common']} rows, machine calibration "
+          f"{report['calibration']}x, threshold {report['threshold']}",
+          file=out)
+    for row in report["rows"]:
+        mark = "ok  " if row["ok"] else "FAIL"
+        print(f"  {mark} {_fmt_key(row['key'])}: "
+              f"{row['baseline']:.1f} -> {row['new']:.1f} img/s "
+              f"(raw {row['ratio']}x, calibrated {row['relative']}x)",
+              file=out)
+    if report["failures"]:
+        print(f"perf gate: FAIL -- {len(report['failures'])} row(s) "
+              f"regressed >{100 * (1 - report['threshold']):.0f}% vs the "
+              f"calibrated baseline", file=out)
+    else:
+        print("perf gate: PASS", file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_convnets.json")
+    ap.add_argument("new", help="freshly measured bench JSON (smoke lane)")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="minimum calibrated throughput ratio (default "
+                         f"{DEFAULT_THRESHOLD}: >15%% regression fails)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="no machine calibration (same-machine comparison)")
+    ap.add_argument("--min-rows", type=int, default=DEFAULT_MIN_ROWS,
+                    help="skip (exit 0) below this many comparable rows")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    report = gate(baseline, new, threshold=args.threshold,
+                  absolute=args.absolute, min_rows=args.min_rows)
+    print_report(report)
+    return 1 if report["status"] == "fail" else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

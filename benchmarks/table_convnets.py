@@ -21,6 +21,14 @@ widths even under ``--smoke``), the modeled HBM-bytes-per-image delta
 smoke lane uploads it as an artifact so the bench trajectory stops being
 empty.
 
+ISSUE 6 additions: a ``winograd`` serving row and deep-layer wall per
+(model, policy) for the integer F(2x2,3x3) transform engine, per-model
+transform-vs-direct multiply counts (16 tile products vs 36 spatial MACs
+per 2x2 output tile), and per-layer ``roofline_us`` / ``achieved_frac``
+fields from :func:`repro.analysis.roofline.conv_layer_roofline`.  The
+committed ``BENCH_convnets.json`` is the CI perf gate's baseline
+(``benchmarks/perf_gate.py``).
+
 ``--smoke`` (used by CI): reduced configs and single-step measurements only,
 so the whole serving/benchmark path executes in seconds and cannot rot.
 """
@@ -28,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +45,7 @@ import numpy as np
 from repro.core.precision import MatmulPolicy
 from repro.core.substrate import conv2d, quantize_weight, select_conv_path
 from repro.core.tuning import conv_hbm_bytes
+from repro.kernels.conv2d.winograd import winograd_scale_eligible
 from repro.models.cnn import ALEXNET, VGG16, VGG19, cnn_init, cnn_reduced
 from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
 
@@ -76,14 +86,18 @@ def _conv_layers(cfg):
 
 
 def _deep_layer_rows(emit, record, smoke: bool):
-    """Implicit-GEMM vs materialized im2col on the deep-Cin layers: wall,
-    images/sec and the modeled HBM-bytes-per-image delta (the ISSUE 4
-    acceptance rows)."""
+    """Per-engine walls on the deep-Cin layers: materialized im2col vs the
+    implicit GEMM (ISSUE 4) vs the integer winograd transform engine
+    (ISSUE 6) -- wall, images/sec, modeled HBM bytes, transform-vs-direct
+    multiply counts, and the achieved-vs-roofline fraction."""
+    from repro.analysis.roofline import conv_layer_roofline
+
     rng = np.random.default_rng(7)
     iters, warmup = (1, 1) if smoke else (3, 1)
     layers = SMOKE_DEEP if smoke else DEEP_LAYERS
     policies = ([MatmulPolicy.KOM_INT14] if smoke
                 else [MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16])
+    paths = ("im2col", "implicit", "winograd")
     for model, shapes in layers.items():
         for (k, cin, cout, stride, h) in shapes:
             x = jnp.asarray(rng.standard_normal((1, h, h, cin)), jnp.float32)
@@ -93,41 +107,69 @@ def _deep_layer_rows(emit, record, smoke: bool):
                 from repro.core.substrate import policy_int_spec
                 variant, base_bits = policy_int_spec(pol)
                 qw = quantize_weight(w, base_bits=base_bits)
-                walls = {}
-                for path in ("im2col", "implicit"):
-                    fn = jax.jit(lambda a, q, p=path: conv2d(
+                walls, roofs = {}, {}
+                for path in paths:
+                    # The PUBLIC serving-path call convention: the conv2d
+                    # wrappers are eager shells around jitted cores (PR 4),
+                    # so per-QWeight state (the winograd engine's cached
+                    # transformed weight operands) engages exactly as it
+                    # does when serving a cached-weight model.  An extra
+                    # outer jit would demote the cached weight to a tracer
+                    # and re-transform it every call.
+                    fn = lambda a, q, p=path: conv2d(
                         a, q, stride=stride, padding="SAME",
-                        policy=pol, path=p))
+                        policy=pol, path=p)
                     walls[path] = time_call(fn, x, qw, iters=iters,
                                             warmup=warmup)
+                    roofs[path] = conv_layer_roofline(
+                        path, kh=k, kw=k, stride=stride, h=h, cin=cin,
+                        cout=cout, variant=variant, base_bits=base_bits)
                 hbm = {path: conv_hbm_bytes(
                     path, kh=k, kw=k, stride=stride, h=h, cin=cin, cout=cout,
                     variant=variant, base_bits=base_bits)
-                    for path in ("im2col", "implicit")}
+                    for path in paths}
                 speedup = walls["im2col"] / walls["implicit"] \
                     if walls["implicit"] else 0.0
+                wino_speedup = walls["implicit"] / walls["winograd"] \
+                    if walls["winograd"] else 0.0
+                wino = roofs["winograd"]
                 name = (f"convnets/{model}/deep_layer"
                         f"/k{k}_cin{cin}_cout{cout}_h{h}/{pol.value}")
                 emit(name, walls["implicit"],
                      f"implicit_us={walls['implicit']:.1f} "
                      f"im2col_us={walls['im2col']:.1f} "
+                     f"winograd_us={walls['winograd']:.1f} "
                      f"speedup={speedup:.2f}x "
+                     f"wino_vs_implicit={wino_speedup:.2f}x "
+                     f"mults_direct={wino['direct_mults']:.3g} "
+                     f"mults_winograd={wino['mults']:.3g} "
+                     f"mult_saving={wino['transform_saving']:.2f}x "
                      f"hbm_implicit_mb={hbm['implicit'] / 2**20:.1f} "
                      f"hbm_im2col_mb={hbm['im2col'] / 2**20:.1f} "
                      f"hbm_ratio={hbm['im2col'] / hbm['implicit']:.2f}x")
-                for path in ("im2col", "implicit"):
+                for path in paths:
+                    roof_us = 1e6 * roofs[path]["roofline_s"]
                     record("layers", dict(
                         model=model, k=k, cin=cin, cout=cout, stride=stride,
                         h=h, policy=pol.value, path=path,
                         wall_us=round(walls[path], 2),
                         images_per_s=round(1e6 / walls[path], 3)
                         if walls[path] else None,
-                        hbm_bytes_per_image=hbm[path]))
+                        hbm_bytes_per_image=hbm[path],
+                        mults=roofs[path]["mults"],
+                        direct_mults=roofs[path]["direct_mults"],
+                        roofline_us=round(roof_us, 3),
+                        achieved_frac=round(roof_us / walls[path], 6)
+                        if walls[path] else None))
 
 
 def run(emit, smoke: bool = False, record=lambda *a, **k: None):
     rng = np.random.default_rng(0)
-    iters, warmup, n_serve = (1, 1, 4) if smoke else (5, 1, 12)
+    # n_serve is mode-independent: serving rows feed the perf gate, so the
+    # smoke record and the committed full-run baseline must measure the
+    # same stream (steady-state timing differences only).
+    iters, warmup = (1, 1) if smoke else (5, 1)
+    n_serve = 12
     for cfg in (ALEXNET, VGG16, VGG19):
         total_flops = 0.0
         kernel_counts = {}
@@ -155,6 +197,24 @@ def run(emit, smoke: bool = False, record=lambda *a, **k: None):
                  f"conv_gflops={total_flops/1e9:.2f} v5e_ms={v5e_ms:.3f}")
         emit(f"convnets/{cfg.name}/kernels", 0.0,
              " ".join(f"{k}x{k}:{c}" for k, c in sorted(kernel_counts.items())))
+        # winograd transform arithmetic: total wide multiplies the F(2x2,3x3)
+        # engine issues on this net's eligible (3x3/s1, int-serving) layers
+        # vs the direct spatial-tap count those layers cost every other
+        # engine (the transforms themselves are shift-and-add).
+        from repro.analysis.roofline import conv_mult_counts
+        from repro.core.substrate import policy_int_spec
+        direct_m = wino_m = 0.0
+        for (k, cin, cout, stride, h, oh) in _conv_layers(cfg):
+            counts = conv_mult_counts(
+                "winograd" if winograd_scale_eligible(
+                    k, k, stride, cin, variant="karatsuba", base_bits=7)
+                else "im2col",
+                kh=k, kw=k, stride=stride, h=h, cin=cin, cout=cout)
+            direct_m += counts["direct_mults"]
+            wino_m += counts["mults"]
+        emit(f"convnets/{cfg.name}/winograd_mults", 0.0,
+             f"direct={direct_m:.4g} winograd={wino_m:.4g} "
+             f"saving={direct_m / max(wino_m, 1.0):.2f}x")
         # executed spot-check: first conv layer through the substrate entry
         # point with the weight quantized ONCE up front (per-output-channel
         # scales) -- the serving configuration.  --smoke uses the reduced
@@ -188,24 +248,39 @@ def run(emit, smoke: bool = False, record=lambda *a, **k: None):
              f"speedup={us_u / us_f if us_f else 0.0:.2f}x")
         # end-to-end serving: images/sec through the bucketed engine per
         # conv path (reduced config on CPU; weights prequantized once,
-        # every steady-state step a jit cache hit after warmup).
+        # every steady-state step a jit cache hit after warmup).  The
+        # measurement protocol is IDENTICAL under --smoke and full runs
+        # (same buckets, same images-per-trial, best-of-N trials) so the
+        # perf gate compares like against like: a smoke row and a
+        # committed-baseline row differ only by machine, never by batching
+        # config or first-trial jitter.
         small = cnn_reduced(cfg).replace(policy=MatmulPolicy.KOM_INT14)
         params = cnn_init(small, jax.random.PRNGKey(0))
-        for path in ("auto", "im2col", "systolic", "implicit"):
+        serve_trials = 2 if smoke else 3
+        for path in ("auto", "im2col", "systolic", "implicit", "winograd"):
             # "auto" is what users get: per-layer selection (thin stem on
             # the small patch GEMM, deep layers streamed -- DESIGN.md 7.4).
-            # buckets the image stream actually hits: warming an unused
-            # bucket would cost a whole interpret-mode Pallas compile
+            # single bucket the image stream actually hits: warming an
+            # unused bucket would cost a whole interpret-mode Pallas
+            # compile, and a second bucket shape would make throughput a
+            # function of how the stream packs instead of the conv engine.
             eng = CNNServeEngine(small.replace(conv_path=path), params,
-                                 buckets=(4,) if smoke else (4, 8))
+                                 buckets=(4,))
             eng.warmup()
             h, c = small.img_size, small.in_channels
-            for uid in range(n_serve):
-                img = rng.standard_normal((h, h, c)).astype(np.float32)
-                eng.submit(ImageRequest(uid=uid, image=img))
-            eng.run()
+            imgs = [rng.standard_normal((h, h, c)).astype(np.float32)
+                    for _ in range(n_serve)]
+            best, uid = 0.0, 0
+            for _ in range(serve_trials):
+                t0 = time.perf_counter()
+                for img in imgs:
+                    eng.submit(ImageRequest(uid=uid, image=img))
+                    uid += 1
+                eng.run()
+                best = max(best, n_serve / (time.perf_counter() - t0))
             s = eng.stats()
-            wall_us = 1e6 / s["images_per_s"] if s["images_per_s"] else 0.0
+            s["images_per_s"] = best
+            wall_us = 1e6 / best if best else 0.0
             emit(f"convnets/{cfg.name}/serve_{path}", wall_us,
                  f"img_per_s={s['images_per_s']:.1f} "
                  f"pad={s['padding_fraction']:.2f} img={small.img_size} "
@@ -216,7 +291,8 @@ def run(emit, smoke: bool = False, record=lambda *a, **k: None):
                 wall_us_per_image=round(wall_us, 2),
                 p95_ms=round(1e3 * s["latency_p95_s"], 3),
                 padding_fraction=round(s["padding_fraction"], 4),
-                img_size=small.img_size, reduced=True))
+                img_size=small.img_size, reduced=True,
+                n_images=n_serve, trials=serve_trials, buckets=[4]))
     _deep_layer_rows(emit, record, smoke)
 
 

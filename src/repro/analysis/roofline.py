@@ -127,6 +127,60 @@ class Roofline:
         }
 
 
+#: MXU passes one wide multiply costs per limb variant (karatsuba: 3 digit
+#: passes; schoolbook: 4) -- benchmarks.common.POLICY_MODEL's pass column.
+_VARIANT_PASSES = {"karatsuba": 3, "schoolbook": 4}
+
+
+def conv_mult_counts(path: str, *, kh, kw, stride, h, cin, cout,
+                     n: int = 1) -> Dict[str, float]:
+    """Wide-multiply demand of one SAME conv layer per engine.
+
+    ``direct``: the spatial-tap count ho*wo*kh*kw*cin*cout every direct
+    engine (im2col / systolic / implicit) pays.  ``mults``: what ``path``
+    actually issues -- the winograd F(2x2,3x3) engine replaces the 36 MACs
+    of each 2x2 output tile with 16 transformed-point products, i.e.
+    tiles*16*cin*cout (a 2.25x reduction on even grids; the integer B/G/A
+    transforms are shift-and-add, not multiplies).
+    """
+    ho = wo = -(-h // stride)
+    direct = float(n * ho * wo * kh * kw * cin * cout)
+    if path == "winograd":
+        tiles = n * (-(-ho // 2)) * (-(-wo // 2))
+        mults = float(tiles * 16 * cin * cout)
+    else:
+        mults = direct
+    return {"mults": mults, "direct_mults": direct,
+            "transform_saving": direct / max(mults, 1.0)}
+
+
+def conv_layer_roofline(path: str, *, kh, kw, stride, h, cin, cout,
+                        variant: str = "karatsuba", base_bits: int = 7,
+                        n: int = 1) -> Dict[str, float]:
+    """v5e roofline floor for one conv layer on engine ``path`` (seconds).
+
+    compute_s prices the engine's wide multiplies (2 flops each) times the
+    limb variant's MXU pass count at the int8 rate (the limb planes issue
+    as narrow-int dots); memory_s prices the engine's modeled HBM traffic
+    (:func:`repro.core.tuning.conv_hbm_bytes`).  The floor is their max --
+    the perfect-overlap assumption the step-time roofline above uses.
+    Benchmark layer records divide this into the measured wall to report
+    an achieved-vs-roofline fraction per (layer, path).
+    """
+    from repro.core.tuning import conv_hbm_bytes
+
+    counts = conv_mult_counts(path, kh=kh, kw=kw, stride=stride, h=h,
+                              cin=cin, cout=cout, n=n)
+    passes = _VARIANT_PASSES.get(variant)
+    peak = V5E["peak_int8"] if passes else V5E["peak_bf16"]
+    compute_s = 2.0 * counts["mults"] * (passes or 1) / peak
+    memory_s = conv_hbm_bytes(path, kh=kh, kw=kw, stride=stride, h=h,
+                              cin=cin, cout=cout, variant=variant,
+                              base_bits=base_bits, n=n) / V5E["hbm_bw"]
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "roofline_s": max(compute_s, memory_s), **counts}
+
+
 def roofline_from_stats(stats, n_chips: int, mflops: float) -> Roofline:
     f8 = getattr(stats, "flops_int8", 0.0)
     f32 = getattr(stats, "flops_f32", 0.0)

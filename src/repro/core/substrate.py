@@ -116,6 +116,45 @@ def split_limbs(
     return hi.astype(narrow_dtype), lo.astype(narrow_dtype)
 
 
+def limb_partials_presplit(
+    ah: jax.Array,
+    al: jax.Array,
+    bh: jax.Array,
+    bl: jax.Array,
+    dimension_numbers=MATMUL_DNUMS,
+    *,
+    variant: Variant = "karatsuba",
+    narrow_dtype=jnp.int8,
+    accum_dtype=jnp.int32,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The narrow MXU passes over ALREADY-SPLIT limb planes.
+
+    The Winograd engine transforms each limb plane separately (the B/G
+    transforms are linear, so transform-after-split is exact) and the
+    transformed planes are no longer balanced digits of anything -- they
+    must be contracted as-is.  This is the pass schedule shared with
+    :func:`limb_partials`, minus the split.  ``narrow_dtype`` must hold the
+    digit sums (int8 for fresh balanced digits under the guard bit; int16
+    for transformed planes, whose entries grow past s8).
+    """
+    if variant not in PASS_COUNTS:
+        raise ValueError(f"unknown variant: {variant}")
+    dot = functools.partial(
+        lax.dot_general,
+        dimension_numbers=dimension_numbers,
+        preferred_element_type=accum_dtype,
+    )
+    nd = lambda t: t.astype(narrow_dtype)
+    p_hh = dot(nd(ah), nd(bh))
+    p_ll = dot(nd(al), nd(bl))
+    if variant == "karatsuba":
+        # Third and final multiply; digit sums fit the narrow dtype.
+        p_mid = dot(nd(ah + al), nd(bh + bl)) - p_hh - p_ll
+    else:
+        p_mid = dot(nd(ah), nd(bl)) + dot(nd(al), nd(bh))
+    return p_hh, p_mid, p_ll
+
+
 def limb_partials(
     a: jax.Array,
     b: jax.Array,
@@ -142,20 +181,10 @@ def limb_partials(
         )
     ah, al = balanced_split(a, base_bits)
     bh, bl = balanced_split(b, base_bits)
-    dot = functools.partial(
-        lax.dot_general,
-        dimension_numbers=dimension_numbers,
-        preferred_element_type=accum_dtype,
+    return limb_partials_presplit(
+        ah, al, bh, bl, dimension_numbers,
+        variant=variant, narrow_dtype=narrow_dtype, accum_dtype=accum_dtype,
     )
-    nd = lambda t: t.astype(narrow_dtype)
-    p_hh = dot(nd(ah), nd(bh))
-    p_ll = dot(nd(al), nd(bl))
-    if variant == "karatsuba":
-        # Third and final multiply; digit sums fit s8 thanks to the guard bit.
-        p_mid = dot(nd(ah + al), nd(bh + bl)) - p_hh - p_ll
-    else:
-        p_mid = dot(nd(ah), nd(bl)) + dot(nd(al), nd(bh))
-    return p_hh, p_mid, p_ll
 
 
 def limb_recombine(
@@ -359,6 +388,7 @@ def prequant_dot_general(
     dimension_numbers=MATMUL_DNUMS,
     *,
     variant: Variant = "karatsuba",
+    row_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Dynamic per-row activation quant x cached per-channel weight.
 
@@ -374,15 +404,27 @@ def prequant_dot_general(
     per-tensor scale, which voids per-row invariance and is documented as
     such.
 
+    ``row_scale``: a precomputed activation scale, broadcastable against
+    ``x`` -- callers that share one scale plan across conv paths (the
+    Winograd tile-granular scales, DESIGN.md section 7.5) pass it so every
+    path quantizes with the SAME rounding: q = clip(round(x / row_scale)).
+
     INFERENCE-ONLY: unlike the quantize-on-the-fly policy path (which
     installs a straight-through VJP), this path refuses differentiation --
     training must run on the float params and quantize at deployment.
     """
     x = _inference_only(x)  # raises under jax.grad instead of silent zeros
-    (lcs, _), (lb, rb) = dimension_numbers
-    per_row = tuple(lcs) == (x.ndim - 1,) and not lb and not rb
-    qx = quantize_symmetric(x, base_bits=w.base_bits,
-                            axis=tuple(range(x.ndim - 1)) if per_row else None)
+    if row_scale is not None:
+        qmax = kom_qmax(w.base_bits)
+        qv = jnp.clip(jnp.round(x.astype(jnp.float32) / row_scale),
+                      -qmax, qmax).astype(jnp.int32)
+        qx = QTensor(values=qv, scale=row_scale, qmax=qmax)
+    else:
+        (lcs, _), (lb, rb) = dimension_numbers
+        per_row = tuple(lcs) == (x.ndim - 1,) and not lb and not rb
+        qx = quantize_symmetric(
+            x, base_bits=w.base_bits,
+            axis=tuple(range(x.ndim - 1)) if per_row else None)
     raw = limb_dot_general(
         qx.values, w.values.astype(jnp.int32), dimension_numbers,
         variant=variant, base_bits=w.base_bits,
@@ -414,9 +456,26 @@ def conv_pads(h, w, kh, kw, stride, padding):
     return ho, wo, pads
 
 
+def _stem_cin_threshold(stem_cin: int | None) -> int:
+    """The thin-stem routing threshold: tuner-cached per backend, default 16.
+
+    ``select_conv_path`` callers may pass an explicit ``stem_cin``; otherwise
+    the persistent tuner cache is consulted (key ``dispatch|stem_cin|<backend>``
+    -- per-backend measurement, not a constant, decides stem routing).
+    """
+    if stem_cin is not None:
+        return stem_cin
+    try:
+        from .tuning import stem_cin as tuned_stem_cin
+        return tuned_stem_cin()
+    except Exception:
+        return 16
+
+
 def select_conv_path(
     *, kh: int, kw: int, stride: int, cin: int, cout: int,
     on_tpu: bool | None = None, policy=None, cached_weight: bool = False,
+    padding: str = "SAME", stem_cin: int | None = None,
 ) -> str:
     """Shape- and policy-driven conv dispatch (DESIGN.md sections 7.1/7.4).
 
@@ -447,15 +506,31 @@ def select_conv_path(
         XLA's native patch GEMM is the right float call);
       * native_bf16 stays on im2col (not implemented by either engine).
 
+    3x3/stride-1/SAME layers under ``winograd_accum_bound`` with a cached
+    QWeight under an integer policy prefer ``winograd`` on EVERY backend:
+    F(2x2, 3x3) cuts the pointwise multiplies ~2.25x exactly where the limb
+    substrate already pays 3-4 passes per multiply (DESIGN.md section 7.5).
+
+    The ``cin >= 16`` thin-stem threshold is tuner-cached per backend
+    (``stem_cin``); pass ``stem_cin=`` to override, default 16.
+
     ``policy=None`` keeps the legacy shape-only rules (im2col/systolic).
     """
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
-    systolic_shape = (max(kh, kw) <= 7 and stride <= 2 and cin >= 16
+    stem = _stem_cin_threshold(stem_cin)
+    systolic_shape = (max(kh, kw) <= 7 and stride <= 2 and cin >= stem
                       and cout % 128 == 0)
     if policy is not None:
         pv = getattr(policy, "value", policy)
         is_int = pv in INT_POLICY_SPECS
+        if is_int and cached_weight and kh == 3 and kw == 3 and stride == 1 \
+                and padding == "SAME" and cin >= stem:
+            from repro.kernels.conv2d.winograd import winograd_accum_bound
+            variant, base_bits = INT_POLICY_SPECS[pv]
+            if winograd_accum_bound(cin, variant=variant,
+                                    base_bits=base_bits) < 2**31:
+                return "winograd"
         # The systolic engine keeps its TPU niche -- but an integer policy
         # with FLOAT weights is the trainable configuration, and both Pallas
         # engines quantize weights with a plain round/clip (no straight-
@@ -464,8 +539,8 @@ def select_conv_path(
                 and (cached_weight or not is_int)):
             return "systolic"
         if is_int:
-            return "implicit" if (cached_weight and cin >= 16) else "im2col"
-        if implicit_supported(policy) and on_tpu and cin >= 16:
+            return "implicit" if (cached_weight and cin >= stem) else "im2col"
+        if implicit_supported(policy) and on_tpu and cin >= stem:
             return "implicit"
         return "im2col"
     if not on_tpu:
@@ -505,12 +580,13 @@ def conv2d(
     """
     # Lazy imports: systolic/kernels import this module for the limb core.
     from .systolic import conv2d_im2col
-    from repro.kernels.conv2d import conv2d_implicit, conv2d_systolic
+    from repro.kernels.conv2d import (
+        conv2d_implicit, conv2d_systolic, conv2d_winograd)
 
     kh, kw, cin, cout = w.shape
     if path == "auto":
         path = select_conv_path(kh=kh, kw=kw, stride=stride, cin=cin,
-                                cout=cout, policy=policy,
+                                cout=cout, policy=policy, padding=padding,
                                 cached_weight=isinstance(w, QWeight))
         # Defense in depth: even if the selector is overridden/buggy, auto
         # must never downgrade a policy to an engine that cannot run it
@@ -518,6 +594,8 @@ def conv2d(
         if path == "systolic" and not systolic_exact(policy):
             path = "im2col"
         if path == "implicit" and not implicit_supported(policy):
+            path = "im2col"
+        if path == "winograd" and policy_int_spec(policy) is None:
             path = "im2col"
     if path == "im2col":
         return conv2d_im2col(x, w, stride=stride, padding=padding,
@@ -559,6 +637,21 @@ def conv2d(
         else:
             variant, base_bits = spec
         return conv2d_implicit(
+            x, w, stride=stride, padding=padding,
+            variant=variant, base_bits=base_bits,
+            bias=bias, activation=activation, interpret=interpret,
+        )
+    if path == "winograd":
+        spec = policy_int_spec(policy)
+        if spec is None:
+            raise ValueError(
+                f"path='winograd' cannot run policy "
+                f"{getattr(policy, 'value', policy)!r}: the Winograd engine "
+                "runs the integer limb policies only (the transforms live in "
+                "the quantized-limb domain) -- use path='auto' or "
+                "path='im2col'")
+        variant, base_bits = spec
+        return conv2d_winograd(
             x, w, stride=stride, padding=padding,
             variant=variant, base_bits=base_bits,
             bias=bias, activation=activation, interpret=interpret,

@@ -16,7 +16,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from .precision import MatmulPolicy, policy_matmul
-from .substrate import QWeight, conv_pads
+from .substrate import (
+    QWeight,
+    conv_pads,
+    kom_qmax,
+    policy_int_spec,
+    prequant_dot_general,
+)
 
 
 def fir_systolic(x: jax.Array, h: jax.Array) -> jax.Array:
@@ -38,6 +44,28 @@ def fir_systolic(x: jax.Array, h: jax.Array) -> jax.Array:
     return y
 
 
+@functools.partial(jax.jit, static_argnames=("variant", "ho", "wo"))
+def _im2col_tile_gemm(cols, wmat, xp, *, variant, ho, wo):
+    """Tile-scaled int GEMM for winograd-eligible layers, under jit.
+
+    The scale grid, the /scale quantization, and the dequant multiply all
+    live inside ONE jit scope so their floating-point rewrites match the
+    (internally jitted) winograd and implicit cores bit for bit whether the
+    caller is eager or jitted -- the same regime-pinning trick those cores
+    use (DESIGN.md section 7.5).
+    """
+    from repro.kernels.conv2d.winograd import (
+        tile_scale_grid,
+        tile_scales_upsampled,
+    )
+    qmax = kom_qmax(wmat.base_bits)
+    ho_t, wo_t = -(-ho // 2), -(-wo // 2)
+    s_tile = tile_scale_grid(xp, qmax, ho_t, wo_t)
+    row_scale = tile_scales_upsampled(s_tile, ho, wo).reshape(-1, 1)
+    return prequant_dot_general(cols, wmat, variant=variant,
+                                row_scale=row_scale)
+
+
 def conv2d_im2col(
     x: jax.Array,
     w: jax.Array,
@@ -57,7 +85,7 @@ def conv2d_im2col(
     -- the im2col half of the fused conv epilogue (DESIGN.md section 7.3).
     """
     kh, kw, cin, cout = w.shape
-    _, _, pads = conv_pads(x.shape[1], x.shape[2], kh, kw, stride, padding)
+    ho, wo, pads = conv_pads(x.shape[1], x.shape[2], kh, kw, stride, padding)
     xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
     # im2col patches: (n, out_h, out_w, kh*kw*cin)
     patches = lax.conv_general_dilated_patches(
@@ -74,7 +102,22 @@ def conv2d_im2col(
                        w.scale, w.base_bits)
     else:
         wmat = w.transpose(2, 0, 1, 3).reshape(ck, cout)
-    out = policy_matmul(cols, wmat, policy=policy)
+    spec = policy_int_spec(policy) if isinstance(w, QWeight) else None
+    tile_scaled = False
+    if spec is not None:
+        # Winograd-eligible layers (int policy, cached weight, 3x3/s1 under
+        # the growth bound) quantize with the SHARED tile-granular scale
+        # plan, so the materialized GEMM's integers -- hence its output --
+        # are bitwise equal to the winograd/implicit engines' (DESIGN.md
+        # section 7.5).
+        from repro.kernels.conv2d.winograd import winograd_scale_eligible
+        variant = spec[0]
+        tile_scaled = winograd_scale_eligible(
+            kh, kw, stride, cin, variant=variant, base_bits=w.base_bits)
+    if tile_scaled:
+        out = _im2col_tile_gemm(cols, wmat, xp, variant=variant, ho=ho, wo=wo)
+    else:
+        out = policy_matmul(cols, wmat, policy=policy)
     out = out.reshape(n, oh, ow, cout)
     if bias is not None:
         out = out + bias

@@ -8,10 +8,13 @@ and ``(block_h, block_c)`` of the systolic kernel.  This module owns that
 knob end to end:
 
 * **Feasibility model** (:func:`implicit_vmem_bytes` /
-  :func:`systolic_vmem_bytes` / :func:`feasible`): the VMEM working set of
+  :func:`systolic_vmem_bytes` / :func:`winograd_vmem_bytes` /
+  :func:`feasible`): the VMEM working set of
   a candidate tile -- dual halo row-blocks, streamed weight block, output
   block, scratch accumulators, double buffering, (8, 128) tile padding --
-  plus the halo and wrap-free-group rules.  Pure arithmetic, no execution:
+  plus the halo and wrap-free-group rules.  The winograd kind's set adds
+  the 16-point transformed working set (two int16 V planes and three int32
+  limb partial planes per point block).  Pure arithmetic, no execution:
   CI runs ``python -m repro.core.tuning --check`` so a tile-shape
   regression that would OOM VMEM fails fast.
 * **Measured sweep** (:func:`tune_layer` / :func:`tune_model`): time the
@@ -20,7 +23,11 @@ knob end to end:
 * **Persistent cache**: JSON under ``benchmarks/tuned/`` (``default.json``
   is committed; ``*.local.json`` is gitignored), keyed by
   :func:`layer_key` = kind | variant/base_bits | layer geometry | backend.
-  Atomic tmp+rename writes, round-trip tested.
+  Atomic tmp+rename writes, round-trip tested.  The same cache also holds
+  the DISPATCH schema: the thin-stem channel threshold
+  (:func:`stem_cin`, key ``dispatch|stem_cin|{backend}``) that
+  ``select_conv_path`` consults, so the materialize-vs-stream crossover is
+  a measured, per-backend knob rather than a hard-coded constant.
 * **Resolution** (:func:`resolve_block`): what the ops wrappers call at
   trace time when no explicit block is given -- cache hit (re-validated
   against the feasibility model) or the heuristic default.  ``cnn_forward``
@@ -110,10 +117,47 @@ def systolic_vmem_bytes(*, kh, kw, stride, w_img, cin, block_h, block_c,
     return 2 * (x_blk + w_blk) + 2 * o_blk + acc
 
 
+def winograd_vmem_bytes(*, kh, kw, stride, w_img, cin, cout, bt, bc,
+                        variant) -> int:
+    """VMEM working set of one winograd F(2x2,3x3) grid step.
+
+    Dual f32 halo row-blocks (2*bt padded rows each) + both int16 weight
+    plane tensors (4x4xCinxbc each) + the 16-point transformed input planes
+    (two int16 V planes) + the three int32 limb point-partial planes + the
+    (2bt, 2tw) output block and the tile/channel scale vectors, with double
+    buffering on the pipelined operands.
+    """
+    wp = w_img + kw
+    wo = max((wp - kw) // stride + 1, 1)
+    tw = max(-(-wo // 2), 1)
+    bc = min(bc, _roundup(cout, 8))
+    x_blk = 2 * _tile_bytes((2 * bt, wp, cin), 4)     # dual halo row blocks
+    w_blk = 2 * _tile_bytes((16 * cin, bc), 2)        # uh + ul planes
+    v_blk = 2 * _tile_bytes((16 * bt * tw, cin), 2)   # transformed input
+    m_blk = 3 * _tile_bytes((16 * bt * tw, bc), 4)    # limb point partials
+    o_blk = _tile_bytes((2 * bt * 2 * tw, bc), 4)
+    scales = _tile_bytes((bt, tw), 4) + _tile_bytes((1, bc), 4)
+    return 2 * (x_blk + w_blk) + 2 * o_blk + v_blk + m_blk + scales
+
+
 def feasible(kind: str, *, kh, kw, stride, h, cin, cout, variant,
              base_bits, block) -> tuple[bool, str]:
     """(ok, reason): halo rule, wrap-free group rule, VMEM budget."""
-    if kind == "implicit":
+    if kind == "winograd":
+        bt, bc = block
+        if kh != 3 or kw != 3 or stride != 1:
+            return False, f"winograd needs 3x3/s1, got k{kh}x{kw} s{stride}"
+        if variant in _INT_VARIANTS:
+            from repro.kernels.conv2d.winograd import winograd_accum_bound
+            if winograd_accum_bound(cin, variant=variant,
+                                    base_bits=base_bits) >= 2**31:
+                return False, f"cin={cin}: tile contraction would wrap int32"
+        else:
+            return False, f"winograd needs an int variant, got {variant!r}"
+        used = winograd_vmem_bytes(kh=kh, kw=kw, stride=stride, w_img=h,
+                                   cin=cin, cout=cout, bt=bt, bc=bc,
+                                   variant=variant)
+    elif kind == "implicit":
         bm, bc, bk = block
         if bm * stride < kh - stride:
             return False, f"halo: bm*stride={bm * stride} < kh-stride={kh - stride}"
@@ -143,6 +187,15 @@ def default_block(kind: str, *, kh, kw, stride, h, cin, cout, variant,
     """Heuristic tile schedule when the cache has no measured entry."""
     if kind == "systolic":
         return (8, 128)
+    if kind == "winograd":
+        bt, bc = 4, min(128, _roundup(cout, 8))
+        def wused(b):
+            return winograd_vmem_bytes(kh=kh, kw=kw, stride=stride, w_img=h,
+                                       cin=cin, cout=cout, bt=b[0], bc=b[1],
+                                       variant=variant)
+        while wused((bt, bc)) > VMEM_BUDGET and bt > 1:
+            bt //= 2
+        return (bt, bc)
     bm = 8
     while bm * stride < kh - stride:
         bm *= 2
@@ -216,6 +269,21 @@ def conv_hbm_bytes(path: str, *, kh, kw, stride, h, cin, cout, variant,
         row_blocks = n * max(-(-ho // 8), 1)
         return (2 * (n * h * h * cin * ib) * cout_blocks
                 + w_bytes * row_blocks + out_bytes + (n * cout * 4))
+    if path == "winograd":
+        # 16 transformed taps replace the 9 spatial taps, shipped as TWO
+        # int16 limb planes; the A source is still the compact NHWC input
+        # (dual halo row blocks), and the tile-granular scale grid is a
+        # quarter the size of the implicit path's per-patch scales.
+        bt, bc = default_block("winograd", kh=kh, kw=kw, stride=stride, h=h,
+                               cin=cin, cout=cout, variant=variant,
+                               base_bits=base_bits)
+        th = max(-(-ho // 2), 1)
+        cout_blocks = -(-cout // min(bc, cout))
+        row_blocks = n * max(-(-th // bt), 1)
+        wino_w_bytes = 2 * 16 * cin * cout * 2
+        scales = n * th * max(-(-wo // 2), 1) * 4 + cout * 4
+        return (2 * x_bytes * cout_blocks
+                + wino_w_bytes * row_blocks + out_bytes + scales)
     raise ValueError(f"unknown path {path!r}")
 
 
@@ -277,6 +345,39 @@ class TuneCache:
         self.entries[key] = {"block": list(block), "us": us,
                              "measured": measured}
 
+    def put_stem(self, cin: int, *, backend: Optional[str] = None) -> None:
+        """Persist the thin-stem dispatch threshold for ``backend``."""
+        self.entries[stem_key(backend)] = {"cin": int(cin)}
+
+
+#: Fallback thin-stem channel threshold: below this Cin the materialized
+#: im2col stem beats the streaming engines (the RGB-stem crossover measured
+#: when the dispatch rule landed); the cache can override it per backend.
+DEFAULT_STEM_CIN = 16
+
+
+def stem_key(backend: Optional[str] = None) -> str:
+    """Cache key of the dispatch-schema stem threshold entry."""
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    return f"dispatch|stem_cin|{backend}"
+
+
+def stem_cin(backend: Optional[str] = None) -> int:
+    """The thin-stem Cin threshold ``select_conv_path`` compares against.
+
+    Cache entry ``{"cin": N}`` under :func:`stem_key` wins; otherwise
+    :data:`DEFAULT_STEM_CIN`.  Malformed entries fall back to the default
+    rather than poisoning dispatch.
+    """
+    ent = _cache().get(stem_key(backend))
+    if isinstance(ent, dict):
+        cin = ent.get("cin")
+        if isinstance(cin, int) and cin >= 1:
+            return cin
+    return DEFAULT_STEM_CIN
+
 
 @functools.lru_cache(maxsize=None)
 def _load_cache(stamp: tuple) -> TuneCache:
@@ -330,6 +431,8 @@ def candidate_blocks(kind: str, *, kh, kw, stride, h, cin, cout, variant,
                          cout=cout, variant=variant, base_bits=base_bits)
     if kind == "systolic":
         cands = {base} | {(bh, bc) for bh in (8, 16, 32) for bc in (128, 256)}
+    elif kind == "winograd":
+        cands = {base} | {(bt, bc) for bt in (1, 2, 4, 8) for bc in (128, 256)}
     else:
         bm0, bc0, _ = base
         bks = {min(cin, b) for b in (128, 256, 512, 1024, 2048)} | {base[2]}
@@ -369,10 +472,24 @@ def tune_layer(kind: str, *, kh, kw, stride, h, cin, cout, variant,
     import numpy as np
 
     from repro.core.substrate import quantize_weight
-    from repro.kernels.conv2d.ops import conv2d_implicit, conv2d_systolic
+    from repro.kernels.conv2d.ops import (
+        conv2d_implicit,
+        conv2d_systolic,
+        conv2d_winograd,
+    )
 
-    if kind == "systolic" and jax.default_backend() != "tpu":
+    if kind in ("systolic", "winograd") and jax.default_backend() != "tpu":
         # Interpret-mode Pallas timings are meaningless; keep the default.
+        return default_block(kind, kh=kh, kw=kw, stride=stride, h=h, cin=cin,
+                             cout=cout, variant=variant, base_bits=base_bits)
+    if kind == "winograd" and not feasible(
+            kind, kh=kh, kw=kw, stride=stride, h=h, cin=cin, cout=cout,
+            variant=variant, base_bits=base_bits,
+            block=default_block(kind, kh=kh, kw=kw, stride=stride, h=h,
+                                cin=cin, cout=cout, variant=variant,
+                                base_bits=base_bits))[0]:
+        # Ineligible layer shape: conv2d_winograd would reroute to implicit,
+        # so any measurement here times the wrong engine.
         return default_block(kind, kh=kh, kw=kw, stride=stride, h=h, cin=cin,
                              cout=cout, variant=variant, base_bits=base_bits)
     rng = np.random.default_rng(0)
@@ -399,6 +516,10 @@ def tune_layer(kind: str, *, kh, kw, stride, h, cin, cout, variant,
     for block in cands:
         if kind == "implicit":
             fn = functools.partial(conv2d_implicit, stride=stride,
+                                   variant=variant, base_bits=base_bits,
+                                   block=tuple(block))
+        elif kind == "winograd":
+            fn = functools.partial(conv2d_winograd, stride=stride,
                                    variant=variant, base_bits=base_bits,
                                    block=tuple(block))
         else:
@@ -463,7 +584,7 @@ def _policy_variant(policy: str) -> tuple[str, int]:
 
 
 def tune_model(name: str, *, policies=("kom_int14", "schoolbook_int16"),
-               kinds=("implicit", "systolic"), iters: int = 3,
+               kinds=("implicit", "systolic", "winograd"), iters: int = 3,
                cache_path=None, verbose: bool = True) -> TuneCache:
     """Measured sweep over every unique conv layer of a registered CNN."""
     from repro.configs import get_config
@@ -504,7 +625,7 @@ def tune_config(cfg, *, iters: int = 2, cache_path=None,
     cache = TuneCache.load(path)
     variant, base_bits = _policy_variant(cfg.policy)
     for layer in conv_layer_shapes(cfg):
-        for kind in ("implicit", "systolic"):
+        for kind in ("implicit", "systolic", "winograd"):
             tune_layer(kind, variant=variant, base_bits=base_bits,
                        iters=iters, cache=cache, verbose=verbose, **layer)
     cache.save()
@@ -533,15 +654,16 @@ def check(models: Iterable[str] = ("alexnet", "vgg16", "vgg19"),
             for policy in policies:
                 variant, base_bits = _policy_variant(policy)
                 # implicit must be feasible everywhere (explicit calls and
-                # depth reroutes may land any layer on it); systolic only
-                # where TPU dispatch can actually route the layer.
+                # depth reroutes may land any layer on it); systolic and
+                # winograd only where TPU dispatch actually routes the layer.
                 kinds = ["implicit"]
-                if select_conv_path(kh=layer["kh"], kw=layer["kw"],
-                                    stride=layer["stride"], cin=layer["cin"],
-                                    cout=layer["cout"], on_tpu=True,
-                                    policy=policy,
-                                    cached_weight=True) == "systolic":
-                    kinds.append("systolic")
+                sel = select_conv_path(kh=layer["kh"], kw=layer["kw"],
+                                       stride=layer["stride"],
+                                       cin=layer["cin"], cout=layer["cout"],
+                                       on_tpu=True, policy=policy,
+                                       cached_weight=True)
+                if sel in ("systolic", "winograd"):
+                    kinds.append(sel)
                 for kind in kinds:
                     block = resolve_block(kind, variant=variant,
                                           base_bits=base_bits, **layer)

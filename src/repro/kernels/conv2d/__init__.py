@@ -1,2 +1,2 @@
-from .ops import conv2d_implicit, conv2d_systolic
+from .ops import conv2d_implicit, conv2d_systolic, conv2d_winograd
 from .ref import conv2d_ref

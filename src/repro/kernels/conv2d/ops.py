@@ -57,6 +57,17 @@ from .implicit_gemm import (
     group_spans,
     recombine_schedule,
 )
+from .winograd import (
+    WINOGRAD_OUTPUT_SCALE,
+    conv2d_winograd_raw,
+    stream_conv_winograd,
+    tile_scale_grid,
+    tile_scales_upsampled,
+    winograd_accum_bound,
+    winograd_mirror_operands,
+    winograd_scale_eligible,
+    winograd_weight_planes,
+)
 
 _NHWC_DNUMS = (((3,), (0,)), ((), ()))  # (n, ho, wo, ck) x (ck, bc)
 
@@ -416,7 +427,15 @@ def _conv2d_implicit_core(
         ho, wo, pads = conv_pads(h, wdim, kh, kw, stride, padding)
         xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
         if integer:
-            ascale = _patch_scales(xp, kh, kw, stride, qmax)[:, :ho, :wo]
+            if winograd_scale_eligible(kh, kw, stride, cin, variant=variant,
+                                       base_bits=base_bits):
+                # Winograd-eligible layers share the tile-granular scale
+                # plan across ALL int paths (the cross-path bitwise
+                # contract, DESIGN.md section 7.5).
+                s_tile = tile_scale_grid(xp, qmax, -(-ho // 2), -(-wo // 2))
+                ascale = tile_scales_upsampled(s_tile, ho, wo)
+            else:
+                ascale = _patch_scales(xp, kh, kw, stride, qmax)[:, :ho, :wo]
             raw = _stream_conv_int(
                 xp, w_vals, ascale, group_spans(cin, bk, fold_every),
                 stride=stride, ho=ho, wo=wo, variant=variant,
@@ -434,7 +453,13 @@ def _conv2d_implicit_core(
         xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
         ascale = wsc = None
         if integer:
-            ascale = _patch_scales(xp, kh, kw, stride, qmax)[:, :ho_pad]
+            if winograd_scale_eligible(kh, kw, stride, cin, variant=variant,
+                                       base_bits=base_bits):
+                s_tile = tile_scale_grid(xp, qmax, -(-ho_pad // 2),
+                                         -(-wo // 2))
+                ascale = tile_scales_upsampled(s_tile, ho_pad, wo)
+            else:
+                ascale = _patch_scales(xp, kh, kw, stride, qmax)[:, :ho_pad]
         pk = (-cin) % bk
         if pk:  # zero channels contribute exact zeros to every partial
             xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, pk)))
@@ -510,6 +535,203 @@ def conv2d_implicit(
         x, w, stride=stride, padding=padding, variant=variant,
         base_bits=base_bits, block=block, fold_every=fold_every,
         use_pallas=use_pallas, interpret=interpret)
+    if bias is not None:
+        out = out + bias
+    if activation == "relu":
+        out = jax.nn.relu(out)
+    elif activation is not None:
+        raise ValueError(f"unknown activation: {activation!r}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Winograd F(2x2, 3x3): integer transforms over the limb substrate.
+# ---------------------------------------------------------------------------
+
+#: Per-QWeight memo of the mirror's pre-transformed, pre-sliced weight
+#: operands, keyed on the weight array's identity (pinned by the stored
+#: strong reference).  Bounded FIFO: on-the-fly float-weight calls create a
+#: fresh QWeight per call and must not grow this without limit.
+_MIRROR_OPS_CACHE: dict = {}
+_MIRROR_OPS_CAP = 16
+
+
+def _winograd_mirror_ops_cached(w: QWeight):
+    """winograd_mirror_operands(G2-transformed w), memoized per QWeight.
+
+    Serving and the bench harness pass the SAME cached QWeight every call
+    with the weight as a jit argument, where XLA cannot constant-fold the
+    weight transform + group/chunk copies (~30 ms/call at Cin=512 on CPU,
+    more than the pointwise dots themselves).  Under an outer jit the
+    values are tracers -- no identity to memo on -- so the transform stays
+    in-graph and the result is unchanged either way (exact integer ops).
+    """
+    if isinstance(w.values, jax.core.Tracer):
+        return None
+    key = (id(w.values), int(w.base_bits))
+    hit = _MIRROR_OPS_CACHE.get(key)
+    if hit is not None and hit[0] is w.values:
+        return hit[1]
+    uh, ul = winograd_weight_planes(w.values, w.base_bits)
+    ops = winograd_mirror_operands(uh, ul, base_bits=w.base_bits)
+    while len(_MIRROR_OPS_CACHE) >= _MIRROR_OPS_CAP:
+        _MIRROR_OPS_CACHE.pop(next(iter(_MIRROR_OPS_CACHE)))
+    _MIRROR_OPS_CACHE[key] = (w.values, ops)
+    return ops
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("padding", "variant", "base_bits", "block",
+                     "use_pallas", "interpret"),
+)
+def _conv2d_winograd_core(
+    x: jax.Array,
+    w: QWeight,
+    *,
+    padding: str,
+    variant: str,
+    base_bits: int,
+    block: tuple[int, int] | None,
+    use_pallas: bool | None,
+    interpret: bool | None,
+    w_ops=None,
+) -> jax.Array:
+    """The jitted body of :func:`conv2d_winograd`, WITHOUT the epilogue.
+
+    Same load-bearing jit boundary as the implicit core: fl(raw * scale) is
+    materialized before the caller's bias add, pinning the dequant
+    multiply's rounding (bitwise fused==unfused).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = _default_interpret()
+    n, h, wdim, cin = x.shape
+    kh, kw, _, cout = w.shape
+    qmax = kom_qmax(base_bits)
+    w_vals = w.values
+    w_scale = jnp.broadcast_to(
+        jnp.asarray(w.scale, jnp.float32).reshape(-1), (cout,))
+    # The engine computes exactly 4x the convolution (two G2 = 2G factors);
+    # the 1/4 folds into the per-channel dequant scale -- an exact f32
+    # exponent shift, so outputs match the direct paths bitwise.
+    wscale4 = w_scale * jnp.float32(1.0 / WINOGRAD_OUTPUT_SCALE)
+    ho, wo, pads = conv_pads(h, wdim, kh, kw, 1, padding)
+    th, tw = -(-ho // 2), -(-wo // 2)
+    x = x.astype(jnp.float32)
+
+    if not use_pallas:
+        xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+        s_tile = tile_scale_grid(xp, qmax, th, tw)
+        # The mirror gathers the full (2*th+2, 2*tw+2) tile footprint;
+        # extra zero rows/cols beyond the layer's own pads contribute
+        # nothing (zero pixels quantize to zero).
+        eh = max(2 * th + 2 - xp.shape[1], 0)
+        ew = max(2 * tw + 2 - xp.shape[2], 0)
+        if eh or ew:
+            xp = jnp.pad(xp, ((0, 0), (0, eh), (0, ew), (0, 0)))
+        raw4 = stream_conv_winograd(
+            xp, w_vals, s_tile, th=th, tw=tw, variant=variant,
+            base_bits=base_bits, qmax=qmax, w_ops=w_ops)
+        # Same dequant expression as the kernel epilogue: t = s * wscale4,
+        # then raw4 * t.
+        t = tile_scales_upsampled(s_tile, 2 * th, 2 * tw)[..., None] * wscale4
+        out = (raw4 * t)[:, :ho, :wo, :]
+    else:
+        if block is None:
+            bt, bc = _resolve_block(
+                "winograd", kh=kh, kw=kw, stride=1, h=h, cin=cin, cout=cout,
+                variant=variant, base_bits=base_bits)
+        else:
+            bt, bc = block
+        th_pad = -(-th // bt) * bt
+        # One spare halo row block plus the full tile-column footprint.
+        rows_needed = (th_pad // bt + 1) * 2 * bt
+        cols_needed = 2 * tw + 2
+        h_padded = h + pads[0][0] + pads[0][1]
+        w_padded = wdim + pads[1][0] + pads[1][1]
+        pads = ((pads[0][0], pads[0][1] + max(rows_needed - h_padded, 0)),
+                (pads[1][0], pads[1][1] + max(cols_needed - w_padded, 0)))
+        xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+        s_tile = tile_scale_grid(xp, qmax, th_pad, tw)
+        uh, ul = winograd_weight_planes(w_vals, base_bits)
+        bc = min(bc, cout)
+        pc = (-cout) % bc
+        wsc = wscale4
+        if pc:
+            uh = jnp.pad(uh, ((0, 0), (0, 0), (0, 0), (0, pc)))
+            ul = jnp.pad(ul, ((0, 0), (0, 0), (0, 0), (0, pc)))
+            wsc = jnp.pad(wsc, ((0, pc),))
+        out = conv2d_winograd_raw(
+            xp, uh, ul, th=th_pad, tw=tw, block=(bt, bc),
+            variant=variant, base_bits=base_bits, qmax=qmax,
+            ascale=s_tile, wscale=wsc.reshape(1, -1), interpret=interpret,
+        )[:, :ho, :wo, :cout]
+    return out
+
+
+def conv2d_winograd(
+    x: jax.Array,
+    w,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    variant: str = "karatsuba",
+    base_bits: int = 7,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    block: tuple[int, int] | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """NHWC conv through integer Winograd F(2x2, 3x3), epilogue fused.
+
+    Integer limb variants ONLY (the transforms live in the quantized-limb
+    domain; float policies have no limbs to transform and raise).  ``w``
+    may be a float HWIO weight -- quantized here, outside the jitted core,
+    with the cached-QWeight granularity -- or a :class:`QWeight`.
+
+    Exact-or-reroute: non-3x3 kernels, strides != 1 and layers past
+    :func:`winograd_accum_bound` reroute to :func:`conv2d_implicit` (which
+    shares the tile-granular activation scales on eligible shapes), so a
+    whole-network ``conv_path="winograd"`` configuration stays exact on
+    every layer.  Eligible layers are BITWISE equal to the implicit and
+    materialized im2col paths (DESIGN.md section 7.5).
+
+    ``block=(bt, bc)``: tile-row-block / Cout tile sizes, defaulting to the
+    autotuner's schedule.  Off-TPU (or ``use_pallas=False``) the dataflow
+    runs as the bitwise streamed lax mirror instead of interpret-mode
+    Pallas.
+    """
+    v = "karatsuba" if variant == "kom" else variant
+    if v not in INT_VARIANTS:
+        raise ValueError(
+            f"conv2d_winograd cannot run variant {variant!r}: the Winograd "
+            "transforms live in the quantized-limb integer domain -- float "
+            "policies have no limb planes to transform; use the implicit or "
+            "im2col path")
+    kh, kw, cin = w.shape[0], w.shape[1], w.shape[2]
+    if isinstance(w, QWeight):
+        base_bits = w.base_bits
+    else:
+        w = quantize_weight(w, base_bits=base_bits)
+    if (kh, kw) != (3, 3) or stride != 1 or winograd_accum_bound(
+            cin, variant=v, base_bits=base_bits) >= 2**31:
+        # Exact-or-reroute: shapes the F(2x2, 3x3) engine cannot serve
+        # exactly stream through the implicit GEMM instead (wrap-free at
+        # any depth, any kernel/stride).
+        return conv2d_implicit(x, w, stride=stride, padding=padding,
+                               variant=v, base_bits=base_bits,
+                               bias=bias, activation=activation,
+                               use_pallas=use_pallas, interpret=interpret)
+    mirror = not (use_pallas if use_pallas is not None
+                  else jax.default_backend() == "tpu")
+    w_ops = _winograd_mirror_ops_cached(w) if mirror else None
+    out = _conv2d_winograd_core(
+        x, w, padding=padding, variant=v, base_bits=base_bits,
+        block=block, use_pallas=use_pallas, interpret=interpret,
+        w_ops=w_ops)
     if bias is not None:
         out = out + bias
     if activation == "relu":

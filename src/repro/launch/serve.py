@@ -86,7 +86,8 @@ def main(argv=None):
     ap.add_argument("--buckets", default="1,4,16",
                     help="CNN microbatch bucket sizes (comma-separated)")
     ap.add_argument("--conv-path", default=None,
-                    help="CNN conv dispatch: auto | im2col | systolic | implicit")
+                    help="CNN conv dispatch: auto | im2col | systolic | "
+                         "implicit | winograd")
     ap.add_argument("--policy", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -110,6 +111,15 @@ def main(argv=None):
                     f"--conv-path systolic cannot run policy "
                     f"{cfg.policy.value!r} exactly; pass --policy "
                     "kom_int14 | schoolbook_int16 | fp32")
+        if cfg.conv_path == "winograd":
+            # The integer winograd engine transforms in the limb domain;
+            # float policies have no exact tile contraction (DESIGN.md 7.5).
+            from repro.core.substrate import policy_int_spec
+            if policy_int_spec(cfg.policy) is None:
+                ap.error(
+                    f"--conv-path winograd cannot run policy "
+                    f"{cfg.policy.value!r} exactly; pass --policy "
+                    "kom_int14 | schoolbook_int16")
         if cfg.conv_path == "implicit":
             # Same refusal for the implicit engine (it adds bf16x3/bf16x6;
             # only native_bf16 is unimplemented -- DESIGN.md 7.4).

@@ -37,7 +37,9 @@ class CNNConfig:
     in_channels: int = 3
     n_classes: int = 1000
     policy: MatmulPolicy = MatmulPolicy.NATIVE_BF16
-    # auto | im2col | systolic | implicit (substrate dispatch, DESIGN.md 7.1/7.4)
+    # auto | im2col | systolic | implicit | winograd (substrate dispatch,
+    # DESIGN.md 7.1/7.4/7.5; winograd needs an int policy + 3x3/s1 layers,
+    # other shapes reroute to implicit)
     conv_path: str = "auto"
     family: str = "cnn"      # registry/launcher dispatch tag
 

@@ -132,12 +132,29 @@ def test_select_conv_path_policy_rules():
     preferred over the MATERIALIZED im2col wherever it runs the policy
     exactly; the systolic engine keeps its TPU niche."""
     shape = dict(kh=3, kw=3, stride=1, cin=256, cout=256)
-    # Serving (cached QWeight) int policies stream patches on any backend.
+    # Serving (cached QWeight) int policies: 3x3/s1/SAME deep-Cin layers
+    # under the winograd growth bound take the transform engine on EVERY
+    # backend -- it wins the arithmetic (16 tile mults replace 36 spatial
+    # MACs) wherever the limb substrate runs (DESIGN.md section 7.5).
     for on_tpu in (False, True):
-        got = select_conv_path(**shape, on_tpu=on_tpu, policy="kom_int14",
-                               cached_weight=True)
-        # ... except inside the systolic niche on TPU (cout%128==0 here).
-        assert got == ("systolic" if on_tpu else "implicit")
+        assert select_conv_path(**shape, on_tpu=on_tpu, policy="kom_int14",
+                                cached_weight=True) == "winograd"
+    # VALID padding / stride 2 fall out of the winograd window back to the
+    # streaming engines (systolic niche on TPU, implicit off).
+    assert select_conv_path(**shape, on_tpu=True, policy="kom_int14",
+                            cached_weight=True,
+                            padding="VALID") == "systolic"
+    assert select_conv_path(**shape, on_tpu=False, policy="kom_int14",
+                            cached_weight=True,
+                            padding="VALID") == "implicit"
+    assert select_conv_path(kh=3, kw=3, stride=2, cin=256, cout=256,
+                            on_tpu=True, policy="kom_int14",
+                            cached_weight=True) == "systolic"
+    # Past the int32 growth bound the winograd tile contraction would wrap:
+    # dispatch reroutes to the streamed engines (implicit off-TPU).
+    assert select_conv_path(kh=3, kw=3, stride=1, cin=4096, cout=256,
+                            on_tpu=False, policy="kom_int14",
+                            cached_weight=True) == "implicit"
     # Outside the systolic niche (11x11/s4) the int serving path is implicit.
     assert select_conv_path(kh=11, kw=11, stride=4, cin=256, cout=256,
                             on_tpu=True, policy="kom_int14",
@@ -173,7 +190,51 @@ def test_select_conv_path_policy_rules():
 def test_conv2d_rejects_unknown_path():
     x, w = _case(3)
     with pytest.raises(ValueError):
-        conv2d(x, w, path="winograd")
+        conv2d(x, w, path="nonsense")
+
+
+INT_POLICIES = (MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16)
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+@pytest.mark.parametrize("h,cin,cout,n", [(10, 16, 16, 2), (9, 8, 24, 1)])
+def test_all_four_paths_bitwise_on_winograd_window(policy, h, cin, cout, n):
+    """3x3/s1/SAME cached-weight int serving: winograd, implicit, im2col AND
+    systolic produce bit-identical outputs.  Constant-magnitude random-sign
+    input makes every engine's activation-scale plan (per-patch, per-tile,
+    per-row) resolve to the same scalar, so this exercises the integer
+    datapaths themselves -- any engine disagreeing by even an ulp fails."""
+    from repro.core.substrate import policy_int_spec
+    rng = np.random.default_rng(5 + h)
+    x = jnp.asarray(0.37 * rng.choice(
+        [-1.0, 1.0], size=(n, h, h, cin)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, cin, cout)).astype(np.float32))
+    qw = quantize_weight(w, base_bits=policy_int_spec(policy)[1])
+    outs = {path: np.asarray(conv2d(x, qw, stride=1, padding="SAME",
+                                    policy=policy, path=path))
+            for path in ("winograd", "implicit", "im2col", "systolic")}
+    for path in ("implicit", "im2col", "systolic"):
+        np.testing.assert_array_equal(
+            outs["winograd"], outs[path],
+            err_msg=f"{policy.value}: winograd != {path}")
+
+
+def test_winograd_reroutes_past_growth_bound_bitwise():
+    """Cin past winograd_accum_bound's int32 ceiling: path='winograd' must
+    reroute to the implicit engine and reproduce its numbers exactly."""
+    from repro.kernels.conv2d.winograd import winograd_accum_bound
+    cin = 2432  # karatsuba b7 bound caps exact tiles at cin <= 2427
+    assert winograd_accum_bound(cin, variant="karatsuba",
+                                base_bits=7) >= 2**31
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(1, 4, 4, cin)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, cin, 8)).astype(np.float32))
+    qw = quantize_weight(w, base_bits=7)
+    wino = conv2d(x, qw, stride=1, padding="SAME",
+                  policy=MatmulPolicy.KOM_INT14, path="winograd")
+    imp = conv2d(x, qw, stride=1, padding="SAME",
+                 policy=MatmulPolicy.KOM_INT14, path="implicit")
+    np.testing.assert_array_equal(np.asarray(wino), np.asarray(imp))
 
 
 def test_auto_never_downgrades_multipass_policies(monkeypatch):

@@ -1,0 +1,142 @@
+"""The CI perf gate (benchmarks/perf_gate.py, ISSUE 6 satellite).
+
+The gate must (a) flag a real single-path regression, (b) NOT flag a
+uniformly slower machine (the median calibration), (c) skip -- not pass --
+when the records share too few rows, and (d) compare apart-by-identity:
+serving rows by (model, path, policy), layer rows by shape too.
+"""
+import json
+
+import pytest
+
+from benchmarks.perf_gate import bench_rows, gate, main
+
+
+def _payload(serving=(), layers=()):
+    return {"schema": "bench-convnets/v1", "smoke": True, "backend": "cpu",
+            "records": [], "serving": list(serving), "layers": list(layers)}
+
+
+def _serving(model, path, ips, policy="kom_int14"):
+    return {"model": model, "path": path, "policy": policy,
+            "images_per_s": ips}
+
+
+def _layer(path, ips, cin=256, h=14, policy="kom_int14"):
+    return {"model": "vgg16", "path": path, "policy": policy, "k": 3,
+            "cin": cin, "cout": cin, "stride": 1, "h": h,
+            "images_per_s": ips}
+
+
+BASE = _payload(
+    serving=[_serving("vgg16", p, ips) for p, ips in
+             [("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+              ("winograd", 95.0)]],
+    layers=[_layer("implicit", 40.0), _layer("winograd", 50.0)],
+)
+
+
+def test_bench_rows_keys_by_identity():
+    rows = bench_rows(BASE)
+    assert rows[("serving", "vgg16", "auto", "kom_int14")] == 100.0
+    assert rows[("layer", "vgg16", "winograd", "kom_int14",
+                 3, 256, 256, 1, 14)] == 50.0
+    # rows without a throughput number never reach the comparison
+    assert ("serving", "x", "y", "z") not in bench_rows(
+        _payload(serving=[_serving("x", "y", None, policy="z")]))
+
+
+def test_identical_records_pass():
+    report = gate(BASE, BASE)
+    assert report["status"] == "pass"
+    assert report["calibration"] == 1.0
+    assert report["n_common"] == 6
+
+
+def test_uniform_machine_slowdown_is_calibrated_out():
+    """A 3x slower CI runner shifts EVERY row; the median calibration
+    absorbs it and the gate stays green."""
+    slow = _payload(
+        serving=[_serving("vgg16", p, ips / 3.0) for p, ips in
+                 [("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+                  ("winograd", 95.0)]],
+        layers=[_layer("implicit", 40.0 / 3.0), _layer("winograd", 50.0 / 3.0)],
+    )
+    report = gate(BASE, slow)
+    assert report["status"] == "pass"
+    assert report["calibration"] == pytest.approx(1 / 3.0, rel=1e-3)
+
+
+def test_single_path_regression_fails():
+    """One path losing 40% while the rest hold is a REAL regression --
+    calibration must not launder it."""
+    bad = _payload(
+        serving=[_serving("vgg16", p, ips) for p, ips in
+                 [("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+                  ("winograd", 95.0 * 0.6)]],
+        layers=[_layer("implicit", 40.0), _layer("winograd", 50.0 * 0.6)],
+    )
+    report = gate(BASE, bad)
+    assert report["status"] == "fail"
+    failed = {tuple(r["key"]) for r in report["failures"]}
+    assert ("serving", "vgg16", "winograd", "kom_int14") in failed
+    assert ("layer", "vgg16", "winograd", "kom_int14", 3, 256, 256, 1,
+            14) in failed
+    # the healthy rows are not dragged down with it
+    assert all("winograd" in k for k in failed)
+
+
+def test_within_threshold_noise_passes():
+    noisy = _payload(
+        serving=[_serving("vgg16", p, ips * f) for (p, ips), f in
+                 zip([("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+                      ("winograd", 95.0)], (1.05, 0.95, 1.0, 0.92))],
+        layers=[_layer("implicit", 40.0 * 1.02), _layer("winograd", 50.0)],
+    )
+    assert gate(BASE, noisy)["status"] == "pass"
+
+
+def test_too_few_common_rows_skips_not_passes():
+    disjoint = _payload(serving=[_serving("alexnet", "auto", 50.0)])
+    report = gate(BASE, disjoint)
+    assert report["status"] == "skip"
+    assert report["n_common"] == 0
+    # and a skip exits 0 from the CLI (the gate refuses to judge, it does
+    # not fail the build on incomparable records)
+
+
+def test_absolute_mode_flags_uniform_slowdown():
+    slow = _payload(
+        serving=[_serving("vgg16", p, ips * 0.5) for p, ips in
+                 [("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+                  ("winograd", 95.0)]],
+        layers=[_layer("implicit", 20.0), _layer("winograd", 25.0)],
+    )
+    assert gate(BASE, slow)["status"] == "pass"
+    report = gate(BASE, slow, absolute=True)
+    assert report["status"] == "fail"
+    assert len(report["failures"]) == 6
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    base_f = tmp_path / "base.json"
+    base_f.write_text(json.dumps(BASE))
+    good_f = tmp_path / "good.json"
+    good_f.write_text(json.dumps(BASE))
+    assert main([str(base_f), str(good_f)]) == 0
+    assert "PASS" in capsys.readouterr().out
+    bad = _payload(
+        serving=[_serving("vgg16", p, ips) for p, ips in
+                 [("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+                  ("winograd", 40.0)]],
+        layers=[_layer("implicit", 40.0), _layer("winograd", 21.0)],
+    )
+    bad_f = tmp_path / "bad.json"
+    bad_f.write_text(json.dumps(bad))
+    assert main([str(base_f), str(bad_f)]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "winograd" in out
+    empty_f = tmp_path / "empty.json"
+    empty_f.write_text(json.dumps(_payload()))
+    assert main([str(base_f), str(empty_f)]) == 0
+    assert "SKIP" in capsys.readouterr().out

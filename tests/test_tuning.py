@@ -196,5 +196,74 @@ def test_hbm_traffic_model():
                             base_bits=7)
     assert stream < mat
     assert mat / stream > 2.0  # kh*kw=9 taps, minus streaming refetch costs
-    arr = np.array([mat, stream])
+    # The winograd entry models the transform trade HONESTLY: the compact
+    # NHWC A source (no patch blowup) but 2x int16 4x4-plane weights
+    # re-read per row block, so it sits above the streamed implicit path on
+    # bytes -- its win is arithmetic (16 tile mults vs 36 MACs), which the
+    # roofline model (analysis/roofline.py) accounts separately.
+    wino = conv_hbm_bytes("winograd", **VGG_DEEP, variant="karatsuba",
+                          base_bits=7)
+    assert wino > stream
+    arr = np.array([mat, stream, wino])
     assert (arr > 0).all()
+
+
+def test_winograd_vmem_model_and_candidates():
+    from repro.core.tuning import winograd_vmem_bytes
+    thin = winograd_vmem_bytes(kh=3, kw=3, stride=1, w_img=28, cin=64,
+                               cout=512, bt=4, bc=128, variant="karatsuba")
+    deep = winograd_vmem_bytes(kh=3, kw=3, stride=1, w_img=28, cin=512,
+                               cout=512, bt=4, bc=128, variant="karatsuba")
+    assert 0 < thin < deep
+    # the heuristic default must fit the budget for every VGG winograd layer
+    block = default_block("winograd", **VGG_DEEP, variant="karatsuba",
+                          base_bits=7)
+    ok, why = feasible("winograd", **VGG_DEEP, variant="karatsuba",
+                       base_bits=7, block=block)
+    assert ok, why
+    for cand in candidate_blocks("winograd", **VGG_DEEP, variant="karatsuba",
+                                 base_bits=7):
+        ok, why = feasible("winograd", **VGG_DEEP, variant="karatsuba",
+                           base_bits=7, block=cand)
+        assert ok, (cand, why)
+    # non-winograd geometry and float variants are infeasible by rule
+    ok, why = feasible("winograd", kh=5, kw=5, stride=1, h=28, cin=64,
+                       cout=64, variant="karatsuba", base_bits=7,
+                       block=(4, 128))
+    assert not ok and "3x3" in why
+    ok, why = feasible("winograd", kh=3, kw=3, stride=1, h=28, cin=64,
+                       cout=64, variant="native", base_bits=7,
+                       block=(4, 128))
+    assert not ok and "int" in why
+
+
+def test_stem_cin_threshold_schema(tmp_path, monkeypatch):
+    """The thin-stem dispatch threshold lives in the tuner cache (ISSUE 6
+    satellite): default preserved with no entry, per-backend override read
+    by select_conv_path, malformed entries ignored."""
+    from repro.core.substrate import select_conv_path
+    monkeypatch.setenv(tuning.CACHE_ENV, str(tmp_path))
+    tuning._load_cache.cache_clear()
+    # no cache: the committed default threshold
+    assert tuning.stem_cin() == tuning.DEFAULT_STEM_CIN == 16
+    thin = dict(kh=3, kw=3, stride=1, cin=8, cout=128, on_tpu=True,
+                policy="kom_int14", cached_weight=True)
+    assert select_conv_path(**thin) == "im2col"
+    # a measured override re-routes dispatch without code changes
+    cache = TuneCache(tmp_path / tuning.DEFAULT_CACHE_NAME)
+    cache.put_stem(4)
+    cache.save()
+    tuning._load_cache.cache_clear()
+    assert tuning.stem_cin() == 4
+    got = select_conv_path(**thin)
+    assert got != "im2col"  # cin=8 >= 4: now a streaming/transform engine
+    # backend-scoped: another backend's entry does not apply here
+    assert tuning.stem_cin(backend="fake") == tuning.DEFAULT_STEM_CIN
+    # malformed entries fall back to the default instead of poisoning
+    cache.entries[tuning.stem_key()] = {"cin": "eight"}
+    cache.save()
+    tuning._load_cache.cache_clear()
+    assert tuning.stem_cin() == tuning.DEFAULT_STEM_CIN
+    # explicit stem_cin argument bypasses the cache entirely
+    assert select_conv_path(**thin, stem_cin=4) != "im2col"
+    tuning._load_cache.cache_clear()

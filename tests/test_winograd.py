@@ -1,0 +1,248 @@
+"""Integer-domain Winograd F(2x2, 3x3) over the KOM limb substrate.
+
+What must hold (DESIGN.md section 7.5):
+
+  1. **Exact transform identity.** With G2 = 2G, the integer-matrix
+     pipeline AT @ ((G2 g G2^T) * (BT d B)) @ A equals EXACTLY
+     4 * correlate(d, g) for integer tiles -- all three transform matrices
+     are small-integer, so the whole tile conv stays in exact int32.
+  2. **Single recombine.** The kernel carries the three limb partial
+     planes through the inverse transform and calls ``limb_recombine``
+     exactly ONCE per tile (grep-enforced on winograd.py, like the conv2d
+     kernel's contract), and never materializes a patch matrix.
+  3. **Bitwise differential.** On the 3x3/s1 int serving window the
+     winograd engine reproduces the implicit-GEMM and materialized im2col
+     paths bit for bit -- eager and jitted, odd and even grids, SAME and
+     VALID, shallow and deep Cin -- because all three share one
+     tile-granular activation-scale plan and one limb schedule.
+  4. **Exact-or-reroute.** Past ``winograd_accum_bound``'s int32 ceiling
+     (or off the 3x3/s1 window) the wrapper reroutes to the implicit
+     engine rather than wrapping; the growth bound itself is 4x the direct
+     tap-accumulation bound (the output transform's row weight).
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision import MatmulPolicy
+from repro.core.substrate import conv2d, policy_int_spec, quantize_weight
+from repro.kernels.conv2d import conv2d_winograd
+from repro.kernels.conv2d.conv2d import int_accum_bound
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.conv2d.winograd import (
+    AT,
+    BT,
+    G2,
+    WINOGRAD_OUTPUT_SCALE,
+    winograd_accum_bound,
+    winograd_scale_eligible,
+)
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+WINOGRAD_SRC = SRC / "repro" / "kernels" / "conv2d" / "winograd.py"
+
+INT_POLICIES = (MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16)
+
+
+def _case(h, cin, cout, n=1, seed=0):
+    rng = np.random.default_rng(seed + h + 17 * cin)
+    x = jnp.asarray(rng.standard_normal((n, h, h, cin)).astype(np.float32))
+    w = jnp.asarray(
+        (rng.standard_normal((3, 3, cin, cout)) * 0.1).astype(np.float32))
+    return x, w
+
+
+# -- 1. the exact transform identity ------------------------------------------
+
+def test_transform_identity_exact_times_four():
+    """AT[(G2 g G2^T) o (BT d B)]A == 4 * correlate(d, g), exactly, on
+    integer tiles -- numpy int64, no floats anywhere."""
+    rng = np.random.default_rng(0)
+    bt, g2, at = (np.array(M, np.int64) for M in (BT, G2, AT))
+    for _ in range(50):
+        d = rng.integers(-8127, 8128, size=(4, 4))
+        g = rng.integers(-8127, 8128, size=(3, 3))
+        v = bt @ d @ bt.T
+        u = g2 @ g @ g2.T
+        out = at @ (u * v) @ at.T
+        ref = np.empty((2, 2), np.int64)
+        for i in range(2):
+            for j in range(2):
+                ref[i, j] = (d[i:i + 3, j:j + 3] * g).sum()
+        np.testing.assert_array_equal(out, WINOGRAD_OUTPUT_SCALE * ref)
+    assert WINOGRAD_OUTPUT_SCALE == 4
+
+
+def test_growth_bound_is_four_times_direct():
+    for variant, bits in (("karatsuba", 7), ("schoolbook", 8)):
+        for cin in (16, 64, 512):
+            assert winograd_accum_bound(cin, variant=variant,
+                                        base_bits=bits) == 4 * \
+                int_accum_bound(3, 3, cin, variant=variant, base_bits=bits)
+    # the documented exactness frontier: karatsuba b7 holds through
+    # VGG-scale Cin=2048 and breaks just past 2427
+    assert winograd_accum_bound(2427, variant="karatsuba",
+                                base_bits=7) < 2**31
+    assert winograd_accum_bound(2428, variant="karatsuba",
+                                base_bits=7) >= 2**31
+    assert winograd_scale_eligible(3, 3, 1, 512, variant="karatsuba",
+                                   base_bits=7)
+    assert not winograd_scale_eligible(5, 5, 1, 512, variant="karatsuba",
+                                       base_bits=7)
+    assert not winograd_scale_eligible(3, 3, 2, 512, variant="karatsuba",
+                                       base_bits=7)
+    assert not winograd_scale_eligible(3, 3, 1, 512, variant="native",
+                                       base_bits=7)
+
+
+# -- 2. the grep contracts ----------------------------------------------------
+
+def test_winograd_kernel_recombines_exactly_once():
+    """One limb_recombine call site, shared by the Pallas kernel and the lax
+    mirror via winograd_inverse -- the limb planes must ride through the
+    inverse transform as integers and fold to f32 exactly once."""
+    text = WINOGRAD_SRC.read_text()
+    assert text.count("limb_recombine(") == 1, (
+        "winograd.py must recombine limbs exactly once (in the inverse "
+        "transform), for kernel and mirror alike")
+
+
+def test_winograd_never_materializes_patches():
+    text = WINOGRAD_SRC.read_text()
+    assert "conv_general_dilated_patches" not in text, (
+        "the winograd engine must stream tiles, never build a patch matrix")
+
+
+# -- 3. the bitwise differential ----------------------------------------------
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+@pytest.mark.parametrize("h,cin,cout,n,pad", [
+    (12, 16, 16, 1, "SAME"),    # even grid
+    (9, 8, 24, 2, "SAME"),      # odd grid (ragged last tile row+col), n=2
+    (11, 16, 8, 1, "VALID"),    # VALID: ho=wo=9, odd again
+    (6, 512, 16, 1, "SAME"),    # deep Cin, still under the growth bound
+])
+def test_winograd_bitwise_differential(policy, h, cin, cout, n, pad):
+    """winograd == implicit == materialized im2col, BITWISE, eager and
+    jitted -- the ISSUE 6 acceptance differential."""
+    x, w = _case(h, cin, cout, n=n)
+    qw = quantize_weight(w, base_bits=policy_int_spec(policy)[1])
+    outs = {}
+    for path in ("winograd", "implicit", "im2col"):
+        outs[path] = np.asarray(conv2d(x, qw, stride=1, padding=pad,
+                                       policy=policy, path=path))
+        outs["jit_" + path] = np.asarray(jax.jit(
+            lambda a, q, p=path: conv2d(a, q, stride=1, padding=pad,
+                                        policy=policy, path=p))(x, qw))
+    ref = outs["winograd"]
+    # sanity: near the float reference, not just self-consistent
+    fref = np.asarray(conv2d_ref(x, w, stride=1, padding=pad))
+    rel = np.abs(ref - fref).max() / max(np.abs(fref).max(), 1e-12)
+    assert rel < 2e-2, rel
+    for key, got in outs.items():
+        np.testing.assert_array_equal(ref, got, err_msg=(
+            f"{policy.value}/{pad} h={h} cin={cin}: winograd != {key}"))
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+def test_winograd_kernel_matches_mirror(policy):
+    """conv2d_winograd's Pallas kernel (interpret mode) reproduces the lax
+    mirror bitwise -- both share the transforms, the cross pass schedule,
+    and the single recombine."""
+    variant, bits = policy_int_spec(policy)
+    x, w = _case(10, 16, 16)
+    qw = quantize_weight(w, base_bits=bits)
+    mirror = conv2d_winograd(x, qw, variant=variant, base_bits=bits,
+                             use_pallas=False)
+    kernel = conv2d_winograd(x, qw, variant=variant, base_bits=bits,
+                             use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(mirror), np.asarray(kernel))
+
+
+def test_winograd_batch_invariance_bitwise():
+    """Tile-granular scales are per sample: a sample's output is identical
+    whatever batch it rides in (the serving batch-invariance contract)."""
+    x, w = _case(10, 8, 8, n=4)
+    qw = quantize_weight(w)
+    batched = np.asarray(conv2d(x, qw, policy=MatmulPolicy.KOM_INT14,
+                                path="winograd"))
+    for i in range(4):
+        single = np.asarray(conv2d(x[i:i + 1], qw,
+                                   policy=MatmulPolicy.KOM_INT14,
+                                   path="winograd"))
+        np.testing.assert_array_equal(batched[i:i + 1], single)
+
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+def test_winograd_fused_epilogue_bitwise(policy):
+    """conv2d(..., bias, relu) on the winograd path == unfused conv ->
+    +bias -> relu, bitwise (the PR 3 epilogue contract extends here)."""
+    x, w = _case(9, 16, 16)
+    qw = quantize_weight(w, base_bits=policy_int_spec(policy)[1])
+    rng = np.random.default_rng(3)
+    b = jnp.asarray(rng.standard_normal(16).astype(np.float32))
+    fused = conv2d(x, qw, policy=policy, path="winograd",
+                   bias=b, activation="relu")
+    unfused = jax.nn.relu(conv2d(x, qw, policy=policy, path="winograd") + b)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+# -- 4. exact-or-reroute and policy guards ------------------------------------
+
+def test_winograd_rejects_float_policies():
+    x, w = _case(8, 8, 8)
+    for policy in (MatmulPolicy.FP32, MatmulPolicy.BF16X3,
+                   MatmulPolicy.NATIVE_BF16):
+        with pytest.raises(ValueError, match="winograd"):
+            conv2d(x, w, policy=policy, path="winograd")
+    with pytest.raises(ValueError):
+        conv2d_winograd(x, w, variant="native")
+
+
+@pytest.mark.parametrize("k,s", [(5, 1), (3, 2)])
+def test_winograd_reroutes_off_window_bitwise(k, s):
+    """Explicit path='winograd' on non-3x3/s1 shapes silently reroutes to
+    the implicit engine and matches it bitwise (exact-or-reroute)."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 8)).astype(np.float32))
+    w = jnp.asarray(
+        (rng.standard_normal((k, k, 8, 8)) * 0.1).astype(np.float32))
+    qw = quantize_weight(w)
+    wino = conv2d(x, qw, stride=s, policy=MatmulPolicy.KOM_INT14,
+                  path="winograd")
+    imp = conv2d(x, qw, stride=s, policy=MatmulPolicy.KOM_INT14,
+                 path="implicit")
+    np.testing.assert_array_equal(np.asarray(wino), np.asarray(imp))
+
+
+# -- 5. end to end through the serving engine ---------------------------------
+
+@pytest.mark.parametrize("policy", INT_POLICIES, ids=lambda p: p.value)
+def test_winograd_serving_engine_logits_bitwise(policy):
+    """A reduced VGG16 served with conv_path='winograd' produces logits
+    bitwise equal to conv_path='implicit' -- dispatch between the engines
+    can never change a served answer (the ISSUE 6 engine acceptance)."""
+    from repro.configs import get_config, reduced
+    from repro.models.cnn import cnn_init
+    from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
+
+    rng = np.random.default_rng(0)
+    base = reduced(get_config("vgg16")).replace(policy=policy)
+    params = cnn_init(base, jax.random.PRNGKey(0))
+    imgs = [rng.standard_normal(
+        (base.img_size, base.img_size, 3)).astype(np.float32)
+        for _ in range(3)]
+    logits = {}
+    for path in ("winograd", "implicit"):
+        eng = CNNServeEngine(base.replace(conv_path=path), params,
+                             buckets=(4,))
+        for uid, img in enumerate(imgs):
+            eng.submit(ImageRequest(uid=uid, image=img))
+        done = eng.run()
+        logits[path] = [done[uid].logits for uid in range(len(imgs))]
+    for a, b in zip(logits["winograd"], logits["implicit"]):
+        np.testing.assert_array_equal(a, b, err_msg=(
+            f"{policy.value}: served winograd logits != implicit"))
