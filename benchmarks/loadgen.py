@@ -1,0 +1,246 @@
+"""Open-loop load generator for the SLO-aware serving engines (ISSUE 7).
+
+Closed-loop benchmarks (``table_convnets.py``'s serving rows: submit N,
+drain, repeat) measure peak throughput but can never show tail latency or
+goodput under a REAL arrival process -- the queue is always exactly as
+long as the driver makes it.  This generator replays seeded **open-loop**
+traces against :class:`~repro.serving.cnn_engine.CNNServeEngine`: arrivals
+happen at trace-determined timestamps whether or not the engine has kept
+up, which is the only regime where continuous admission, EDF ordering and
+the bucket cost model actually matter.
+
+Two trace shapes, both deterministic given ``--seed``:
+
+  * ``poisson`` -- exponential inter-arrivals at a fixed offered rate, the
+    steady-load case;
+  * ``bursty``  -- an on/off process (bursts of back-to-back arrivals
+    separated by idle gaps) at the same mean rate, the case that punishes
+    drain-to-empty scheduling and rewards admit-while-running.
+
+Requests draw an SLO class from a seeded mix (interactive / standard /
+batch), so every run exercises deadline-ordered admission and typed
+expiry.  Per (model, policy, trace) the run reports p50/p95/p99 latency,
+throughput, **goodput** (in-deadline completions per second) and the
+expiry count into the ``loadgen`` section of the bench-convnets payload;
+``--merge`` folds the rows into an existing ``BENCH_convnets.json`` /
+``BENCH_smoke.json`` so the CI perf gate (``perf_gate.py``) can match and
+judge them next to the throughput rows (latency rows are compared
+inverted: lower is better).
+
+Timing uses a **warp clock** -- real ``perf_counter`` plus an offset that
+jumps over idle gaps when the engine has nothing to do.  Service time and
+queueing delay elapse in real time (the latencies are real compute), but
+a sparse trace does not make the benchmark wall-sleep through its gaps.
+The engines take the clock via their ``clock=`` parameter, so deadlines,
+expiry and latency stamps all live in the same warped domain.
+
+Usage (CI's smoke lane)::
+
+    python -m benchmarks.loadgen --smoke --seed 0 --merge BENCH_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+#: Seeded SLO mix every trace draws from: weight per class.  ``batch``
+#: requests have no deadline, so each run carries deadline-ordered AND
+#: best-effort work through the same queue.
+SLO_MIX = (("interactive", 0.25), ("standard", 0.55), ("batch", 0.20))
+
+
+class WarpClock:
+    """``perf_counter`` plus a forward-only offset over idle gaps.
+
+    ``now()`` advances in real time (compute and queueing cost real
+    seconds); ``warp_to(t)`` jumps the clock forward to an arrival time
+    when the engine is idle.  The offset never moves backward, so the
+    clock is monotonic like the ``time.monotonic`` it stands in for.
+    """
+
+    def __init__(self):
+        self._offset = 0.0
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0 + self._offset
+
+    def warp_to(self, t: float) -> None:
+        gap = t - self.now()
+        if gap > 0:
+            self._offset += gap
+
+
+def poisson_trace(n: int, rate: float, rng) -> np.ndarray:
+    """``n`` arrival timestamps with exponential inter-arrivals at ``rate``/s."""
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def bursty_trace(n: int, rate: float, rng, *, burst: int = 8) -> np.ndarray:
+    """On/off arrivals: bursts of ``burst`` back-to-back, same mean ``rate``.
+
+    Inside a burst the arrivals are 1 ms apart; the idle gap between bursts
+    is drawn so the long-run offered rate matches ``rate`` -- the trace
+    stresses exactly what Poisson smooths over (queue spikes hitting the
+    bucket cost model while earlier work is still in flight).
+    """
+    ts, t = [], 0.0
+    while len(ts) < n:
+        for _ in range(min(burst, n - len(ts))):
+            ts.append(t)
+            t += 1e-3
+        # mean gap so that burst / (burst_span + gap) == rate
+        mean_gap = max(burst / rate - burst * 1e-3, 1e-3)
+        t += rng.exponential(mean_gap)
+    return np.asarray(ts)
+
+
+def _slo_draw(n: int, rng) -> list:
+    names = [name for name, _ in SLO_MIX]
+    probs = np.asarray([w for _, w in SLO_MIX], float)
+    return list(rng.choice(names, size=n, p=probs / probs.sum()))
+
+
+def run_trace(cfg, params, arrivals: np.ndarray, slos: list, *,
+              buckets=(1, 4, 16)) -> dict:
+    """Replay one open-loop trace through a fresh engine; return its row."""
+    from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
+
+    clock = WarpClock()
+    eng = CNNServeEngine(cfg, params, buckets=buckets, clock=clock.now)
+    eng.warmup()   # compiles + seeds the bucket cost model's timing history
+    h, c = cfg.img_size, cfg.in_channels
+    img_rng = np.random.default_rng(0)
+    imgs = [img_rng.standard_normal((h, h, c)).astype(np.float32)
+            for _ in range(len(arrivals))]
+    i, n = 0, len(arrivals)
+    t_start = clock.now()
+    while i < n or eng.has_work():
+        now = clock.now()
+        # open loop: everything the trace says has arrived by now joins the
+        # queue, regardless of what is in flight (admit-while-running)
+        while i < n and arrivals[i] + t_start <= now:
+            eng.submit(ImageRequest(uid=i, image=imgs[i], slo=slos[i]))
+            i += 1
+        if eng.has_work():
+            eng.step()
+        elif i < n:
+            clock.warp_to(arrivals[i] + t_start)
+    span = clock.now() - t_start
+    s = eng.stats()
+    q = eng.batcher.queue
+    lats = [v for v in q.latencies() if v is not None]
+    met = [q.timing[uid].met_deadline for uid in q.done]
+    in_time = sum(1 for m in met if m is not False)
+    return {
+        "requests": n,
+        "done": s["images_done"],
+        "expired": s["requests_expired"],
+        "deadline_misses": s["deadline_misses"],
+        "offered_rps": round(n / float(arrivals[-1]), 3) if n else 0.0,
+        "throughput_rps": round(s["images_done"] / span, 3) if span else 0.0,
+        "goodput_rps": round(in_time / span, 3) if span else 0.0,
+        "p50_ms": round(1e3 * float(np.percentile(lats, 50)), 3) if lats else 0.0,
+        "p95_ms": round(1e3 * float(np.percentile(lats, 95)), 3) if lats else 0.0,
+        "p99_ms": round(1e3 * float(np.percentile(lats, 99)), 3) if lats else 0.0,
+        "padding_fraction": round(s["padding_fraction"], 4),
+        "buckets": list(eng.buckets),
+    }
+
+
+def run(models, policies, traces, *, n_requests: int, rate: float,
+        seed: int, emit=print) -> list:
+    """All (model, policy, trace) rows.  Deterministic trace given seed."""
+    from repro.configs import get_config, reduced
+    from repro.core.precision import MatmulPolicy
+    from repro.models.cnn import cnn_init
+
+    rows = []
+    for model in models:
+        base = reduced(get_config(model))
+        for policy in policies:
+            cfg = base.replace(policy=MatmulPolicy(policy))
+            params = cnn_init(cfg, jax.random.PRNGKey(0))
+            for trace in traces:
+                rng = np.random.default_rng(seed)
+                arrivals = (poisson_trace(n_requests, rate, rng)
+                            if trace == "poisson"
+                            else bursty_trace(n_requests, rate, rng))
+                slos = _slo_draw(n_requests, rng)
+                row = dict(model=model, policy=policy, trace=trace,
+                           rate_rps=rate, seed=seed)
+                row.update(run_trace(cfg, params, arrivals, slos))
+                rows.append(row)
+                emit(f"[loadgen] {model}/{policy}/{trace}: "
+                     f"{row['done']} done ({row['expired']} expired), "
+                     f"goodput {row['goodput_rps']:.1f}/s, "
+                     f"p99 {row['p99_ms']:.1f} ms")
+    return rows
+
+
+def merge_rows(payload: dict, rows: list) -> dict:
+    """Fold ``rows`` into ``payload['loadgen']``, replacing matching rows.
+
+    Row identity is (model, policy, trace) -- the same identity
+    ``perf_gate.bench_rows`` keys on -- so re-running the generator
+    refreshes rows in place instead of appending duplicates.
+    """
+    ident = lambda r: (r["model"], r["policy"], r["trace"])  # noqa: E731
+    fresh = {ident(r): r for r in rows}
+    kept = [r for r in payload.get("loadgen", []) if ident(r) not in fresh]
+    payload["loadgen"] = kept + rows
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI lane: alexnet only, short traces, seconds total")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated CNN archs (default: smoke->alexnet, "
+                         "full->alexnet,vgg16,vgg19)")
+    ap.add_argument("--policies", default="kom_int14",
+                    help="comma-separated matmul policies")
+    ap.add_argument("--traces", default="poisson,bursty")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="requests per trace (default 24 smoke / 96 full)")
+    ap.add_argument("--rate", type=float, default=150.0,
+                    help="offered load, requests/sec")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a standalone loadgen payload to PATH")
+    ap.add_argument("--merge", default=None, metavar="PATH",
+                    help="fold the rows into an existing bench-convnets "
+                         "payload (CI merges into BENCH_smoke.json so one "
+                         "perf_gate call judges throughput AND latency rows)")
+    args = ap.parse_args(argv)
+
+    models = (args.models.split(",") if args.models
+              else ["alexnet"] if args.smoke
+              else ["alexnet", "vgg16", "vgg19"])
+    n_requests = args.requests or (24 if args.smoke else 96)
+    rows = run(models, args.policies.split(","), args.traces.split(","),
+               n_requests=n_requests, rate=args.rate, seed=args.seed)
+    if args.json:
+        payload = {"schema": "bench-convnets/v1", "smoke": bool(args.smoke),
+                   "backend": jax.default_backend(), "loadgen": rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[loadgen] wrote {args.json}")
+    if args.merge:
+        with open(args.merge) as f:
+            payload = json.load(f)
+        merge_rows(payload, rows)
+        with open(args.merge, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[loadgen] merged {len(rows)} rows into {args.merge}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,10 +1,18 @@
 """CI perf gate: fail the build on a real throughput regression (ISSUE 6).
 
-Compares a freshly measured bench record (``table_convnets.py --json``,
-CI's ``--smoke`` lane) against the committed baseline
-``BENCH_convnets.json``.  Rows are matched by identity -- serving rows by
-(model, path, policy), deep-layer rows by (model, path, policy, shape) --
-and judged on ``images_per_s``.
+Compares a freshly measured bench record (``table_convnets.py --json``
+plus ``loadgen.py --merge``, CI's ``--smoke`` lane) against the committed
+baseline ``BENCH_convnets.json``.  Rows are matched by identity --
+serving rows by (model, path, policy), deep-layer rows by (model, path,
+policy, shape), loadgen rows by (model, policy, trace, metric) -- and
+judged on their metric.  Throughput/goodput metrics are
+higher-is-better; the loadgen latency quantiles (p50/p95/p99 ms) are
+LOWER-is-better, so their ratios are inverted (baseline/new) before
+calibration -- one median then judges both kinds on the same axis.
+Latency rows get a wider pass bar (``threshold * LATENCY_SLACK``):
+quantiles estimated from a few dozen open-loop samples jitter more than
+steady-state throughput means, and the gate's job is catching a real
+tail blow-up, not a re-rolled p99.
 
 The CI runner is not the machine the baseline was measured on, so raw
 ratios are useless: EVERY row reads slow on a loaded shared runner.  The
@@ -37,13 +45,28 @@ Key = Tuple
 DEFAULT_THRESHOLD = 0.85
 DEFAULT_MIN_ROWS = 3
 
+#: loadgen metrics judged by the gate; latency quantiles are lower-is-better
+LOADGEN_METRICS = ("goodput_rps", "p50_ms", "p95_ms", "p99_ms")
+LOWER_IS_BETTER = frozenset({"p50_ms", "p95_ms", "p99_ms"})
+#: latency quantiles from a few dozen open-loop samples are noisy (p99 IS
+#: the max); their pass bar is threshold * this slack so the gate catches
+#: a real tail blow-up without flapping on quantile jitter
+LATENCY_SLACK = 0.8
+
+
+def lower_is_better(key: Key) -> bool:
+    """True for rows where a SMALLER value is the improvement (latency)."""
+    return key[0] == "loadgen" and key[-1] in LOWER_IS_BETTER
+
 
 def bench_rows(payload: dict) -> Dict[Key, float]:
-    """Flatten a bench-convnets/v1 payload into {identity key: images/sec}.
+    """Flatten a bench-convnets/v1 payload into {identity key: metric}.
 
-    Rows without a throughput number (failed / skipped measurements) are
-    dropped -- a missing row can never fail the gate, only shrink the
-    common set.
+    Throughput rows carry images/sec; loadgen rows fan out into one row
+    per metric (goodput + latency quantiles), keyed (model, policy, trace,
+    metric).  Rows without a number (failed / skipped measurements, zero
+    completions) are dropped -- a missing row can never fail the gate,
+    only shrink the common set.
     """
     rows: Dict[Key, float] = {}
     for r in payload.get("serving", []):
@@ -55,6 +78,11 @@ def bench_rows(payload: dict) -> Dict[Key, float]:
             rows[("layer", r["model"], r["path"], r["policy"],
                   r["k"], r["cin"], r["cout"], r["stride"], r["h"])] = float(
                 r["images_per_s"])
+    for r in payload.get("loadgen", []):
+        for metric in LOADGEN_METRICS:
+            if r.get(metric):
+                rows[("loadgen", r["model"], r["policy"], r["trace"],
+                      metric)] = float(r[metric])
     return rows
 
 
@@ -74,14 +102,18 @@ def gate(baseline: dict, new: dict, *, threshold: float = DEFAULT_THRESHOLD,
         return {"status": "skip", "n_common": len(common),
                 "min_rows": min_rows, "calibration": None,
                 "failures": [], "rows": []}
-    ratios = {k: new_rows[k] / base_rows[k] for k in common}
+    # orient every ratio so that >1 means "improved": latency rows invert
+    # (baseline/new), and the one calibration median judges both kinds
+    ratios = {k: (base_rows[k] / new_rows[k] if lower_is_better(k)
+                  else new_rows[k] / base_rows[k]) for k in common}
     calibration = 1.0 if absolute else statistics.median(ratios.values())
     rows, failures = [], []
     for k in common:
         rel = ratios[k] / calibration
+        bar = threshold * LATENCY_SLACK if lower_is_better(k) else threshold
         row = {"key": list(k), "baseline": base_rows[k], "new": new_rows[k],
                "ratio": round(ratios[k], 4), "relative": round(rel, 4),
-               "ok": rel >= threshold}
+               "threshold": round(bar, 4), "ok": rel >= bar}
         rows.append(row)
         if not row["ok"]:
             failures.append(row)
@@ -93,6 +125,12 @@ def gate(baseline: dict, new: dict, *, threshold: float = DEFAULT_THRESHOLD,
 
 def _fmt_key(key) -> str:
     return "/".join(str(p) for p in key)
+
+
+def _unit(key) -> str:
+    if key[0] == "loadgen":
+        return "ms" if key[-1] in LOWER_IS_BETTER else "req/s"
+    return "img/s"
 
 
 def print_report(report: dict, out=None) -> None:
@@ -108,7 +146,7 @@ def print_report(report: dict, out=None) -> None:
     for row in report["rows"]:
         mark = "ok  " if row["ok"] else "FAIL"
         print(f"  {mark} {_fmt_key(row['key'])}: "
-              f"{row['baseline']:.1f} -> {row['new']:.1f} img/s "
+              f"{row['baseline']:.1f} -> {row['new']:.1f} {_unit(row['key'])} "
               f"(raw {row['ratio']}x, calibrated {row['relative']}x)",
               file=out)
     if report["failures"]:

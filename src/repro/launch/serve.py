@@ -2,9 +2,13 @@
 
 Transformer archs go through the continuous-batching decode engine
 (:class:`repro.serving.engine.ServeEngine`); the paper's CNN archs
-(``alexnet`` / ``vgg16`` / ``vgg19``) go through the bucketed image engine
+(``alexnet`` / ``vgg16`` / ``vgg19``) go through the SLO-aware image engine
 (:class:`repro.serving.cnn_engine.CNNServeEngine`).  Dispatch is on the
-registry config's ``family``.
+registry config's ``family``.  ``--arch a,b,...`` serves several models on
+one device pool through the deadline-ordered
+:class:`repro.serving.dispatcher.MultiModelDispatcher`; ``--slo`` /
+``--deadline-ms`` attach per-request latency budgets (overdue requests are
+rejected with typed results, printed in the tally).
 """
 from __future__ import annotations
 
@@ -33,16 +37,29 @@ def _serve_lm(cfg, args) -> int:
         plen = int(rng.integers(3, 9))
         prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
         engine.submit(Request(uid=uid, prompt=prompt,
-                              max_new_tokens=args.max_new))
+                              max_new_tokens=args.max_new,
+                              **_request_slo_kwargs(args)))
     done = engine.run()
     dt = time.time() - t0
     n_tok = sum(len(r.out_tokens) for r in done.values())
     for uid in sorted(done):
         r = done[uid]
         print(f"[serve] req {uid}: prompt {list(r.prompt)} -> {r.out_tokens}")
-    print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.1f}s "
-          f"({n_tok/dt:.1f} tok/s)", flush=True)
-    return 0 if len(done) == args.requests else 1
+    for uid in sorted(engine.expired):
+        print(f"[serve] req {uid}: EXPIRED before admission")
+    print(f"[serve] {len(done)} requests ({len(engine.expired)} expired), "
+          f"{n_tok} tokens in {dt:.1f}s ({n_tok/dt:.1f} tok/s)", flush=True)
+    return 0 if len(done) + len(engine.expired) == args.requests else 1
+
+
+def _request_slo_kwargs(args) -> dict:
+    """Per-request deadline fields from the CLI flags (engine clock domain)."""
+    kw = {}
+    if args.slo:
+        kw["slo"] = args.slo
+    if args.deadline_ms is not None:
+        kw["deadline"] = time.monotonic() + args.deadline_ms / 1e3
+    return kw
 
 
 def _serve_cnn(cfg, args) -> int:
@@ -58,7 +75,8 @@ def _serve_cnn(cfg, args) -> int:
     t0 = time.time()
     for uid in range(args.requests):
         img = rng.standard_normal((h, h, c)).astype(np.float32)
-        engine.submit(ImageRequest(uid=uid, image=img))
+        engine.submit(ImageRequest(uid=uid, image=img,
+                                   **_request_slo_kwargs(args)))
     done = engine.run()
     dt = time.time() - t0
     s = engine.stats()
@@ -66,18 +84,83 @@ def _serve_cnn(cfg, args) -> int:
         lat = engine.batcher.queue.latency(uid)
         print(f"[serve] img {uid}: label {done[uid].label} "
               f"({1e3 * lat:.1f} ms)")
+    for uid, exp in sorted(engine.expired.items()):
+        print(f"[serve] img {uid}: EXPIRED (deadline {exp.deadline:.3f} "
+              f"< admission at {exp.expired_at:.3f})")
     print(f"[serve] {cfg.name}/{cfg.policy.value}: "
           f"{s['images_done']} images in {dt:.2f}s wall "
           f"({s['images_per_s']:.1f} img/s batched, "
           f"p95 latency {1e3 * s['latency_p95_s']:.1f} ms, "
           f"padding {100 * s['padding_fraction']:.0f}%, "
+          f"expired {s['requests_expired']}, "
           f"buckets {s['bucket_counts']})", flush=True)
-    return 0 if len(done) == args.requests else 1
+    return 0 if len(done) + len(engine.expired) == args.requests else 1
+
+
+def _build_engine(cfg, args):
+    """One engine on the shared pool, CNN or LM, dispatcher-ready."""
+    if cfg.family == "cnn":
+        from repro.models.cnn import cnn_init
+        from repro.serving.cnn_engine import CNNServeEngine
+
+        params = cnn_init(cfg, jax.random.PRNGKey(args.seed))
+        buckets = tuple(int(b) for b in args.buckets.split(","))
+        eng = CNNServeEngine(cfg, params, buckets=buckets)
+        eng.warmup()
+        return eng
+    from repro.models import transformer
+    from repro.serving.engine import ServeEngine
+
+    params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+    return ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+
+
+def _serve_multi(cfgs, args) -> int:
+    """Several models, one device pool, deadline-ordered time slices."""
+    from repro.serving.cnn_engine import ImageRequest
+    from repro.serving.dispatcher import MultiModelDispatcher
+    from repro.serving.engine import Request
+
+    disp = MultiModelDispatcher()
+    for cfg in cfgs:
+        disp.register(cfg.name, _build_engine(cfg, args))
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    uid = 0
+    for cfg in cfgs:           # interleave submissions round-robin-ish
+        for _ in range(args.requests):
+            kw = _request_slo_kwargs(args)
+            if cfg.family == "cnn":
+                h, c = cfg.img_size, cfg.in_channels
+                img = rng.standard_normal((h, h, c)).astype(np.float32)
+                disp.submit(cfg.name, ImageRequest(uid=uid, image=img, **kw))
+            else:
+                plen = int(rng.integers(3, 9))
+                prompt = rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32)
+                disp.submit(cfg.name, Request(uid=uid, prompt=prompt,
+                                              max_new_tokens=args.max_new,
+                                              **kw))
+            uid += 1
+    done = disp.run()
+    dt = time.time() - t0
+    s = disp.stats()
+    for name in disp.models:
+        eng = disp.engine(name)
+        print(f"[serve] {name}: {len(done[name])} done, "
+              f"{len(eng.request_queue.expired)} expired, "
+              f"{s['per_model'][name]['dispatch_steps']} dispatch steps")
+    print(f"[serve] multi-model: {s['requests_done']} requests "
+          f"({s['requests_expired']} expired) across {len(cfgs)} models "
+          f"in {dt:.2f}s on one device pool", flush=True)
+    want = args.requests * len(cfgs)
+    return 0 if s["requests_done"] + s["requests_expired"] == want else 1
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--arch", default="granite-3-2b",
+                    help="one arch, or a comma-separated list served on one "
+                         "device pool via the multi-model dispatcher")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
@@ -89,15 +172,30 @@ def main(argv=None):
                     help="CNN conv dispatch: auto | im2col | systolic | "
                          "implicit | winograd")
     ap.add_argument("--policy", default=None)
+    ap.add_argument("--slo", default=None,
+                    help="SLO class per request: interactive | standard | "
+                         "batch (budget resolved at submit; overdue "
+                         "requests are rejected, not served late)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="explicit per-request latency budget in ms "
+                         "(wins over --slo's class budget)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    if args.policy:
-        from repro.core.precision import MatmulPolicy
-        cfg = cfg.replace(policy=MatmulPolicy(args.policy))
+    cfgs = []
+    for arch in args.arch.split(","):
+        cfg = get_config(arch.strip())
+        if args.reduced:
+            cfg = reduced(cfg)
+        if args.policy:
+            from repro.core.precision import MatmulPolicy
+            cfg = cfg.replace(policy=MatmulPolicy(args.policy))
+        cfgs.append(cfg)
+    if len(cfgs) > 1:
+        if any(c.family in ("encdec",) for c in cfgs):
+            ap.error("the multi-model pool serves decoder-only LM families")
+        return _serve_multi(cfgs, args)
+    cfg = cfgs[0]
     if cfg.family == "cnn":
         if args.conv_path:
             cfg = cfg.replace(conv_path=args.conv_path)

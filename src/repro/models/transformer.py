@@ -608,8 +608,35 @@ def _ring_local_attention(lp, x, cfg, cache: KVCache, pos, window):
     return y, KVCache(ck, cv)
 
 
-def serve_step(params, cfg: ModelConfig, cache, tokens, pos):
-    """One decode step: tokens (b, 1), pos scalar -> (logits (b, V), cache)."""
+def serve_step(params, cfg: ModelConfig, cache, tokens, pos, write_mask=None):
+    """One decode step: tokens (b, 1), pos scalar -> (logits (b, V), cache).
+
+    ``write_mask`` (optional, bool (b,)): rows allowed to MUTATE the cache/
+    recurrent state.  The raw step writes every batch row's K/V at ``pos``
+    (and advances every recurrent state), so a serving engine stepping a
+    position group with zeroed token rows for the other slots would clobber
+    an active slot's cache row at that position -- and corrupt recurrent
+    state on every step.  With a mask, rows outside it keep their previous
+    cache/state bit-for-bit; their logits are still computed (and must be
+    ignored by the caller).  ``None`` preserves the single-position
+    semantics every non-engine caller (prefill, decode-consistency tests,
+    the dry-run step fns) relies on.
+    """
+    logits, new_cache = _serve_step_all_rows(params, cfg, cache, tokens, pos)
+    if write_mask is not None:
+        mask = jnp.asarray(write_mask, bool)
+
+        def keep(new, old):
+            # every cache/state leaf carries batch on axis 1:
+            # (n_layers|n_groups, b, ...) -- masked rows keep the old value
+            m = mask.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+
+        new_cache = jax.tree.map(keep, new_cache, cache)
+    return logits, new_cache
+
+
+def _serve_step_all_rows(params, cfg: ModelConfig, cache, tokens, pos):
     fam = cfg.family
     b, s = tokens.shape
     x = _embed(params, cfg, tokens)

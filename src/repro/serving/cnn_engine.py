@@ -5,13 +5,19 @@ Abdelouahab et al. survey) gets CNN throughput from *fixed-shape* batched
 pipelines with weights resident in quantized form.  This engine is that
 discipline on the KOM substrate:
 
-  * **Admission + microbatching** -- requests join the shared
-    :class:`~repro.serving.scheduler.RequestQueue`; the
-    :class:`~repro.serving.scheduler.Microbatcher` drains it in FIFO order
-    into a small set of batch buckets (default 1/4/16/64), zero-padding each
-    microbatch up to its bucket.  The jitted forward therefore only ever
-    sees ``len(buckets)`` distinct shapes: after :meth:`warmup` (or the
-    first pass through each bucket) every step is a jit cache hit.
+  * **Continuous, SLO-aware admission** -- requests join the shared
+    :class:`~repro.serving.scheduler.RequestQueue` with an optional
+    ``deadline`` (absolute) or named SLO class (budget resolved at submit);
+    the :class:`~repro.serving.scheduler.Microbatcher` admits
+    earliest-deadline-first into a small set of batch buckets (default
+    1/4/16/64), zero-padding each microbatch up to the bucket its
+    timing-history cost model picks (padding fraction traded against the
+    projected step time, DESIGN.md 9.2).  Overdue requests are rejected
+    with typed ``Expired`` results, never served late.  Submission is
+    continuous -- feed the queue between steps; nothing drains to empty
+    first.  The jitted forward only ever sees ``len(buckets)`` distinct
+    shapes: after :meth:`warmup` (which also seeds the per-bucket timing
+    history) every step is a jit cache hit.
   * **Quantize-once weights** -- under the integer KOM policies the float
     params are converted to cached :class:`~repro.core.substrate.QWeight`
     leaves (int16 values + per-output-channel scales) ONCE at engine build
@@ -60,7 +66,7 @@ import numpy as np
 
 from repro.core.substrate import policy_int_spec
 from repro.models.cnn import CNNConfig, cnn_forward, cnn_quantize_params
-from repro.serving.scheduler import Microbatcher
+from repro.serving.scheduler import IncompleteRunError, Microbatcher
 
 
 @dataclasses.dataclass
@@ -69,6 +75,8 @@ class ImageRequest:
     image: np.ndarray                     # (H, W, C) float32
     logits: Optional[np.ndarray] = None   # (n_classes,) set at completion
     label: Optional[int] = None           # argmax(logits)
+    deadline: Optional[float] = None      # absolute, engine clock domain
+    slo: Optional[str] = None             # named class -> budget at submit
 
 
 class CNNServeEngine:
@@ -77,7 +85,8 @@ class CNNServeEngine:
     def __init__(self, cfg: CNNConfig, params, *,
                  buckets: Sequence[int] = (1, 4, 16, 64),
                  mesh=None, prequantize: bool | None = None,
-                 tune: bool = False):
+                 tune: bool = False, slo_budgets: Optional[dict] = None,
+                 clock=None):
         self.cfg = cfg
         if tune:
             # Measured tile sweep for THIS config's conv layers on THIS
@@ -108,7 +117,8 @@ class CNNServeEngine:
         # buckets rounded up to the data-parallel degree: every mesh slice
         # gets a full (possibly padded) batch shard
         buckets = sorted({-(-int(b) // dp) * dp for b in buckets})
-        self.batcher = Microbatcher(buckets)
+        kw = {} if clock is None else {"clock": clock}
+        self.batcher = Microbatcher(buckets, slo_budgets=slo_budgets, **kw)
         self._forward = jax.jit(self._make_forward())
 
     def _make_forward(self):
@@ -144,7 +154,24 @@ class CNNServeEngine:
             raise ValueError(
                 f"{self.cfg.name} serves ({h}, {h}, {self.cfg.in_channels}) "
                 f"images, got {img.shape}")
-        self.batcher.submit(req, img)
+        self.batcher.submit(req, img, deadline=req.deadline, slo=req.slo)
+
+    @property
+    def expired(self):
+        """Typed :class:`~repro.serving.scheduler.Expired` rejections."""
+        return self.batcher.queue.expired
+
+    @property
+    def request_queue(self):
+        """The shared scheduler queue (dispatcher protocol)."""
+        return self.batcher.queue
+
+    def has_work(self) -> bool:
+        return bool(len(self.batcher.queue))
+
+    def urgency(self) -> tuple:
+        """(earliest deadline, earliest submit) across pending requests."""
+        return self.batcher.queue.urgency()
 
     # -- execution -----------------------------------------------------------
 
@@ -153,11 +180,21 @@ class CNNServeEngine:
         return np.asarray(jax.block_until_ready(out))
 
     def warmup(self) -> None:
-        """Compile every bucket shape up front (steady-state = cache hits)."""
+        """Compile every bucket shape up front (steady-state = cache hits).
+
+        Also seeds the batcher's per-bucket service-time history with a
+        post-compile timed call per bucket, so the very first scheduling
+        decisions run the cost model instead of flying blind.
+        """
+        import time as _time
+
         h, c = self.cfg.img_size, self.cfg.in_channels
         for b in self.batcher.buckets:
             zeros = jnp.zeros((b, h, h, c), jnp.float32)
             jax.block_until_ready(self._forward(self.params, zeros))
+            t0 = _time.perf_counter()
+            jax.block_until_ready(self._forward(self.params, zeros))
+            self.batcher.record_service(b, _time.perf_counter() - t0)
 
     def step(self) -> List[ImageRequest]:
         """Serve one microbatch; returns the requests completed by it."""
@@ -170,11 +207,22 @@ class CNNServeEngine:
         return out
 
     def run(self, max_steps: int = 10_000) -> Dict[int, ImageRequest]:
-        """Drain the queue (mixed request streams welcome); returns done."""
+        """Drain the queue (mixed request streams welcome); returns done.
+
+        Raises :class:`~repro.serving.scheduler.IncompleteRunError` when
+        ``max_steps`` cuts the drain off with requests still pending -- the
+        old silent partial return read as "complete" and lost the tail.
+        Expired requests are NOT an error: they land in :attr:`expired`
+        as typed results.
+        """
         steps = 0
         while len(self.batcher.queue) and steps < max_steps:
             self.step()
             steps += 1
+        if len(self.batcher.queue):
+            raise IncompleteRunError(
+                self.batcher.queue.done,
+                [r.uid for r in self.batcher.queue.pending], max_steps)
         return self.batcher.queue.done
 
     # -- accounting -----------------------------------------------------------

@@ -1,0 +1,113 @@
+"""Multi-model dispatcher: several engines, one device pool, one policy.
+
+Shen et al.'s resource-partitioning result (PAPERS.md) argues different
+layer/model shapes deserve different resource slices.  On a single-host
+device pool the slice is TIME: each registered engine (CNN image engines
+for AlexNet/VGG16/VGG19, the transformer decode engine -- anything
+implementing the small protocol below) keeps its own jit caches, buckets
+and scheduler queue, and the dispatcher decides WHICH engine's step runs
+next.  The decision is the same deadline discipline the per-engine
+scheduler uses, lifted one level: the engine whose most urgent pending
+request has the earliest deadline steps first (earliest submit as the
+tie-break, registration order last), so an interactive-SLO request on one
+model overtakes a batch backlog on another (DESIGN.md 9.5).
+
+Engine protocol (both serving engines implement it):
+  * ``has_work()   -> bool``  -- pending requests (or in-flight slots)
+  * ``urgency()    -> (deadline, submitted)`` -- earliest pending, +inf pads
+  * ``step()``                -- run one batch/decode step
+  * ``request_queue``         -- the shared scheduler ``RequestQueue``
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.serving.scheduler import IncompleteRunError
+
+
+class MultiModelDispatcher:
+    """Deadline-ordered time multiplexing of serving engines on one pool."""
+
+    def __init__(self):
+        self._engines: Dict[str, Any] = {}
+        self._order: List[str] = []   # registration order, the last tie-break
+        self.steps_by_model: Dict[str, int] = {}
+
+    def register(self, name: str, engine) -> None:
+        if name in self._engines:
+            raise ValueError(f"engine {name!r} already registered")
+        for attr in ("has_work", "urgency", "step", "request_queue"):
+            if not hasattr(engine, attr):
+                raise TypeError(
+                    f"engine {name!r} lacks {attr!r}; the dispatcher "
+                    f"protocol needs has_work/urgency/step/request_queue")
+        self._engines[name] = engine
+        self._order.append(name)
+        self.steps_by_model[name] = 0
+
+    @property
+    def models(self) -> Tuple[str, ...]:
+        return tuple(self._order)
+
+    def engine(self, name: str):
+        return self._engines[name]
+
+    def submit(self, model: str, req, **kw) -> None:
+        if model not in self._engines:
+            raise KeyError(
+                f"unknown model {model!r}; registered: {self._order}")
+        self._engines[model].submit(req, **kw)
+
+    def has_work(self) -> bool:
+        return any(e.has_work() for e in self._engines.values())
+
+    def next_model(self) -> Optional[str]:
+        """The engine the deadline discipline steps next (None when idle)."""
+        live = [(self._engines[n].urgency(), i, n)
+                for i, n in enumerate(self._order)
+                if self._engines[n].has_work()]
+        if not live:
+            return None
+        return min(live)[2]
+
+    def step(self) -> Optional[str]:
+        """Step the most urgent engine; returns its model name (None: idle)."""
+        name = self.next_model()
+        if name is None:
+            return None
+        self._engines[name].step()
+        self.steps_by_model[name] += 1
+        return name
+
+    def run(self, max_steps: int = 10_000) -> Dict[str, Dict[int, Any]]:
+        """Serve every engine until all drain; raise if max_steps cuts off.
+
+        Returns ``{model: done_ledger}``.  Like the per-engine ``run``s,
+        a truncated drain raises :class:`IncompleteRunError` instead of
+        silently returning partial ledgers (stranded uids are prefixed
+        with their model name).
+        """
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            self.step()
+            steps += 1
+        if self.has_work():
+            stranded = [f"{n}:{r.uid}" for n in self._order
+                        for r in self._engines[n].request_queue.pending]
+            done = {n: dict(self._engines[n].request_queue.done)
+                    for n in self._order}
+            raise IncompleteRunError(done, stranded, max_steps)
+        return {n: self._engines[n].request_queue.done for n in self._order}
+
+    def stats(self) -> Dict[str, Any]:
+        per_model = {}
+        for n in self._order:
+            eng = self._engines[n]
+            per_model[n] = eng.stats() if hasattr(eng, "stats") else {}
+            per_model[n]["dispatch_steps"] = self.steps_by_model[n]
+        total_done = sum(len(self._engines[n].request_queue.done)
+                         for n in self._order)
+        total_exp = sum(len(self._engines[n].request_queue.expired)
+                        for n in self._order)
+        return {"models": list(self._order), "requests_done": total_done,
+                "requests_expired": total_exp, "per_model": per_model}

@@ -1,10 +1,14 @@
 """Batched serving engine: prefill + continuous batched decode.
 
 A production-shaped (single-host API, mesh-ready internals) engine:
-  * fixed decode batch of ``slots``; requests join a queue and are admitted
-    into free slots (continuous batching);
+  * fixed decode batch of ``slots``; requests join the shared scheduler
+    queue and are admitted into free slots earliest-deadline-first
+    (continuous batching; overdue requests are rejected with typed
+    ``Expired`` results instead of served late);
   * prefill runs the full forward with K/V collection, then the slot decodes
-    one token per engine step alongside every other active slot;
+    one token per engine step alongside every other active slot -- each
+    position group steps with a write mask so batch-mates at other
+    positions cannot clobber a slot's cache row or recurrent state;
   * per-slot position/length bookkeeping lives on host, the cache on device;
   * greedy or temperature sampling.
 
@@ -23,7 +27,7 @@ import numpy as np
 from repro.core.substrate import policy_int_spec
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.serving.scheduler import RequestQueue
+from repro.serving.scheduler import IncompleteRunError, RequestQueue
 from repro.serving.weight_quant import quantize_params_inline
 
 
@@ -34,12 +38,15 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     out_tokens: Optional[List[int]] = None
+    deadline: Optional[float] = None   # absolute, engine clock domain
+    slo: Optional[str] = None          # named class -> budget at submit
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, rng_seed: int = 0,
-                 prequantize: bool | None = None):
+                 prequantize: bool | None = None,
+                 slo_budgets: Optional[dict] = None, clock=None):
         if cfg.family in ("encdec",):
             raise NotImplementedError("engine serves decoder-only families")
         self.cfg = cfg
@@ -55,15 +62,26 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.cache = transformer.init_cache(cfg, slots, max_len)
+        # pristine per-slot state for admission-time reset: a reused slot
+        # must not leak the previous occupant's recurrent state (position
+        # masking hides stale KV rows, but RGLRU/mLSTM/sLSTM state has no
+        # position -- and SLSTM's normalizer inits to ones, not zeros)
+        self._cache0 = transformer.init_cache(cfg, slots, max_len)
+        self._reset_rows = jax.jit(lambda c, c0, m: jax.tree.map(
+            lambda a, a0: jnp.where(
+                m.reshape((1, -1) + (1,) * (a.ndim - 2)), a0, a), c, c0))
         self.pos = np.zeros((slots,), np.int64)      # next position per slot
         self.active: List[Optional[Request]] = [None] * slots
         # The ONE admission queue implementation (serving/scheduler.py):
-        # FIFO order, done ledger and latency stamps shared with the CNN
-        # engine rather than re-implemented per engine.
-        self._rq = RequestQueue()
+        # EDF admission with FIFO tie-break, done/expired ledgers and
+        # latency stamps shared with the CNN engine rather than
+        # re-implemented per engine.
+        kw = {} if clock is None else {"clock": clock}
+        self._rq = RequestQueue(slo_budgets=slo_budgets, **kw)
         self._rng = np.random.default_rng(rng_seed)
         self._decode = jax.jit(
-            lambda p, c, t, pos: transformer.serve_step(p, cfg, c, t, pos)
+            lambda p, c, t, pos, m: transformer.serve_step(
+                p, cfg, c, t, pos, write_mask=m)
         )
         self._prefill = jax.jit(
             lambda p, b: transformer.forward(p, cfg, b)
@@ -79,14 +97,34 @@ class ServeEngine:
     def done(self) -> Dict[int, Request]:
         return self._rq.done
 
+    @property
+    def expired(self) -> Dict[int, object]:
+        """Typed :class:`~repro.serving.scheduler.Expired` rejections."""
+        return self._rq.expired
+
+    @property
+    def request_queue(self) -> RequestQueue:
+        """The shared scheduler queue (dispatcher protocol)."""
+        return self._rq
+
+    def has_work(self) -> bool:
+        return bool(len(self._rq)) or any(r is not None for r in self.active)
+
+    def urgency(self) -> tuple:
+        """(earliest deadline, earliest submit) across pending requests."""
+        return self._rq.urgency()
+
     def submit(self, req: Request):
         req.out_tokens = []
-        self._rq.submit(req)
+        self._rq.submit(req, deadline=req.deadline, slo=req.slo)
 
     def _admit(self):
+        # Continuous admission: reject overdue requests (typed Expired
+        # results) then fill free slots earliest-deadline-first.
+        self._rq.expire_overdue()
         for s in range(self.slots):
             if self.active[s] is None:
-                admitted = self._rq.take(1)
+                admitted = self._rq.take(1, order="edf")
                 if not admitted:
                     break
                 self._prefill_slot(s, admitted[0])
@@ -102,12 +140,20 @@ class ServeEngine:
         """
         self.active[slot] = req
         self.pos[slot] = 0
+        # Only THIS slot may write K/V / advance state: the other slots see
+        # zeroed token rows and an earlier position -- without the write
+        # mask their cache rows at these positions (and any recurrent
+        # state) would be clobbered (ISSUE 7 bugfix).
+        mask = np.zeros((self.slots,), bool)
+        mask[slot] = True
+        mask_j = jnp.asarray(mask)
+        self.cache = self._reset_rows(self.cache, self._cache0, mask_j)
         for t in req.prompt:
             tok = np.zeros((self.slots, 1), np.int32)
             tok[slot, 0] = t
             logits, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(tok),
-                jnp.int32(self.pos[slot]),
+                jnp.int32(self.pos[slot]), mask_j,
             )
             self.pos[slot] += 1
 
@@ -133,17 +179,23 @@ class ServeEngine:
                 last = (req.out_tokens or [int(req.prompt[-1])])[-1]
                 tok[s, 0] = last
         # NOTE: slots decode at their own positions; serve_step takes one
-        # shared pos, so we step each distinct position group.
+        # shared pos, so we step each distinct position group.  The write
+        # mask restricts cache/state mutation to the group's slots: a
+        # batch-mate stepping at an EARLIER position must not clobber an
+        # active slot's already-written cache row there (ISSUE 7 bugfix).
         groups: Dict[int, List[int]] = {}
         for s, req in enumerate(self.active):
             if req is not None:
                 groups.setdefault(int(self.pos[s]), []).append(s)
         for pos, slot_ids in groups.items():
             t = np.zeros((self.slots, 1), np.int32)
+            mask = np.zeros((self.slots,), bool)
             for s in slot_ids:
                 t[s, 0] = tok[s, 0]
+                mask[s] = True
             logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(t), jnp.int32(pos)
+                self.params, self.cache, jnp.asarray(t), jnp.int32(pos),
+                jnp.asarray(mask),
             )
             logits = np.asarray(logits).reshape(self.slots, -1)
             for s in slot_ids:
@@ -158,9 +210,18 @@ class ServeEngine:
         return True
 
     def run(self, max_steps: int = 10_000):
+        """Serve until queue and slots drain; raise if max_steps cuts it off.
+
+        The old silent ``return done`` on a truncated run made callers read
+        partial results as complete -- in-flight and pending requests were
+        effectively lost (ISSUE 7 bugfix).
+        """
         steps = 0
-        while (len(self._rq) or any(r is not None for r in self.active)) \
-                and steps < max_steps:
+        while self.has_work() and steps < max_steps:
             self.step()
             steps += 1
+        if self.has_work():
+            stranded = [r.uid for r in self._rq.pending] + \
+                [r.uid for r in self.active if r is not None]
+            raise IncompleteRunError(self._rq.done, stranded, max_steps)
         return self._rq.done

@@ -1,17 +1,34 @@
-"""The one admission queue + fixed-shape microbatcher for every engine.
+"""The one admission queue + SLO-aware continuous microbatcher for every engine.
 
 Both serving engines -- the transformer decode :class:`~repro.serving.engine.
 ServeEngine` (slot-based continuous batching) and the CNN image
 :class:`~repro.serving.cnn_engine.CNNServeEngine` (bucketed microbatching) --
-admit work through the SAME :class:`RequestQueue`: FIFO order, completion
-ledger and per-request latency stamps are defined once, here, and nowhere
-else (DESIGN.md section 9.1; the single-definition invariant is enforced by
-a grep test, like the limb split's).
+admit work through the SAME :class:`RequestQueue`: admission order, the
+completion/expiry ledgers and per-request latency stamps are defined once,
+here, and nowhere else (DESIGN.md section 9.1; the single-definition
+invariant is enforced by a grep test, like the limb split's).
 
-:class:`Microbatcher` adds the fixed-shape batching discipline on top: the
-queue drains into a small set of batch *buckets* (e.g. 1/4/16/64), each
-microbatch zero-padded up to its bucket so the jitted forward only ever sees
-those shapes -- every steady-state step is a jit cache hit.  Padding and
+Scheduling is **continuous and SLO-aware**, not FIFO drain-to-empty:
+
+  * requests carry an optional absolute ``deadline`` (or a named SLO class
+    that maps to a latency budget at submit time); admission is
+    earliest-deadline-first with FIFO tie-break, so an urgent request
+    submitted late overtakes a patient backlog;
+  * requests whose deadline has already passed are never served late --
+    :meth:`RequestQueue.expire_overdue` rejects them with a typed
+    :class:`Expired` result in the ``expired`` ledger;
+  * new work can be submitted between (and, from a driver's point of view,
+    during) steps -- :meth:`Microbatcher.step` admits whatever is pending
+    NOW, it never requires the queue to drain first;
+  * bucket selection is a cost model, not a fixed rule: using the
+    per-bucket service-time history (``step_log``), :meth:`Microbatcher.
+    select_batch` trades padding fraction against the projected step time
+    so the most urgent pending deadline is still met (DESIGN.md 9.2).
+
+:class:`Microbatcher` keeps the fixed-shape discipline: the queue admits
+into a small set of batch *buckets* (e.g. 1/4/16/64), each microbatch
+zero-padded up to its bucket so the jitted forward only ever sees those
+shapes -- every steady-state step is a jit cache hit.  Padding and
 unpadding bookkeeping lives on host; the forward fn never learns which rows
 were real.
 """
@@ -23,6 +40,34 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+#: Default latency budgets (seconds) per SLO class.  ``None`` = no deadline
+#: (best-effort batch work).  Engines and the queue accept an override dict.
+DEFAULT_SLO_BUDGETS: Dict[str, Optional[float]] = {
+    "interactive": 0.050,
+    "standard": 0.500,
+    "batch": None,
+}
+
+
+class IncompleteRunError(RuntimeError):
+    """``run()`` hit ``max_steps`` with requests still pending.
+
+    Silently returning ``done`` here is the request-loss trap: callers read
+    the return as "complete" and the pending tail is lost.  The partial
+    ledger stays reachable on the exception.
+    """
+
+    def __init__(self, done: Dict[int, Any], pending_uids: Sequence[int],
+                 max_steps: int):
+        self.done = done
+        self.pending_uids = list(pending_uids)
+        self.max_steps = max_steps
+        super().__init__(
+            f"run() stopped at max_steps={max_steps} with "
+            f"{len(self.pending_uids)} request(s) still pending "
+            f"(uids {self.pending_uids[:8]}{'...' if len(self.pending_uids) > 8 else ''}); "
+            f"{len(done)} completed -- raise max_steps or keep stepping")
+
 
 @dataclasses.dataclass
 class RequestTiming:
@@ -31,6 +76,9 @@ class RequestTiming:
     submitted: float
     admitted: Optional[float] = None
     completed: Optional[float] = None
+    expired: Optional[float] = None
+    deadline: Optional[float] = None   # absolute, in the queue's clock domain
+    slo: Optional[str] = None
 
     @property
     def latency(self) -> Optional[float]:
@@ -44,21 +92,51 @@ class RequestTiming:
             return None
         return self.admitted - self.submitted
 
+    @property
+    def met_deadline(self) -> Optional[bool]:
+        """True/False for completed requests with a deadline, else None."""
+        if self.completed is None or self.deadline is None:
+            return None
+        return self.completed <= self.deadline
 
-class RequestQueue:
-    """FIFO admission queue + completion ledger (the single implementation).
 
-    Requests are any objects with a ``uid`` attribute.  ``take`` pops in
-    strict submission order; ``finish`` moves a request to the ``done``
-    ledger.  Every transition is stamped with the host clock so engines get
-    per-request latency accounting for free.
+@dataclasses.dataclass(frozen=True)
+class Expired:
+    """Typed rejection: the request's deadline passed before admission.
+
+    Handed back INSTEAD of serving late -- a caller that only checks the
+    ``done`` ledger cannot mistake an expired request for a lost one, it is
+    in ``RequestQueue.expired`` with the deadline it missed.
     """
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
+    uid: int
+    deadline: float
+    expired_at: float
+    slo: Optional[str]
+    request: Any
+
+
+class RequestQueue:
+    """Deadline-aware admission queue + completion/expiry ledgers.
+
+    Requests are any objects with a ``uid`` attribute.  ``take`` pops in
+    FIFO or earliest-deadline-first order; ``finish`` moves a request to the
+    ``done`` ledger; ``expire_overdue`` moves overdue requests to the
+    ``expired`` ledger as typed :class:`Expired` results.  Every transition
+    is stamped with the host clock so engines get per-request latency
+    accounting for free.  This is the single queue implementation both
+    serving engines share.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic,
+                 slo_budgets: Optional[Dict[str, Optional[float]]] = None):
         self._clock = clock
         self._pending: List[Any] = []
         self.done: Dict[int, Any] = {}
+        self.expired: Dict[int, Expired] = {}
         self.timing: Dict[int, RequestTiming] = {}
+        self.slo_budgets = dict(DEFAULT_SLO_BUDGETS if slo_budgets is None
+                                else slo_budgets)
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -71,28 +149,114 @@ class RequestQueue:
     def drained(self) -> bool:
         return not self._pending
 
-    def submit(self, req) -> None:
-        self.timing[req.uid] = RequestTiming(submitted=self._clock())
+    def submit(self, req, *, deadline: Optional[float] = None,
+               slo: Optional[str] = None) -> None:
+        """Enqueue ``req``; stamp it; resolve its deadline.
+
+        ``deadline`` is ABSOLUTE in this queue's clock domain; ``slo`` names
+        a class in ``slo_budgets`` whose budget is added to the submit
+        stamp.  An explicit ``deadline`` wins over the class budget.
+        Duplicate uids are rejected: silently accepting one used to
+        overwrite the first request's ``timing`` entry and later collide in
+        the ``done`` ledger, dropping its result and stamps.
+        """
+        uid = req.uid
+        if uid in self.timing:
+            state = ("done" if uid in self.done else
+                     "expired" if uid in self.expired else "pending")
+            raise ValueError(
+                f"duplicate uid {uid}: a request with this uid is already "
+                f"{state}; uids identify results in the ledgers and must be "
+                f"unique per queue")
+        now = self._clock()
+        if slo is not None:
+            if slo not in self.slo_budgets:
+                raise ValueError(
+                    f"unknown SLO class {slo!r}; known: "
+                    f"{sorted(self.slo_budgets)}")
+            if deadline is None and self.slo_budgets[slo] is not None:
+                deadline = now + self.slo_budgets[slo]
+        self.timing[uid] = RequestTiming(submitted=now, deadline=deadline,
+                                         slo=slo)
         self._pending.append(req)
 
-    def take(self, max_n: int) -> List[Any]:
-        """Admit up to ``max_n`` requests, oldest first."""
+    def _deadline_key(self, req) -> float:
+        d = self.timing[req.uid].deadline
+        return float("inf") if d is None else d
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest pending deadline, or None if no pending request has one."""
+        ds = [self.timing[r.uid].deadline for r in self._pending]
+        ds = [d for d in ds if d is not None]
+        return min(ds) if ds else None
+
+    def urgency(self) -> Tuple[float, float]:
+        """(earliest deadline, earliest submit) over pending -- dispatch key."""
+        if not self._pending:
+            return (float("inf"), float("inf"))
+        return (min(self._deadline_key(r) for r in self._pending),
+                min(self.timing[r.uid].submitted for r in self._pending))
+
+    def take(self, max_n: int, *, order: str = "edf") -> List[Any]:
+        """Admit up to ``max_n`` requests.
+
+        ``order="edf"`` (the serving default): earliest deadline first,
+        submission order as the tie-break -- deadline-less requests sort
+        after every deadlined one.  ``order="fifo"``: strict submission
+        order (the PR-2 behavior, still used where deadlines don't exist).
+        """
         if max_n <= 0:
             return []
-        admitted = self._pending[:max_n]
-        del self._pending[:max_n]
+        if order == "fifo":
+            admitted = self._pending[:max_n]
+            del self._pending[:max_n]
+        elif order == "edf":
+            ranked = sorted(range(len(self._pending)),
+                            key=lambda i: (self._deadline_key(self._pending[i]), i))
+            chosen = ranked[:max_n]
+            admitted = [self._pending[i] for i in chosen]
+            chosen_set = set(chosen)
+            self._pending = [r for i, r in enumerate(self._pending)
+                             if i not in chosen_set]
+        else:
+            raise ValueError(f"unknown admission order {order!r}")
         now = self._clock()
         for req in admitted:
             self.timing[req.uid].admitted = now
         return admitted
 
+    def expire_overdue(self, now: Optional[float] = None) -> List[Expired]:
+        """Reject every pending request whose deadline has passed.
+
+        Each gets a typed :class:`Expired` result in the ``expired`` ledger
+        (and an ``expired`` stamp) INSTEAD of being served late.  Returns
+        the new rejections.
+        """
+        now = self._clock() if now is None else now
+        out: List[Expired] = []
+        keep: List[Any] = []
+        for req in self._pending:
+            t = self.timing[req.uid]
+            if t.deadline is not None and t.deadline <= now:
+                t.expired = now
+                res = Expired(uid=req.uid, deadline=t.deadline,
+                              expired_at=now, slo=t.slo, request=req)
+                self.expired[req.uid] = res
+                out.append(res)
+            else:
+                keep.append(req)
+        if out:
+            self._pending = keep
+        return out
+
     def requeue_front(self, reqs: Sequence[Any]) -> None:
         """Return admitted-but-unserved requests to the HEAD of the queue.
 
         Used when a forward fails after admission: the requests go back in
-        their original relative order ahead of everything newer (FIFO
-        preserved), and their admission stamp is cleared so ``queue_wait``
-        reflects the admission that actually served them.
+        their original relative order ahead of everything newer, and their
+        admission stamp is cleared so ``queue_wait`` reflects the admission
+        that actually served them.  (Under EDF the next ``take`` re-ranks
+        by deadline anyway; front insertion preserves the FIFO tie-break.)
         """
         self._pending[:0] = list(reqs)
         for req in reqs:
@@ -111,11 +275,13 @@ class RequestQueue:
 
 
 def select_bucket(pending: int, buckets: Sequence[int]) -> int:
-    """Fixed-shape bucket for ``pending`` waiting requests.
+    """Fixed-shape bucket for ``pending`` waiting requests (no history).
 
     The smallest bucket that fits them all (minimal padding), or the largest
     bucket when more are waiting than any bucket holds (the queue drains at
     full batches until the tail).  ``buckets`` must be sorted ascending.
+    This is the history-less fallback :meth:`Microbatcher.select_batch`
+    degenerates to before any step has been timed.
     """
     if pending <= 0:
         raise ValueError("select_bucket needs pending >= 1")
@@ -138,23 +304,32 @@ def pad_batch(rows: List[np.ndarray], bucket: int) -> np.ndarray:
 
 
 class Microbatcher:
-    """Bucketed fixed-shape batching over a :class:`RequestQueue`.
+    """SLO-aware continuous batching over a :class:`RequestQueue`.
 
     Payloads (one ndarray per request, all the same shape) are stacked and
     zero-padded to the selected bucket; the step fn sees only bucket-shaped
     batches, and only the first ``n_real`` output rows are handed back to
-    their requests.  Everything here is host bookkeeping -- no device math --
-    so the scheduling policy is unit-testable with a stubbed forward fn.
+    their requests.  Admission is earliest-deadline-first and continuous --
+    submit between steps at will; each :meth:`step` first rejects overdue
+    requests (typed :class:`Expired` results), then picks the bucket whose
+    projected service time still meets the most urgent pending deadline at
+    the best real-rows-per-second (DESIGN.md 9.2).  Everything here is host
+    bookkeeping -- no device math -- so the scheduling policy is
+    unit-testable with a stubbed forward fn.
     """
 
+    #: recent service-time samples per bucket consulted by the projection
+    HISTORY_WINDOW = 16
+
     def __init__(self, buckets: Sequence[int] = (1, 4, 16, 64),
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 slo_budgets: Optional[Dict[str, Optional[float]]] = None):
         if not buckets:
             raise ValueError("need at least one bucket size")
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         if self.buckets[0] < 1:
             raise ValueError(f"bucket sizes must be >= 1: {self.buckets}")
-        self.queue = RequestQueue(clock)
+        self.queue = RequestQueue(clock, slo_budgets=slo_budgets)
         self._clock = clock
         # padding/throughput bookkeeping
         self.steps = 0
@@ -162,23 +337,101 @@ class Microbatcher:
         self.padded_rows = 0
         self.bucket_counts: Dict[int, int] = {b: 0 for b in self.buckets}
         self.step_log: List[dict] = []
+        # per-bucket service-time history feeding the selection cost model
+        self._service_hist: Dict[int, List[float]] = {b: [] for b in self.buckets}
 
-    def submit(self, req, payload: np.ndarray) -> None:
+    def submit(self, req, payload: np.ndarray, *,
+               deadline: Optional[float] = None,
+               slo: Optional[str] = None) -> None:
         req._payload = np.asarray(payload)
-        self.queue.submit(req)
+        self.queue.submit(req, deadline=deadline, slo=slo)
+
+    # -- SLO-aware batch selection -------------------------------------------
+
+    def record_service(self, bucket: int, seconds: float) -> None:
+        """Feed one observed service time into the projection history.
+
+        ``step`` does this for every successful batch; engines also call it
+        from ``warmup()`` so the very first scheduling decisions already
+        have per-bucket timings instead of flying blind.
+        """
+        self._service_hist.setdefault(bucket, []).append(float(seconds))
+
+    def service_estimate(self, bucket: int) -> Optional[float]:
+        """Projected step time for ``bucket`` -- a p99-flavored bound.
+
+        The max over the recent history window (with <~100 samples per
+        bucket the empirical max IS the p99 estimate).  Buckets never timed
+        borrow from the nearest measured bucket: flat when borrowing
+        downward (a smaller batch is dominated by the same fixed dispatch
+        cost, not linearly cheaper), scaled linearly in batch rows when
+        borrowing upward (a conservative bound).  With no history at all
+        returns None (the cost model then degenerates to smallest-fit).
+        """
+        hist = self._service_hist.get(bucket)
+        if hist:
+            return max(hist[-self.HISTORY_WINDOW:])
+        known = [(b, max(h[-self.HISTORY_WINDOW:]))
+                 for b, h in self._service_hist.items() if h]
+        if not known:
+            return None
+        b0, t0 = min(known, key=lambda bt: abs(bt[0] - bucket))
+        return t0 * max(1.0, bucket / b0)
+
+    def select_batch(self, now: Optional[float] = None) -> Tuple[int, int]:
+        """Pick ``(bucket, admit_n)`` for the current queue state.
+
+        The cost model trades padding fraction against the projected step
+        time: among buckets whose projection still meets the most urgent
+        pending deadline, take the one serving the most real rows per
+        projected second (padding fraction, then smaller bucket, as
+        tie-breaks).  If NO bucket can meet the urgent deadline, serve it
+        anyway on the fastest-projected bucket -- minimizing how late it is
+        beats maximizing throughput.  With no timing history every bucket
+        projects instantaneous and this degenerates to the PR-2
+        smallest-fit rule (``select_bucket``).
+        """
+        n = len(self.queue)
+        if n <= 0:
+            raise ValueError("select_batch needs a non-empty queue")
+        now = self._clock() if now is None else now
+        d_min = self.queue.next_deadline()
+        feasible: List[Tuple[float, int, float, int]] = []
+        fallback: List[Tuple[float, int, int]] = []
+        for b in self.buckets:
+            m = min(n, b)
+            est = self.service_estimate(b) or 0.0
+            rate = m / max(est, 1e-9)
+            padding = (b - m) / b
+            if d_min is None or now + est <= d_min:
+                # maximize projected real rows/sec; ties (the linear-borrow
+                # estimate makes them exact) prefer more rows per step, then
+                # less padding, then the smaller bucket
+                feasible.append((rate, m, -padding, -b))
+            fallback.append((est, -m, b))
+        if feasible:
+            rate, m, neg_pad, neg_b = max(feasible)
+            return -neg_b, m
+        est, neg_m, b = min(fallback)
+        return b, -neg_m
+
+    # -- the serve loop -------------------------------------------------------
 
     def step(self, run_batch: Callable[[np.ndarray], np.ndarray]
              ) -> List[Tuple[Any, np.ndarray]]:
-        """Admit one microbatch, run it, unpad, and finish its requests.
+        """Admit one microbatch (EDF), run it, unpad, finish its requests.
 
-        Returns ``[(request, output_row), ...]`` for the real rows only;
-        an empty list when the queue is drained.
+        Overdue requests are rejected first (typed results in
+        ``queue.expired``) -- they are never padded into a batch and served
+        late.  Returns ``[(request, output_row), ...]`` for the real rows
+        only; an empty list when nothing admissible is pending.
         """
-        n_pending = len(self.queue)
-        if n_pending == 0:
+        now = self._clock()
+        self.queue.expire_overdue(now)
+        if len(self.queue) == 0:
             return []
-        bucket = select_bucket(n_pending, self.buckets)
-        admitted = self.queue.take(bucket)
+        bucket, admit_n = self.select_batch(now)
+        admitted = self.queue.take(admit_n, order="edf")
         batch = pad_batch([r._payload for r in admitted], bucket)
         t0 = self._clock()
         try:
@@ -190,8 +443,8 @@ class Microbatcher:
         except BaseException:
             # A failed forward (OOM, bad shape) must not lose its admitted
             # requests: they are neither pending nor done at this point.
-            # Re-queue them at the FRONT -- FIFO preserved, step counters
-            # untouched, payloads still attached -- then re-raise.
+            # Re-queue them at the FRONT -- admission order preserved, step
+            # counters untouched, payloads still attached -- then re-raise.
             self.queue.requeue_front(admitted)
             raise
         dt = self._clock() - t0
@@ -201,6 +454,7 @@ class Microbatcher:
         self.bucket_counts[bucket] += 1
         self.step_log.append({"bucket": bucket, "real": len(admitted),
                               "seconds": dt})
+        self.record_service(bucket, dt)
         results = []
         for i, req in enumerate(admitted):
             del req._payload  # long-lived engines must not retain input copies
@@ -210,11 +464,22 @@ class Microbatcher:
 
     def run(self, run_batch: Callable[[np.ndarray], np.ndarray],
             max_steps: int = 10_000) -> Dict[int, Any]:
-        """Drain the queue: step until empty (or ``max_steps``)."""
+        """Drain the queue; raise :class:`IncompleteRunError` if it can't.
+
+        Convenience for closed request sets (benchmarks, tests).  Continuous
+        serving drives :meth:`step` directly and submits between steps.
+        Hitting ``max_steps`` with requests still pending raises -- the old
+        silent ``return done`` made callers read a truncated run as
+        complete, losing the pending tail.
+        """
         steps = 0
         while len(self.queue) and steps < max_steps:
             self.step(run_batch)
             steps += 1
+        if len(self.queue):
+            raise IncompleteRunError(
+                self.queue.done, [r.uid for r in self.queue.pending],
+                max_steps)
         return self.queue.done
 
     # -- accounting ---------------------------------------------------------
@@ -227,8 +492,13 @@ class Microbatcher:
     def stats(self) -> dict:
         lats = [v for v in self.queue.latencies() if v is not None]
         wall = sum(s["seconds"] for s in self.step_log)
+        met = [self.queue.timing[uid].met_deadline for uid in self.queue.done]
+        misses = sum(1 for m in met if m is False)
+        in_time = len(lats) - misses
         return {
             "requests_done": len(self.queue.done),
+            "requests_expired": len(self.queue.expired),
+            "deadline_misses": misses,
             "steps": self.steps,
             "real_rows": self.real_rows,
             "padded_rows": self.padded_rows,
@@ -236,6 +506,9 @@ class Microbatcher:
             "bucket_counts": dict(self.bucket_counts),
             "batch_seconds": wall,
             "throughput_rps": (self.real_rows / wall) if wall > 0 else 0.0,
+            "goodput_rps": (in_time / wall) if wall > 0 else 0.0,
             "latency_mean_s": float(np.mean(lats)) if lats else 0.0,
+            "latency_p50_s": float(np.percentile(lats, 50)) if lats else 0.0,
             "latency_p95_s": float(np.percentile(lats, 95)) if lats else 0.0,
+            "latency_p99_s": float(np.percentile(lats, 99)) if lats else 0.0,
         }

@@ -211,12 +211,24 @@ def test_run_drains_and_terminates():
     assert len(calls) == 3
 
 
-def test_run_respects_max_steps():
+def test_run_at_max_steps_with_pending_raises_not_silently_done():
+    """Regression (ISSUE 7): run() used to return ``done`` silently when
+    max_steps hit with requests still pending -- callers read that as
+    "complete" and the pending tail was effectively lost.  Now it raises,
+    with the partial ledger and the stranded uids on the exception."""
+    from repro.serving.scheduler import IncompleteRunError
+
     mb = Microbatcher(buckets=(1,))
     for uid in range(5):
         mb.submit(Req(uid), np.zeros((1,), np.float32))
-    mb.run(lambda b: b, max_steps=2)
+    with pytest.raises(IncompleteRunError, match="still pending") as ei:
+        mb.run(lambda b: b, max_steps=2)
     assert len(mb.queue) == 3 and len(mb.queue.done) == 2
+    assert sorted(ei.value.done) == [0, 1]
+    assert ei.value.pending_uids == [2, 3, 4]
+    # nothing was lost: the remaining steps still serve the tail
+    mb.run(lambda b: b)
+    assert sorted(mb.queue.done) == list(range(5))
 
 
 def test_stats_rollup():
@@ -246,3 +258,223 @@ def test_bucket_validation():
     with pytest.raises(ValueError):
         Microbatcher(buckets=(0, 4))
     assert Microbatcher(buckets=(4, 1, 4)).buckets == (1, 4)
+
+
+# -- SLO-aware admission (ISSUE 7): deadlines, expiry, the cost model ---------
+# Everything below drives an injected fake clock -- deterministic seconds,
+# no sleeps -- which is exactly why the engines take ``clock=``.
+
+class _Clock:
+    """Manually advanced clock; calling it reads, ``advance`` moves it."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def test_duplicate_uid_rejected_not_overwritten():
+    """Regression (ISSUE 7 satellite): ``submit`` used to silently accept a
+    duplicate uid, overwriting the first request's timing entry and later
+    colliding in the ``done`` ledger (the first result vanished).  Now it
+    raises, naming the state the uid is already in."""
+    q = RequestQueue()
+    first = Req(1)
+    q.submit(first)
+    with pytest.raises(ValueError, match="duplicate uid 1.*pending"):
+        q.submit(Req(1))
+    q.take(1)
+    q.finish(first)
+    with pytest.raises(ValueError, match="duplicate uid 1.*done"):
+        q.submit(Req(1))
+    assert q.done[1] is first            # the first result survived intact
+    clk = _Clock()
+    q2 = RequestQueue(clock=clk)
+    q2.submit(Req(7), deadline=1.0)
+    clk.advance(2.0)
+    q2.expire_overdue()
+    with pytest.raises(ValueError, match="duplicate uid 7.*expired"):
+        q2.submit(Req(7))
+
+
+def test_edf_take_orders_by_deadline_with_fifo_tiebreak():
+    clk = _Clock()
+    q = RequestQueue(clock=clk)
+    q.submit(Req(0))                     # no deadline: sorts last
+    q.submit(Req(1), deadline=10.0)
+    q.submit(Req(2), deadline=5.0)
+    q.submit(Req(3), deadline=5.0)       # deadline tie with 2 -> FIFO
+    assert [r.uid for r in q.take(10, order="edf")] == [2, 3, 1, 0]
+    with pytest.raises(ValueError, match="unknown admission order"):
+        q.take(1, order="lifo")
+
+
+def test_slo_class_resolves_budget_at_submit():
+    clk = _Clock(100.0)
+    q = RequestQueue(clock=clk)
+    q.submit(Req(1), slo="interactive")
+    assert q.timing[1].deadline == pytest.approx(100.050)
+    q.submit(Req(2), slo="batch")        # best-effort class: no deadline
+    assert q.timing[2].deadline is None
+    q.submit(Req(3), slo="standard", deadline=100.2)  # explicit wins
+    assert q.timing[3].deadline == 100.2
+    with pytest.raises(ValueError, match="unknown SLO class 'gold'"):
+        q.submit(Req(4), slo="gold")
+    gold = RequestQueue(clock=clk, slo_budgets={"gold": 2.0})
+    gold.submit(Req(1), slo="gold")
+    assert gold.timing[1].deadline == pytest.approx(102.0)
+
+
+def test_expire_overdue_is_a_typed_rejection():
+    from repro.serving.scheduler import Expired
+
+    clk = _Clock()
+    q = RequestQueue(clock=clk)
+    late = Req(0)
+    q.submit(late, deadline=1.0, slo=None)
+    q.submit(Req(1), deadline=9.0)
+    q.submit(Req(2))
+    clk.advance(2.0)
+    out = q.expire_overdue()
+    assert [e.uid for e in out] == [0]
+    e = q.expired[0]
+    assert isinstance(e, Expired)
+    assert (e.deadline, e.expired_at, e.request) == (1.0, 2.0, late)
+    assert q.timing[0].expired == 2.0
+    # expired is neither pending nor done -- a caller checking ``done``
+    # finds the typed result instead of a silently vanished request
+    assert [r.uid for r in q.pending] == [1, 2]
+    assert 0 not in q.done
+
+
+def test_microbatcher_step_expires_before_admission():
+    """An overdue request is never padded into a batch and served late."""
+    clk = _Clock()
+    mb = Microbatcher(buckets=(4,), clock=clk)
+    mb.submit(Req(0), np.zeros((1,), np.float32), deadline=1.0)
+    mb.submit(Req(1), np.zeros((1,), np.float32), slo="batch")
+    clk.advance(2.0)
+    done = mb.step(lambda b: b)
+    assert [r.uid for r, _ in done] == [1]
+    assert list(mb.queue.expired) == [0]
+    s = mb.stats()
+    assert s["requests_expired"] == 1 and s["requests_done"] == 1
+
+
+def test_service_estimate_borrows_flat_down_linear_up():
+    mb = Microbatcher(buckets=(1, 4, 16))
+    assert mb.service_estimate(4) is None          # no history at all
+    mb.record_service(4, 0.2)
+    assert mb.service_estimate(4) == pytest.approx(0.2)
+    # downward: a smaller batch still pays the fixed dispatch cost
+    assert mb.service_estimate(1) == pytest.approx(0.2)
+    # upward: conservative linear scaling in batch rows
+    assert mb.service_estimate(16) == pytest.approx(0.8)
+    mb.record_service(4, 0.4)                       # window max, p99-flavored
+    assert mb.service_estimate(4) == pytest.approx(0.4)
+
+
+def test_select_batch_trades_padding_against_projected_time():
+    clk = _Clock()
+    mb = Microbatcher(buckets=(1, 4, 16), clock=clk)
+    mb.record_service(1, 0.1)
+    mb.record_service(4, 0.2)
+    mb.record_service(16, 1.0)
+    for uid in range(6):
+        mb.submit(Req(uid), np.zeros((1,), np.float32))
+    # no deadlines: best real-rows-per-projected-second wins
+    # (1: 1/0.1=10/s, 4: 4/0.2=20/s, 16: 6/1.0=6/s)
+    assert mb.select_batch() == (4, 4)
+    # an urgent deadline rules out every bucket whose projection overruns
+    # it: only bucket 1 (0.1s) lands before t=0.15
+    mb.submit(Req(99), np.zeros((1,), np.float32), deadline=0.15)
+    assert mb.select_batch() == (1, 1)
+
+
+def test_select_batch_unmeetable_deadline_takes_fastest_bucket():
+    """When NO bucket's projection meets the urgent deadline, minimize how
+    late it is: fastest projected bucket, not max throughput."""
+    clk = _Clock()
+    mb = Microbatcher(buckets=(1, 4, 16), clock=clk)
+    mb.record_service(1, 0.5)    # bucket 1 measured SLOWER than bucket 4
+    mb.record_service(4, 0.2)
+    mb.record_service(16, 1.0)
+    mb.submit(Req(0), np.zeros((1,), np.float32), deadline=0.05)
+    mb.submit(Req(1), np.zeros((1,), np.float32))
+    assert mb.select_batch() == (4, 2)
+
+
+def test_select_batch_without_history_degenerates_to_smallest_fit():
+    mb = Microbatcher(buckets=(1, 4, 16))
+    for uid in range(3):
+        mb.submit(Req(uid), np.zeros((1,), np.float32),
+                  deadline=float(uid + 1))
+    assert mb.select_batch() == (select_bucket(3, mb.buckets), 3) == (4, 3)
+
+
+def test_step_admits_urgent_late_submitter_first():
+    """EDF through the serve loop: a tight-deadline request submitted LAST
+    overtakes the deadline-less backlog when the bucket can't take all."""
+    clk = _Clock()
+    mb = Microbatcher(buckets=(2,), clock=clk)
+    for uid in range(3):
+        mb.submit(Req(uid), np.full((1,), uid, np.float32))
+    mb.submit(Req(9), np.full((1,), 9, np.float32), deadline=1.0)
+    done = mb.step(lambda b: b)
+    assert [r.uid for r, _ in done] == [9, 0]       # urgent first, then FIFO
+    assert [r.uid for r in mb.queue.pending] == [1, 2]
+
+
+def test_requeue_after_failure_keeps_deadline_discipline():
+    """A failed forward re-queues its admitted requests; the NEXT admission
+    re-ranks by deadline, so an urgent request submitted during the failure
+    window still overtakes the requeued batch."""
+    clk = _Clock()
+    mb = Microbatcher(buckets=(2,), clock=clk)
+    mb.submit(Req(0), np.zeros((1,), np.float32))
+    mb.submit(Req(1), np.zeros((1,), np.float32), deadline=5.0)
+    with pytest.raises(RuntimeError, match="boom"):
+        mb.step(lambda b: (_ for _ in ()).throw(RuntimeError("boom")))
+    assert [r.uid for r in mb.queue.pending] == [1, 0]   # EDF take order
+    mb.submit(Req(2), np.zeros((1,), np.float32), deadline=1.0)
+    done = mb.step(lambda b: b)
+    assert [r.uid for r, _ in done] == [2, 1]
+    # deadlines survive the requeue: timing entries were never cleared
+    assert mb.queue.timing[1].deadline == 5.0
+
+
+def test_goodput_counts_only_in_deadline_completions():
+    """A request served but finished PAST its deadline is a deadline miss:
+    it counts in throughput, not goodput."""
+    clk = _FakeClock()                   # +0.5 per reading
+    mb = Microbatcher(buckets=(1,), clock=clk.tick)
+    # two clock reads happen at submit time; the step's expire check reads
+    # 1.5, admission 2.0 and completion 3.5 -- a 2.4 deadline is therefore
+    # alive at admission but already gone when the batch finishes
+    mb.submit(Req(0), np.zeros((1,), np.float32), deadline=2.4)
+    mb.submit(Req(1), np.zeros((1,), np.float32))
+    mb.run(lambda b: b)
+    assert mb.queue.expired == {}        # 0 was admitted before overdue
+    assert mb.queue.timing[0].met_deadline is False
+    assert mb.queue.timing[1].met_deadline is None
+    s = mb.stats()
+    assert s["deadline_misses"] == 1
+    assert s["throughput_rps"] > s["goodput_rps"] > 0
+    assert s["latency_p50_s"] <= s["latency_p99_s"]
+
+
+def test_urgency_and_next_deadline():
+    clk = _Clock(10.0)
+    q = RequestQueue(clock=clk)
+    assert q.urgency() == (float("inf"), float("inf"))
+    assert q.next_deadline() is None
+    q.submit(Req(0))
+    assert q.urgency() == (float("inf"), 10.0)
+    clk.advance(1.0)
+    q.submit(Req(1), deadline=20.0)
+    assert q.next_deadline() == 20.0
+    assert q.urgency() == (20.0, 10.0)

@@ -83,6 +83,31 @@ def test_batch_invariance_fp32(arch, path):
                                    err_msg=f"{arch}/{path}")
 
 
+def test_batch_invariance_survives_deadline_ordered_admission():
+    """ISSUE 7 acceptance: EDF admission changes WHICH batch serves a
+    request (an urgent late submitter jumps the queue), and per-row
+    activation scales must keep every request's logits bitwise equal to
+    the solo forward anyway -- batch composition is a scheduling detail,
+    never a numerics input."""
+    cfg = _small("alexnet", MatmulPolicy.KOM_INT14, "im2col")
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    eng = CNNServeEngine(cfg, params, buckets=(2,))
+    imgs = _images(cfg, 4, seed=3)
+    far = 1e9                       # ordered deadlines, none ever expires
+    for uid in (0, 1, 2):
+        eng.submit(ImageRequest(uid=uid, image=imgs[uid], deadline=far))
+    eng.submit(ImageRequest(uid=3, image=imgs[3], deadline=far / 2))
+    first = [r.uid for r in eng.step()]
+    assert first == [3, 0]          # EDF reordered admission: 3 jumped in
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2, 3]
+    qp = cnn_quantize_params(params, cfg)
+    for uid, img in enumerate(imgs):
+        np.testing.assert_array_equal(
+            done[uid].logits, _solo_logits(cfg, qp, img),
+            err_msg=f"request {uid}: admission order leaked into numerics")
+
+
 def test_schoolbook_policy_also_bitwise():
     cfg = _small("alexnet", MatmulPolicy.SCHOOLBOOK_INT16, "im2col")
     params = cnn_init(cfg, jax.random.PRNGKey(2))

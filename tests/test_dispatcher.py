@@ -1,0 +1,168 @@
+"""MultiModelDispatcher: deadline-ordered time slices over fake engines.
+
+The dispatcher is pure host scheduling (which engine steps next), so the
+contract is testable with stub engines built on the REAL scheduler queue
+-- no device math, no jit.  The deadline discipline lifted one level:
+the engine whose most urgent pending request has the earliest deadline
+steps first, earliest submit then registration order as tie-breaks.
+"""
+import dataclasses
+
+import pytest
+
+from repro.serving.dispatcher import MultiModelDispatcher
+from repro.serving.scheduler import IncompleteRunError, RequestQueue
+
+
+@dataclasses.dataclass
+class Req:
+    uid: int
+
+
+class _Clock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class FakeEngine:
+    """Minimal engine: one request served per step, EDF, real queue."""
+
+    def __init__(self, clock):
+        self._rq = RequestQueue(clock=clock)
+        self.served = []
+
+    def submit(self, req, **kw):
+        self._rq.submit(req, deadline=kw.get("deadline"), slo=kw.get("slo"))
+
+    def has_work(self):
+        return bool(len(self._rq))
+
+    def urgency(self):
+        return self._rq.urgency()
+
+    def step(self):
+        self._rq.expire_overdue()
+        for req in self._rq.take(1, order="edf"):
+            self._rq.finish(req)
+            self.served.append(req.uid)
+
+    @property
+    def request_queue(self):
+        return self._rq
+
+
+def _disp(clock, names=("cnn", "lm")):
+    disp = MultiModelDispatcher()
+    for n in names:
+        disp.register(n, FakeEngine(clock))
+    return disp
+
+
+def test_register_enforces_protocol_and_unique_names():
+    disp = MultiModelDispatcher()
+    disp.register("a", FakeEngine(_Clock()))
+    with pytest.raises(ValueError, match="already registered"):
+        disp.register("a", FakeEngine(_Clock()))
+
+    class NotAnEngine:
+        def has_work(self):
+            return False
+
+    with pytest.raises(TypeError, match="lacks 'urgency'"):
+        disp.register("b", NotAnEngine())
+    with pytest.raises(KeyError, match="unknown model"):
+        disp.submit("zzz", Req(0))
+
+
+def test_earliest_deadline_model_steps_first():
+    clk = _Clock()
+    disp = _disp(clk)
+    disp.submit("cnn", Req(0), deadline=10.0)
+    disp.submit("lm", Req(1), deadline=2.0)
+    assert disp.next_model() == "lm"
+    assert disp.step() == "lm"           # the urgent engine got the slice
+    assert disp.next_model() == "cnn"
+    disp.step()
+    assert disp.next_model() is None and disp.step() is None
+
+
+def test_interactive_request_overtakes_batch_backlog_on_other_model():
+    """The ISSUE 7 acceptance shape: an interactive-SLO request on one
+    model overtakes a deadline-less backlog on another."""
+    clk = _Clock()
+    disp = _disp(clk)
+    for uid in range(3):
+        disp.submit("cnn", Req(uid))                 # best-effort backlog
+    clk.t = 1.0
+    disp.submit("lm", Req(9), slo="interactive")     # budget -> 1.05
+    order = [disp.step() for _ in range(4)]
+    assert order == ["lm", "cnn", "cnn", "cnn"]
+
+
+def test_deadline_tie_breaks_on_submit_then_registration():
+    clk = _Clock()
+    disp = _disp(clk)
+    disp.submit("lm", Req(0))            # submitted at t=0
+    clk.t = 1.0
+    disp.submit("cnn", Req(1))           # same (no) deadline, later submit
+    assert disp.next_model() == "lm"
+    disp2 = _disp(_Clock())
+    disp2.submit("cnn", Req(0))
+    disp2.submit("lm", Req(1))           # identical stamps: registration
+    assert disp2.next_model() == "cnn"
+
+
+def test_run_drains_every_engine_and_returns_ledgers():
+    clk = _Clock()
+    disp = _disp(clk)
+    for uid in range(3):
+        disp.submit("cnn", Req(uid))
+    disp.submit("lm", Req(7), deadline=50.0)
+    done = disp.run()
+    assert sorted(done["cnn"]) == [0, 1, 2]
+    assert sorted(done["lm"]) == [7]
+    s = disp.stats()
+    assert s["requests_done"] == 4 and s["requests_expired"] == 0
+    assert s["per_model"]["cnn"]["dispatch_steps"] == 3
+    assert s["per_model"]["lm"]["dispatch_steps"] == 1
+
+
+def test_run_truncated_raises_with_model_qualified_uids():
+    clk = _Clock()
+    disp = _disp(clk)
+    for uid in range(2):
+        disp.submit("cnn", Req(uid))
+    disp.submit("lm", Req(5))
+    with pytest.raises(IncompleteRunError, match="still pending") as ei:
+        disp.run(max_steps=1)
+    assert set(ei.value.pending_uids) == {"cnn:1", "lm:5"}
+    # nothing lost: the remaining steps still drain
+    done = disp.run()
+    assert sorted(done["cnn"]) == [0, 1] and sorted(done["lm"]) == [5]
+
+
+def test_expired_requests_roll_up_in_stats():
+    clk = _Clock()
+    disp = _disp(clk)
+    disp.submit("cnn", Req(0), deadline=1.0)
+    disp.submit("cnn", Req(1))
+    clk.t = 2.0
+    done = disp.run()
+    assert sorted(done["cnn"]) == [1]
+    assert list(disp.engine("cnn").request_queue.expired) == [0]
+    s = disp.stats()
+    assert s["requests_done"] == 1 and s["requests_expired"] == 1
+
+
+def test_real_engines_satisfy_the_protocol():
+    """Both serving engines expose has_work/urgency/step/request_queue --
+    checked structurally so the protocol can't drift without this failing."""
+    from repro.serving.cnn_engine import CNNServeEngine
+    from repro.serving.engine import ServeEngine
+
+    for eng_cls in (CNNServeEngine, ServeEngine):
+        for attr in ("has_work", "urgency", "step", "request_queue"):
+            assert hasattr(eng_cls, attr), (eng_cls.__name__, attr)

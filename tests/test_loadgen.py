@@ -1,0 +1,84 @@
+"""Open-loop load generator (benchmarks/loadgen.py): traces, clock, merge.
+
+The generator's value to CI is determinism (same seed -> same trace ->
+comparable rows) and the warp clock's monotonicity; both are host-only
+properties, so no engine runs here.  The executed path is covered by the
+CI smoke lane itself (``loadgen --smoke --merge``).
+"""
+import numpy as np
+import pytest
+
+from benchmarks.loadgen import (
+    SLO_MIX,
+    WarpClock,
+    _slo_draw,
+    bursty_trace,
+    merge_rows,
+    poisson_trace,
+)
+
+
+def test_traces_are_seed_deterministic():
+    for maker in (poisson_trace, bursty_trace):
+        a = maker(50, 150.0, np.random.default_rng(7))
+        b = maker(50, 150.0, np.random.default_rng(7))
+        np.testing.assert_array_equal(a, b)
+        c = maker(50, 150.0, np.random.default_rng(8))
+        assert not np.array_equal(a, c)
+
+
+def test_traces_are_nondecreasing_and_hit_the_rate():
+    for maker in (poisson_trace, bursty_trace):
+        t = maker(400, 200.0, np.random.default_rng(0))
+        assert len(t) == 400
+        assert (np.diff(t) >= 0).all()
+        # long-run offered rate within 25% of nominal (exponential noise)
+        assert 400 / t[-1] == pytest.approx(200.0, rel=0.25)
+
+
+def test_bursty_trace_actually_bursts():
+    t = bursty_trace(64, 150.0, np.random.default_rng(0), burst=8)
+    gaps = np.diff(t)
+    # the typical gap is the 1ms intra-burst spacing...
+    assert np.median(gaps) == pytest.approx(1e-3)
+    # ...but idle stretches an order of magnitude longer separate bursts
+    # (the exponential inter-burst draw can be tiny, so not all 7
+    # boundaries must be large -- most are)
+    assert (gaps > 10e-3).sum() >= (len(t) // 8 - 1) // 2
+    assert gaps.max() > 20e-3
+
+
+def test_slo_draw_covers_the_mix():
+    slos = _slo_draw(300, np.random.default_rng(0))
+    names = {name for name, _ in SLO_MIX}
+    assert set(slos) == names            # every class appears at this n
+    assert _slo_draw(300, np.random.default_rng(0)) == slos
+
+
+def test_warp_clock_is_monotonic_and_jumps_idle_gaps():
+    clk = WarpClock()
+    t0 = clk.now()
+    clk.warp_to(t0 + 100.0)              # jump a 100s idle gap instantly
+    t1 = clk.now()
+    assert t0 + 100.0 <= t1 < t0 + 101.0
+    clk.warp_to(t1 - 50.0)               # backward warp is a no-op
+    assert clk.now() >= t1
+
+
+def test_merge_rows_replaces_by_identity():
+    payload = {"schema": "bench-convnets/v1",
+               "loadgen": [{"model": "alexnet", "policy": "kom_int14",
+                            "trace": "poisson", "p99_ms": 9.0},
+                           {"model": "vgg16", "policy": "kom_int14",
+                            "trace": "poisson", "p99_ms": 30.0}]}
+    fresh = [{"model": "alexnet", "policy": "kom_int14", "trace": "poisson",
+              "p99_ms": 5.0},
+             {"model": "alexnet", "policy": "kom_int14", "trace": "bursty",
+              "p99_ms": 7.0}]
+    merged = merge_rows(payload, fresh)["loadgen"]
+    by_id = {(r["model"], r["policy"], r["trace"]): r["p99_ms"]
+             for r in merged}
+    assert len(merged) == 3
+    assert by_id[("alexnet", "kom_int14", "poisson")] == 5.0   # replaced
+    assert by_id[("alexnet", "kom_int14", "bursty")] == 7.0    # appended
+    assert by_id[("vgg16", "kom_int14", "poisson")] == 30.0    # untouched

@@ -9,12 +9,19 @@ import json
 
 import pytest
 
-from benchmarks.perf_gate import bench_rows, gate, main
+from benchmarks.perf_gate import (
+    LATENCY_SLACK,
+    bench_rows,
+    gate,
+    lower_is_better,
+    main,
+)
 
 
-def _payload(serving=(), layers=()):
+def _payload(serving=(), layers=(), loadgen=()):
     return {"schema": "bench-convnets/v1", "smoke": True, "backend": "cpu",
-            "records": [], "serving": list(serving), "layers": list(layers)}
+            "records": [], "serving": list(serving), "layers": list(layers),
+            "loadgen": list(loadgen)}
 
 
 def _serving(model, path, ips, policy="kom_int14"):
@@ -116,6 +123,100 @@ def test_absolute_mode_flags_uniform_slowdown():
     report = gate(BASE, slow, absolute=True)
     assert report["status"] == "fail"
     assert len(report["failures"]) == 6
+
+
+# -- loadgen rows (ISSUE 7): latency is lower-is-better -----------------------
+
+def _loadgen(trace, goodput, p50, p95, p99, model="alexnet",
+             policy="kom_int14"):
+    return {"model": model, "policy": policy, "trace": trace,
+            "goodput_rps": goodput, "p50_ms": p50, "p95_ms": p95,
+            "p99_ms": p99, "throughput_rps": goodput, "requests": 24}
+
+
+LG_BASE = _payload(
+    serving=[_serving("vgg16", p, ips) for p, ips in
+             [("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+              ("winograd", 95.0)]],
+    loadgen=[_loadgen("poisson", 120.0, 3.0, 6.0, 8.0),
+             _loadgen("bursty", 200.0, 6.0, 12.0, 14.0)],
+)
+
+
+def test_loadgen_rows_fan_out_per_metric():
+    rows = bench_rows(LG_BASE)
+    key = ("loadgen", "alexnet", "kom_int14", "poisson", "p99_ms")
+    assert rows[key] == 8.0
+    assert rows[("loadgen", "alexnet", "kom_int14", "bursty",
+                 "goodput_rps")] == 200.0
+    assert lower_is_better(key)
+    assert not lower_is_better(("loadgen", "alexnet", "kom_int14",
+                                "poisson", "goodput_rps"))
+    assert not lower_is_better(("serving", "vgg16", "auto", "kom_int14"))
+
+
+def test_latency_blowup_fails_inverted():
+    """p99 tripling while every throughput row holds is a REAL regression;
+    the inverted ratio (baseline/new) makes the latency row the outlier."""
+    bad = _payload(
+        serving=[_serving("vgg16", p, ips) for p, ips in
+                 [("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+                  ("winograd", 95.0)]],
+        loadgen=[_loadgen("poisson", 120.0, 3.0, 6.0, 24.0),
+                 _loadgen("bursty", 200.0, 6.0, 12.0, 14.0)],
+    )
+    report = gate(LG_BASE, bad)
+    assert report["status"] == "fail"
+    failed = {tuple(r["key"]) for r in report["failures"]}
+    assert failed == {("loadgen", "alexnet", "kom_int14", "poisson",
+                       "p99_ms")}
+    # direction check: the inverted ratio reads 1/3, not 3
+    (row,) = report["failures"]
+    assert row["ratio"] == pytest.approx(1 / 3.0, rel=1e-3)
+
+
+def test_latency_improvement_reads_as_gain():
+    """One p99 halving (the rest untouched) passes, and its oriented ratio
+    reads 2x -- improvement, the same axis as a throughput gain."""
+    better = _payload(
+        serving=LG_BASE["serving"],
+        loadgen=[_loadgen("poisson", 120.0, 3.0, 6.0, 4.0),
+                 _loadgen("bursty", 200.0, 6.0, 12.0, 14.0)],
+    )
+    report = gate(LG_BASE, better)
+    assert report["status"] == "pass"
+    (row,) = [r for r in report["rows"]
+              if tuple(r["key"]) == ("loadgen", "alexnet", "kom_int14",
+                                     "poisson", "p99_ms")]
+    assert row["ratio"] == pytest.approx(2.0)
+
+
+def test_latency_rows_get_the_wider_bar():
+    """Quantile jitter inside the slack band passes; the same wobble on a
+    throughput row would be judged at the full threshold."""
+    jitter = 0.80                          # below 0.85, above 0.85 * slack
+    assert 0.85 * LATENCY_SLACK < jitter < 0.85
+    noisy = _payload(
+        serving=LG_BASE["serving"],
+        loadgen=[_loadgen("poisson", 120.0, 3.0, 6.0, 8.0 / jitter),
+                 _loadgen("bursty", 200.0, 6.0, 12.0, 14.0)],
+    )
+    assert gate(LG_BASE, noisy)["status"] == "pass"
+
+
+def test_uniform_slowdown_calibrates_across_mixed_row_kinds():
+    """A 2x slower machine halves throughput AND doubles latency; oriented
+    ratios all read 0.5, the median absorbs them together."""
+    slow = _payload(
+        serving=[_serving("vgg16", p, ips / 2) for p, ips in
+                 [("auto", 100.0), ("im2col", 80.0), ("implicit", 90.0),
+                  ("winograd", 95.0)]],
+        loadgen=[_loadgen("poisson", 60.0, 6.0, 12.0, 16.0),
+                 _loadgen("bursty", 100.0, 12.0, 24.0, 28.0)],
+    )
+    report = gate(LG_BASE, slow)
+    assert report["status"] == "pass"
+    assert report["calibration"] == pytest.approx(0.5, rel=1e-3)
 
 
 def test_cli_exit_codes(tmp_path, capsys):

@@ -1,0 +1,105 @@
+"""ServeEngine cache isolation: batch-mates must not clobber K/V rows.
+
+The grouped decode and ``_prefill_slot`` call ``serve_step`` with ONE shared
+``pos`` and zeroed token rows for slots outside the group.  The raw step
+writes EVERY batch row's K/V at that position (``dynamic_update_slice`` at
+batch start 0), so a batch-mate stepping at an earlier position used to
+overwrite an active slot's already-written cache row there -- and for the
+recurrent families every off-group step corrupted the state outright.
+ISSUE 7 fixed this with a per-row ``write_mask``; these differentials prove
+it: interleaved admission through the batched engine must reproduce
+per-request single-slot decode token-exactly under greedy sampling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import transformer
+from repro.serving.engine import Request, ServeEngine
+
+rng = np.random.default_rng(7)
+
+
+def _prompts(cfg, lens):
+    return [rng.integers(1, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+
+
+def _solo_tokens(cfg, params, prompt, max_new, max_len):
+    """Reference: the same request served alone in a single-slot engine."""
+    eng = ServeEngine(cfg, params, slots=1, max_len=max_len)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=max_new))
+    done = eng.run()
+    return done[0].out_tokens
+
+
+def _interleaved_engine_tokens(cfg, params, prompts, max_new, max_len):
+    """Batched engine with STAGGERED admission: r0 decodes alone first, then
+    r1..rN are admitted while r0 is mid-stream -- their prefill positions
+    (0..len-1) land on positions r0 has already filled, the exact clobber
+    window."""
+    eng = ServeEngine(cfg, params, slots=2, max_len=max_len)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=max_new))
+    for _ in range(3):          # r0 alone: cache rows 0..len0+2 are live
+        eng.step()
+    for uid, p in enumerate(prompts[1:], start=1):
+        eng.submit(Request(uid=uid, prompt=p, max_new_tokens=max_new))
+    done = eng.run()
+    assert sorted(done) == list(range(len(prompts)))
+    return {uid: done[uid].out_tokens for uid in done}
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "recurrentgemma-9b"])
+def test_interleaved_admission_matches_single_slot_decode(arch):
+    """Batched decode == per-request single-slot decode, token-exact greedy.
+
+    Covers both state kinds: dense (KV cache rows indexed by position --
+    the row-clobber trap) and hybrid (ring-buffer KV + RGLRU recurrent
+    state -- corrupted by EVERY off-group step before the mask).
+    """
+    cfg = reduced(get_config(arch))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(3))
+    max_new, max_len = 6, 64
+    prompts = _prompts(cfg, [7, 3, 4])
+    got = _interleaved_engine_tokens(cfg, params, prompts, max_new, max_len)
+    for uid, prompt in enumerate(prompts):
+        want = _solo_tokens(cfg, params, prompt, max_new, max_len)
+        assert got[uid] == want, (
+            f"{arch} req {uid}: batched {got[uid]} != solo {want} -- "
+            f"a batch-mate clobbered its cache/state")
+
+
+def test_grouped_decode_write_mask_protects_other_rows():
+    """Unit-level: serve_step with a write mask leaves masked-out rows'
+    cache bit-identical, while the raw (maskless) step overwrites them --
+    the failing-before shape of the bug."""
+    cfg = reduced(get_config("granite-3-2b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    b, max_len = 2, 16
+    cache = transformer.init_cache(cfg, b, max_len)
+    # row 0 writes real tokens at positions 0..2
+    for t in range(3):
+        tok = jnp.array([[5 + t], [0]], jnp.int32)
+        _, cache = transformer.serve_step(
+            params, cfg, cache, tok, jnp.int32(t),
+            write_mask=jnp.array([True, False]))
+    kv = cache["kv"]
+    row0 = np.asarray(kv.k[:, 0, :, :3])
+    assert np.abs(row0).sum() > 0          # row 0 really wrote its K/V
+    assert np.abs(np.asarray(kv.k[:, 1])).sum() == 0  # row 1 untouched
+    # now row 1 steps at position 0 (a position row 0 already filled)
+    tok = jnp.array([[0], [9]], jnp.int32)
+    _, masked = transformer.serve_step(
+        params, cfg, cache, tok, jnp.int32(0),
+        write_mask=jnp.array([False, True]))
+    np.testing.assert_array_equal(
+        np.asarray(masked["kv"].k[:, 0]), np.asarray(kv.k[:, 0]),
+        err_msg="masked step mutated a protected row")
+    assert np.abs(np.asarray(masked["kv"].k[:, 1, :, 0])).sum() > 0
+    # the RAW step (no mask) clobbers row 0's position-0 K/V: this is the
+    # pre-fix behavior the engine used to hit through grouped decode
+    _, raw = transformer.serve_step(params, cfg, cache, tok, jnp.int32(0))
+    assert np.abs(np.asarray(raw["kv"].k[:, 0, :, 0]) -
+                  np.asarray(kv.k[:, 0, :, 0])).sum() > 0

@@ -1,0 +1,139 @@
+"""Engine-level SLO behavior: typed expiry, truncated-run raising (ISSUE 7).
+
+The scheduler suite proves the queue mechanics with a stub forward; these
+run the REAL engines -- the CNN image engine with an injected fake clock,
+and the transformer decode engine -- to show the engine plumbing (clock
+injection, submit-time deadlines, ``run`` raising instead of silently
+dropping the pending tail) holds end-to-end.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.precision import MatmulPolicy
+from repro.models.cnn import cnn_init
+from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
+from repro.serving.scheduler import Expired, IncompleteRunError
+
+
+class _Clock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _cnn(clock=None, buckets=(1, 4)):
+    cfg = reduced(get_config("alexnet")).replace(
+        policy=MatmulPolicy.KOM_INT14, conv_path="im2col")
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    kw = {} if clock is None else {"clock": clock}
+    return cfg, CNNServeEngine(cfg, params, buckets=buckets, **kw)
+
+
+def _img(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(
+        (cfg.img_size, cfg.img_size, cfg.in_channels)).astype(np.float32)
+
+
+def test_cnn_engine_expires_overdue_requests_typed():
+    """A request whose deadline passes in the queue is rejected with a
+    typed ``Expired`` result -- never served late, never silently lost."""
+    clk = _Clock()
+    cfg, eng = _cnn(clock=clk)
+    eng.submit(ImageRequest(uid=0, image=_img(cfg), deadline=1.0))
+    eng.submit(ImageRequest(uid=1, image=_img(cfg, 1)))
+    clk.t = 2.0                       # deadline 1.0 is now in the past
+    done = eng.run()
+    assert sorted(done) == [1] and done[1].label is not None
+    assert list(eng.expired) == [0]
+    exp = eng.expired[0]
+    assert isinstance(exp, Expired)
+    assert exp.deadline == 1.0 and exp.expired_at >= 1.0
+    assert exp.request.uid == 0 and exp.request.logits is None
+    assert eng.stats()["requests_expired"] == 1
+
+
+def test_cnn_engine_slo_class_resolved_at_submit():
+    clk = _Clock(10.0)
+    cfg, eng = _cnn(clock=clk)
+    eng.submit(ImageRequest(uid=0, image=_img(cfg), slo="interactive"))
+    t = eng.batcher.queue.timing[0]
+    assert t.slo == "interactive" and t.deadline == pytest.approx(10.050)
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        eng.submit(ImageRequest(uid=1, image=_img(cfg), slo="platinum"))
+
+
+def test_cnn_engine_truncated_run_raises():
+    """Regression (ISSUE 7 satellite): CNNServeEngine.run used to return
+    the partial ``done`` ledger when max_steps cut the drain off."""
+    cfg, eng = _cnn(buckets=(1,))
+    for uid in range(3):
+        eng.submit(ImageRequest(uid=uid, image=_img(cfg, uid)))
+    with pytest.raises(IncompleteRunError, match="still pending") as ei:
+        eng.run(max_steps=1)
+    assert sorted(ei.value.done) == [0]
+    assert ei.value.pending_uids == [1, 2]
+    # the tail is still there: finishing the drain loses nothing
+    done = eng.run()
+    assert sorted(done) == [0, 1, 2]
+
+
+def test_cnn_engine_duplicate_uid_rejected():
+    cfg, eng = _cnn()
+    eng.submit(ImageRequest(uid=5, image=_img(cfg)))
+    with pytest.raises(ValueError, match="duplicate uid 5"):
+        eng.submit(ImageRequest(uid=5, image=_img(cfg, 1)))
+
+
+def test_lm_engine_truncated_run_raises():
+    """Same request-loss trap in the decode engine: in-flight slots and the
+    pending queue both count as stranded work."""
+    from repro.models import transformer
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = reduced(get_config("granite-3-2b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=1, max_len=32)
+    rng = np.random.default_rng(0)
+    for uid in range(2):
+        prompt = rng.integers(1, cfg.vocab_size, (3,)).astype(np.int32)
+        eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=4))
+    with pytest.raises(IncompleteRunError, match="still pending") as ei:
+        eng.run(max_steps=1)
+    # one slot mid-decode + one still queued: both reported, neither lost
+    assert set(ei.value.pending_uids) == {0, 1}
+    done = eng.run()
+    assert sorted(done) == [0, 1]
+    assert all(len(done[u].out_tokens) == 4 for u in done)
+
+
+def test_lm_engine_expiry_and_edf_admission():
+    """Deadline-ordered slot admission in the decode engine: the urgent
+    late submitter takes the free slot first; an already-overdue request
+    is rejected typed."""
+    from repro.models import transformer
+    from repro.serving.engine import Request, ServeEngine
+
+    clk = _Clock()
+    cfg = reduced(get_config("granite-3-2b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=1, max_len=32, clock=clk)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, (3,)).astype(np.int32)
+               for _ in range(3)]
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=2))
+    eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=2,
+                       deadline=1.0))
+    eng.submit(Request(uid=2, prompt=prompts[2], max_new_tokens=2,
+                       deadline=50.0))
+    clk.t = 2.0                      # uid 1's deadline passes in the queue
+    done = eng.run()
+    assert sorted(done) == [0, 2]
+    assert list(eng.expired) == [1]
+    # EDF: uid 2 (deadline 50) was admitted before deadline-less uid 0
+    t = eng.request_queue.timing
+    assert t[2].admitted <= t[0].admitted
