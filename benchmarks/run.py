@@ -1,9 +1,9 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-import sys
 
 
 def main() -> None:
-    from . import table_convnets, table_delay, table_matmul_resources, roofline
+    from . import table_convnets, table_delay, table_matmul_resources
+    from repro.analysis.roofline import dryrun_run
 
     def emit(name: str, us: float, derived: str = "") -> None:
         print(f"{name},{us:.2f},{derived}", flush=True)
@@ -12,7 +12,7 @@ def main() -> None:
     table_matmul_resources.run(emit)   # paper Tables 1-4
     table_delay.run(emit)              # paper Table 5
     table_convnets.run(emit)           # paper section I conv analysis
-    roofline.run(emit)                 # dry-run roofline per cell
+    dryrun_run(emit)                   # dry-run roofline per cell
 
 
 if __name__ == "__main__":

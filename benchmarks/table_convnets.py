@@ -29,6 +29,12 @@ fields from :func:`repro.analysis.roofline.conv_layer_roofline`.  The
 committed ``BENCH_convnets.json`` is the CI perf gate's baseline
 (``benchmarks/perf_gate.py``).
 
+ISSUE 8 additions: a ``plan`` serving row per model -- the
+:mod:`repro.core.planner` design-space explorer's joint per-layer
+(path x tile x fusion) choice served head-to-head against heuristic
+``auto`` dispatch, so the whole-network ExecutionPlan's effect lands in
+``BENCH_convnets.json`` as a measured images/sec number.
+
 ``--smoke`` (used by CI): reduced configs and single-step measurements only,
 so the whole serving/benchmark path executes in seconds and cannot rot.
 """
@@ -42,8 +48,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.planner import explore, heuristic_path
 from repro.core.precision import MatmulPolicy
-from repro.core.substrate import conv2d, quantize_weight, select_conv_path
+from repro.core.substrate import conv2d, quantize_weight
 from repro.core.tuning import conv_hbm_bytes
 from repro.kernels.conv2d.winograd import winograd_scale_eligible
 from repro.models.cnn import ALEXNET, VGG16, VGG19, cnn_init, cnn_reduced
@@ -183,9 +190,9 @@ def run(emit, smoke: bool = False, record=lambda *a, **k: None):
             # fold schedule, 1 group for every layer under the int31 bound).
             # Path = what TPU dispatch picks for this layer shape on the
             # cached-weight serving path (DESIGN.md sections 7.1/7.4).
-            path = select_conv_path(kh=k, kw=k, stride=stride, cin=cin,
-                                    cout=cout, on_tpu=True,
-                                    policy="kom_int14", cached_weight=True)
+            path = heuristic_path(kh=k, kw=k, stride=stride, cin=cin,
+                                  cout=cout, on_tpu=True,
+                                  policy="kom_int14", cached_weight=True)
             was = k * k if path == "systolic" else 1
             emit(f"convnets/{cfg.name}/recombines/conv{li}", 0.0,
                  f"k={k} cin={cin} path={path} taps={k * k} "
@@ -257,15 +264,25 @@ def run(emit, smoke: bool = False, record=lambda *a, **k: None):
         small = cnn_reduced(cfg).replace(policy=MatmulPolicy.KOM_INT14)
         params = cnn_init(small, jax.random.PRNGKey(0))
         serve_trials = 2 if smoke else 3
-        for path in ("auto", "im2col", "systolic", "implicit", "winograd"):
+        # The design-space explorer's joint per-layer plan for THIS config
+        # (cost-model scored: deterministic, no warmup execution) -- served
+        # head-to-head against heuristic auto so the plan's win (or tie) is
+        # measured, not asserted (ISSUE 8).
+        explored = explore(small, model_only=True)
+        for path in ("auto", "plan", "im2col", "systolic", "implicit",
+                     "winograd"):
             # "auto" is what users get: per-layer selection (thin stem on
             # the small patch GEMM, deep layers streamed -- DESIGN.md 7.4).
             # single bucket the image stream actually hits: warming an
             # unused bucket would cost a whole interpret-mode Pallas
             # compile, and a second bucket shape would make throughput a
             # function of how the stream packs instead of the conv engine.
-            eng = CNNServeEngine(small.replace(conv_path=path), params,
-                                 buckets=(4,))
+            if path == "plan":
+                eng = CNNServeEngine(small, params, buckets=(4,),
+                                     plan=explored)
+            else:
+                eng = CNNServeEngine(small.replace(conv_path=path), params,
+                                     buckets=(4,))
             eng.warmup()
             h, c = small.img_size, small.in_channels
             imgs = [rng.standard_normal((h, h, c)).astype(np.float32)

@@ -181,6 +181,39 @@ def conv_layer_roofline(path: str, *, kh, kw, stride, h, cin, cout,
             "roofline_s": max(compute_s, memory_s), **counts}
 
 
+def annotate_plan(plan, *, n: int = 1):
+    """Stamp achieved-vs-roofline onto every entry of an ExecutionPlan.
+
+    Recomputes each entry's v5e roofline floor (:func:`conv_layer_roofline`
+    for its geometry/engine/limb variant) and, where the entry carries a
+    measured ``est_us``, the ``roofline_frac = roofline_us / est_us``
+    fraction -- how close the planned engine runs to its modeled floor.
+    Returns a new plan; entries scored by the cost model itself
+    (``source != "measured"``) get ``roofline_us`` only (a model-vs-model
+    fraction would read as an achievement and always be ~1).
+    """
+    import dataclasses as _dc
+
+    from repro.core.planner import parse_geometry_key
+    from repro.core.substrate import INT_POLICY_SPECS
+
+    variant, base_bits = INT_POLICY_SPECS.get(plan.policy, ("native", 7))
+    entries = []
+    for e in plan.entries:
+        g = parse_geometry_key(e.key)
+        r = conv_layer_roofline(
+            e.path, kh=g["kh"], kw=g["kw"], stride=g["stride"], h=g["h"],
+            cin=g["cin"], cout=g["cout"], variant=variant,
+            base_bits=base_bits, n=n)
+        roof_us = 1e6 * r["roofline_s"]
+        frac = (roof_us / e.est_us
+                if e.source == "measured" and e.est_us else None)
+        entries.append(_dc.replace(
+            e, roofline_us=round(roof_us, 3),
+            roofline_frac=round(frac, 6) if frac is not None else None))
+    return _dc.replace(plan, entries=tuple(entries))
+
+
 def roofline_from_stats(stats, n_chips: int, mflops: float) -> Roofline:
     f8 = getattr(stats, "flops_int8", 0.0)
     f32 = getattr(stats, "flops_f32", 0.0)
@@ -196,3 +229,92 @@ def roofline_from_stats(stats, n_chips: int, mflops: float) -> Roofline:
         n_chips=n_chips,
         memory_kernel_s=(stats.bytes - stats.score_bytes) / V5E["hbm_bw"],
     )
+
+
+# ---------------------------------------------------------------------------
+# Dry-run roofline table (results/dryrun/*.json -> benchmark rows/markdown).
+# The ONE home of this renderer -- the old benchmarks/roofline.py duplicate
+# is retired (single-definition grep contract, like the limb split).
+# ---------------------------------------------------------------------------
+
+def _dryrun_results_dir():
+    import pathlib
+    return (pathlib.Path(__file__).resolve().parents[3] / "results"
+            / "dryrun")
+
+
+def dryrun_cells(mesh: str | None = None, tag: str = ""):
+    """Parsed dry-run artifacts, one record per (arch x shape x mesh)."""
+    import json
+    for p in sorted(_dryrun_results_dir().glob("*.json")):
+        rec = json.loads(p.read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("tag", "") != tag:
+            continue
+        yield rec
+
+
+def dryrun_run(emit):
+    """Emit one benchmark row per dry-run cell (benchmarks/run.py hook)."""
+    if not _dryrun_results_dir().exists():
+        emit("roofline/missing", 0.0, "run python -m repro.launch.dryrun first")
+        return
+    for rec in dryrun_cells():
+        key = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("skipped"):
+            emit(key, 0.0, f"SKIP: {rec['skipped']}")
+            continue
+        if not rec.get("ok"):
+            emit(key, 0.0, f"FAIL: {rec.get('error', '?')[:80]}")
+            continue
+        r = rec["roofline"]
+        emit(
+            key,
+            r["step_time_s"] * 1e6,
+            f"dom={r['dominant']} compute_s={r['compute_s']:.3f} "
+            f"memory_s={r['memory_s']:.3f} collective_s={r['collective_s']:.3f} "
+            f"mfu={r['mfu_est']:.4f} useful={r['useful_flops_ratio']:.3f} "
+            f"live_gb={rec['bytes_per_device']['live_gb']}",
+        )
+
+
+def dryrun_markdown(mesh: str = "16x16", tag: str = "") -> str:
+    """The EXPERIMENTS.md roofline table for one mesh."""
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "MODEL_FLOPS | useful ratio | MFU est | MFU (kernel) | live GB | "
+        "fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in dryrun_cells(mesh, tag):
+        if rec.get("skipped"):
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | — | — | — | skipped "
+                f"({rec['skipped'][:40]}…) | — | — | — | — | — | — |"
+            )
+            continue
+        if not rec.get("ok"):
+            rows.append(f"| {rec['arch']} | {rec['shape']} | FAIL: "
+                        f"{rec.get('error','?')[:60]} ||||||||||")
+            continue
+        r = rec["roofline"]
+        b = rec["bytes_per_device"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['mfu_est']:.4f} | {r.get('mfu_kernel_est', 0):.4f} | "
+            f"{b['live_gb']} | {'yes' if b['fits_16gb'] else 'NO'} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--markdown" in sys.argv:
+        i = sys.argv.index("--markdown")
+        print(dryrun_markdown(sys.argv[i + 1] if len(sys.argv) > i + 1
+                              else "16x16"))
+    else:
+        dryrun_run(lambda k, us, d: print(f"{k},{us:.1f},{d}"))

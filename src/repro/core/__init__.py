@@ -14,6 +14,7 @@ from .substrate import (
     limb_partials,
     limb_recombine,
     pass_count,
+    path_supports_policy,
     policy_int_spec,
     prequant_dot_general,
     quantize_symmetric,
@@ -21,6 +22,7 @@ from .substrate import (
     recursion_pass_count,
     select_conv_path,
     split_limbs,
+    validate_path_policy,
 )
 from .karatsuba import (
     bf16x3_matmul,

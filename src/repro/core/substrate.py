@@ -79,6 +79,50 @@ def implicit_supported(policy) -> bool:
     return getattr(policy, "value", policy) in IMPLICIT_POLICIES
 
 
+def path_supports_policy(path: str, policy) -> bool:
+    """True iff conv engine ``path`` runs ``policy`` exactly (no downgrade).
+
+    THE path x policy capability table -- :func:`validate_path_policy`
+    (and through it ``conv2d``'s explicit-path refusals, the serve
+    launcher's arg-parse-time guards, and the planner's candidate pruning
+    and artifact checks) all consult this one definition.
+    """
+    if path in ("auto", "im2col"):
+        return True
+    if path == "systolic":
+        return systolic_exact(policy)
+    if path == "implicit":
+        return implicit_supported(policy)
+    if path == "winograd":
+        return policy_int_spec(policy) is not None
+    raise ValueError(f"unknown conv path: {path!r}")
+
+
+def validate_path_policy(path: str, policy) -> None:
+    """Raise ValueError when an EXPLICIT ``path`` cannot run ``policy`` exactly.
+
+    One shared refusal for ``conv2d``, ``launch/serve.py`` (which used to
+    copy-paste this guard once per engine) and the planner: an explicit
+    engine choice must never silently downgrade a policy to native dots --
+    use ``path='auto'`` or ``path='im2col'`` (which honors every policy).
+    """
+    if path_supports_policy(path, policy):
+        return
+    pv = getattr(policy, "value", policy)
+    implements = {
+        "systolic": "the integer limb policies and fp32 only",
+        "implicit": "the integer limb policies, fp32 and the bf16x3/bf16x6 "
+                    "emulation schedules only",
+        "winograd": "the integer limb policies only (the transforms live "
+                    "in the quantized-limb domain)",
+    }[path]
+    raise ValueError(
+        f"path={path!r} cannot run policy {pv!r} exactly: the {path} "
+        f"engine implements {implements}, and an explicit path must not "
+        "silently downgrade to native dots -- use path='auto' or "
+        "path='im2col'")
+
+
 # ---------------------------------------------------------------------------
 # Limb decomposition: the one implementation of the balanced digit split.
 # ---------------------------------------------------------------------------
@@ -456,22 +500,6 @@ def conv_pads(h, w, kh, kw, stride, padding):
     return ho, wo, pads
 
 
-def _stem_cin_threshold(stem_cin: int | None) -> int:
-    """The thin-stem routing threshold: tuner-cached per backend, default 16.
-
-    ``select_conv_path`` callers may pass an explicit ``stem_cin``; otherwise
-    the persistent tuner cache is consulted (key ``dispatch|stem_cin|<backend>``
-    -- per-backend measurement, not a constant, decides stem routing).
-    """
-    if stem_cin is not None:
-        return stem_cin
-    try:
-        from .tuning import stem_cin as tuned_stem_cin
-        return tuned_stem_cin()
-    except Exception:
-        return 16
-
-
 def select_conv_path(
     *, kh: int, kw: int, stride: int, cin: int, cout: int,
     on_tpu: bool | None = None, policy=None, cached_weight: bool = False,
@@ -511,14 +539,16 @@ def select_conv_path(
     F(2x2, 3x3) cuts the pointwise multiplies ~2.25x exactly where the limb
     substrate already pays 3-4 passes per multiply (DESIGN.md section 7.5).
 
-    The ``cin >= 16`` thin-stem threshold is tuner-cached per backend
-    (``stem_cin``); pass ``stem_cin=`` to override, default 16.
+    The ``cin >= 16`` thin-stem threshold defaults to 16; the tuner-cached
+    per-backend consult lives in :func:`repro.core.planner.heuristic_path`
+    (the repo's ONE call site of this function), which passes ``stem_cin=``
+    explicitly -- this function is a pure shape/policy rule with no IO.
 
     ``policy=None`` keeps the legacy shape-only rules (im2col/systolic).
     """
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
-    stem = _stem_cin_threshold(stem_cin)
+    stem = 16 if stem_cin is None else stem_cin
     systolic_shape = (max(kh, kw) <= 7 and stride <= 2 and cin >= stem
                       and cout % 128 == 0)
     if policy is not None:
@@ -556,6 +586,7 @@ def conv2d(
     padding: str = "SAME",
     policy="native_bf16",
     path: str = "auto",
+    block: tuple | None = None,
     bias: jax.Array | None = None,
     activation: Optional[str] = None,
     interpret: bool | None = None,
@@ -563,73 +594,65 @@ def conv2d(
     """NHWC conv behind one policy-driven entry point, epilogue fused.
 
     ``w`` is an HWIO float array or a cached :class:`QWeight`.  ``path`` is
-    ``"auto"`` (shape- and policy-driven, :func:`select_conv_path`),
-    ``"im2col"``, ``"systolic"`` or ``"implicit"``.  ``bias`` (cout,) and
-    ``activation`` ("relu") are fused into the conv epilogue on every path
-    -- together with the dequant scale under integer policies, a conv layer
-    is ONE call and one HBM write instead of three round-trips (DESIGN.md
-    section 7.3).
+    ``"auto"`` (resolved through the planner's fallback scorer,
+    :func:`repro.core.planner.heuristic_path` -- model forwards resolve a
+    whole-network :class:`~repro.core.planner.ExecutionPlan` ONCE at build
+    and pass each layer's planned path/block here instead), ``"im2col"``,
+    ``"systolic"``, ``"implicit"`` or ``"winograd"``.  ``block`` is the
+    chosen engine's tile schedule (``(bh, bc)`` systolic, ``(bm, bc, bk)``
+    implicit, ``(bt, bc)`` winograd; ignored by im2col, which has no tile
+    knob) -- ``None`` keeps the per-layer tuner-cache resolution inside the
+    ops wrappers.  ``bias`` (cout,) and ``activation`` ("relu") are fused
+    into the conv epilogue on every path -- together with the dequant scale
+    under integer policies, a conv layer is ONE call and one HBM write
+    instead of three round-trips (DESIGN.md section 7.3).
 
     Integer policies run every contraction on the limb substrate.  The
     systolic engine implements exactly the integer policies and fp32; the
     implicit-GEMM engine additionally runs bf16x3/bf16x6 (streamed patches,
     per-K-block recombine schedule, no HBM patch matrix -- DESIGN.md
     section 7.4).  ``"auto"`` keeps native_bf16 on im2col, and an EXPLICIT
-    ``path="systolic"``/``path="implicit"`` with an unimplemented policy
-    raises rather than silently downgrading to native dots.
+    engine choice with an unimplemented policy raises through
+    :func:`validate_path_policy` rather than silently downgrading to
+    native dots.
     """
-    # Lazy imports: systolic/kernels import this module for the limb core.
+    # Lazy imports: systolic/kernels import this module for the limb core,
+    # and the planner imports this module for the dispatch primitives.
     from .systolic import conv2d_im2col
     from repro.kernels.conv2d import (
         conv2d_implicit, conv2d_systolic, conv2d_winograd)
 
     kh, kw, cin, cout = w.shape
     if path == "auto":
-        path = select_conv_path(kh=kh, kw=kw, stride=stride, cin=cin,
-                                cout=cout, policy=policy, padding=padding,
-                                cached_weight=isinstance(w, QWeight))
+        from .planner import heuristic_path
+        path = heuristic_path(kh=kh, kw=kw, stride=stride, cin=cin,
+                              cout=cout, policy=policy, padding=padding,
+                              cached_weight=isinstance(w, QWeight))
         # Defense in depth: even if the selector is overridden/buggy, auto
         # must never downgrade a policy to an engine that cannot run it
         # exactly -- reroute to im2col, which honors every policy.
-        if path == "systolic" and not systolic_exact(policy):
-            path = "im2col"
-        if path == "implicit" and not implicit_supported(policy):
-            path = "im2col"
-        if path == "winograd" and policy_int_spec(policy) is None:
+        if not path_supports_policy(path, policy):
             path = "im2col"
     if path == "im2col":
         return conv2d_im2col(x, w, stride=stride, padding=padding,
                              policy=policy, bias=bias, activation=activation)
+    validate_path_policy(path, policy)
+    spec = policy_int_spec(policy)
     if path == "systolic":
-        if not systolic_exact(policy):
-            raise ValueError(
-                f"path='systolic' cannot run policy "
-                f"{getattr(policy, 'value', policy)!r} exactly: the systolic "
-                "engine implements the integer limb policies and fp32 only, "
-                "and multi-pass bf16 emulation must not silently become "
-                "native f32 dots -- use path='auto' or path='im2col'")
-        spec = policy_int_spec(policy)
         if spec is None:
             variant, base_bits = "native", 7
             if isinstance(w, QWeight):
                 w = dequantize_weight(w)
         else:
             variant, base_bits = spec
+        bh, bc = block if block is not None else (None, None)
         return conv2d_systolic(
             x, w, stride=stride, padding=padding,
+            block_h=bh, block_c=bc,
             variant=variant, base_bits=base_bits,
             bias=bias, activation=activation, interpret=interpret,
         )
     if path == "implicit":
-        if not implicit_supported(policy):
-            raise ValueError(
-                f"path='implicit' cannot run policy "
-                f"{getattr(policy, 'value', policy)!r} exactly: the implicit "
-                "GEMM engine implements the integer limb policies, fp32 and "
-                "the bf16x3/bf16x6 emulation schedules -- native_bf16 must "
-                "not silently become native f32 dots; use path='auto' or "
-                "path='im2col'")
-        spec = policy_int_spec(policy)
         if spec is None:
             pv = getattr(policy, "value", policy)
             variant = "native" if pv == "fp32" else pv
@@ -637,22 +660,14 @@ def conv2d(
         else:
             variant, base_bits = spec
         return conv2d_implicit(
-            x, w, stride=stride, padding=padding,
+            x, w, stride=stride, padding=padding, block=block,
             variant=variant, base_bits=base_bits,
             bias=bias, activation=activation, interpret=interpret,
         )
     if path == "winograd":
-        spec = policy_int_spec(policy)
-        if spec is None:
-            raise ValueError(
-                f"path='winograd' cannot run policy "
-                f"{getattr(policy, 'value', policy)!r}: the Winograd engine "
-                "runs the integer limb policies only (the transforms live in "
-                "the quantized-limb domain) -- use path='auto' or "
-                "path='im2col'")
         variant, base_bits = spec
         return conv2d_winograd(
-            x, w, stride=stride, padding=padding,
+            x, w, stride=stride, padding=padding, block=block,
             variant=variant, base_bits=base_bits,
             bias=bias, activation=activation, interpret=interpret,
         )

@@ -548,28 +548,20 @@ def tune_layer(kind: str, *, kh, kw, stride, h, cin, cout, variant,
 
 
 def conv_layer_shapes(cfg) -> list[dict]:
-    """Unique conv layer geometries of a CNNConfig (the tuning work list)."""
+    """Unique conv layer geometries of a CNNConfig (the tuning work list).
+
+    Thin dedup over :func:`repro.models.cnn.cnn_conv_geometries` -- the one
+    walker of a config's conv spine -- dropping the padding field (tile
+    feasibility and timing depend on the geometry, not the pad plan).
+    """
+    from repro.models.cnn import cnn_conv_geometries
+
     shapes, seen = [], set()
-    hgt, cin = cfg.img_size, cfg.in_channels
-    first = True
-    for spec in cfg.layers:
-        if spec[0] == "conv":
-            _, k, cout, stride = spec
-            if cfg.name == "alexnet" and first:
-                oh = (hgt - k) // stride + 1
-            else:
-                oh = -(-hgt // stride)
-            first = False
-            key = (k, stride, hgt, cin, cout)
-            if key not in seen:
-                seen.add(key)
-                shapes.append(dict(kh=k, kw=k, stride=stride, h=hgt, cin=cin,
-                                   cout=cout))
-            hgt, cin = oh, cout
-        elif spec[0] == "pool":
-            hgt = hgt // 2
-        else:
-            break
+    for g in cnn_conv_geometries(cfg):
+        key = (g["kh"], g["stride"], g["h"], g["cin"], g["cout"])
+        if key not in seen:
+            seen.add(key)
+            shapes.append({k: v for k, v in g.items() if k != "padding"})
     return shapes
 
 
@@ -645,7 +637,7 @@ def check(models: Iterable[str] = ("alexnet", "vgg16", "vgg19"),
     from repro.configs import get_config
     from repro.kernels.conv2d.implicit_gemm import recombine_schedule
 
-    from repro.core.substrate import select_conv_path
+    from repro.core.planner import heuristic_path
 
     errors = []
     for name in models:
@@ -657,11 +649,11 @@ def check(models: Iterable[str] = ("alexnet", "vgg16", "vgg19"),
                 # depth reroutes may land any layer on it); systolic and
                 # winograd only where TPU dispatch actually routes the layer.
                 kinds = ["implicit"]
-                sel = select_conv_path(kh=layer["kh"], kw=layer["kw"],
-                                       stride=layer["stride"],
-                                       cin=layer["cin"], cout=layer["cout"],
-                                       on_tpu=True, policy=policy,
-                                       cached_weight=True)
+                sel = heuristic_path(kh=layer["kh"], kw=layer["kw"],
+                                     stride=layer["stride"],
+                                     cin=layer["cin"], cout=layer["cout"],
+                                     on_tpu=True, policy=policy,
+                                     cached_weight=True)
                 if sel in ("systolic", "winograd"):
                     kinds.append(sel)
                 for kind in kinds:

@@ -62,13 +62,43 @@ def _request_slo_kwargs(args) -> dict:
     return kw
 
 
+def _cnn_plan(cfg, args):
+    """The ExecutionPlan the CLI asked for, or None (engine's own chain).
+
+    ``--explore`` runs the design-space explorer for THIS config on THIS
+    backend at launch (``--model-only`` scores by the roofline cost model
+    instead of wall time); ``--plan PATH`` serves a previously committed
+    artifact.  Either way the engine pins every conv layer's engine + tile
+    schedule at build.
+    """
+    if getattr(args, "explore", False):
+        from repro.core.planner import explore
+        plan = explore(cfg, model_only=getattr(args, "model_only", False))
+        for e in plan.entries:
+            print(f"[serve] plan {e.key}: {e.path} block="
+                  f"{list(e.block) if e.block else '-'} est_us={e.est_us} "
+                  f"({e.source})")
+        return plan
+    if getattr(args, "plan", None):
+        from repro.core.planner import load_plans, plan_key
+        plans = load_plans(args.plan)
+        key = plan_key(cfg.name, cfg.policy)
+        if key not in plans:
+            raise SystemExit(
+                f"--plan {args.plan}: no plan for {key!r} "
+                f"(has {sorted(plans)})")
+        return plans[key]
+    return None
+
+
 def _serve_cnn(cfg, args) -> int:
     from repro.models.cnn import cnn_init
     from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
 
     params = cnn_init(cfg, jax.random.PRNGKey(args.seed))
     buckets = tuple(int(b) for b in args.buckets.split(","))
-    engine = CNNServeEngine(cfg, params, buckets=buckets)
+    engine = CNNServeEngine(cfg, params, buckets=buckets,
+                            plan=_cnn_plan(cfg, args))
     engine.warmup()  # compile every bucket shape: serving is all cache hits
     rng = np.random.default_rng(args.seed)
     h, c = cfg.img_size, cfg.in_channels
@@ -105,7 +135,8 @@ def _build_engine(cfg, args):
 
         params = cnn_init(cfg, jax.random.PRNGKey(args.seed))
         buckets = tuple(int(b) for b in args.buckets.split(","))
-        eng = CNNServeEngine(cfg, params, buckets=buckets)
+        eng = CNNServeEngine(cfg, params, buckets=buckets,
+                             plan=_cnn_plan(cfg, args))
         eng.warmup()
         return eng
     from repro.models import transformer
@@ -171,6 +202,16 @@ def main(argv=None):
     ap.add_argument("--conv-path", default=None,
                     help="CNN conv dispatch: auto | im2col | systolic | "
                          "implicit | winograd")
+    ap.add_argument("--plan", default=None,
+                    help="serve a committed ExecutionPlan artifact "
+                         "(benchmarks/tuned/plans/<backend>.json); pins "
+                         "every conv layer's engine + tile schedule")
+    ap.add_argument("--explore", action="store_true",
+                    help="run the per-layer design-space explorer for this "
+                         "config at launch and serve the resulting plan")
+    ap.add_argument("--model-only", action="store_true",
+                    help="with --explore: score by the roofline cost model "
+                         "instead of measuring (no warmup execution)")
     ap.add_argument("--policy", default=None)
     ap.add_argument("--slo", default=None,
                     help="SLO class per request: interactive | standard | "
@@ -199,34 +240,17 @@ def main(argv=None):
     if cfg.family == "cnn":
         if args.conv_path:
             cfg = cfg.replace(conv_path=args.conv_path)
-        if cfg.conv_path == "systolic":
-            # Fail at arg-parse time, not mid-warmup: the systolic engine
-            # only runs the integer limb policies and fp32 exactly
-            # (substrate.conv2d raises the same refusal, DESIGN.md 7.1).
-            from repro.core.substrate import systolic_exact
-            if not systolic_exact(cfg.policy):
-                ap.error(
-                    f"--conv-path systolic cannot run policy "
-                    f"{cfg.policy.value!r} exactly; pass --policy "
-                    "kom_int14 | schoolbook_int16 | fp32")
-        if cfg.conv_path == "winograd":
-            # The integer winograd engine transforms in the limb domain;
-            # float policies have no exact tile contraction (DESIGN.md 7.5).
-            from repro.core.substrate import policy_int_spec
-            if policy_int_spec(cfg.policy) is None:
-                ap.error(
-                    f"--conv-path winograd cannot run policy "
-                    f"{cfg.policy.value!r} exactly; pass --policy "
-                    "kom_int14 | schoolbook_int16")
-        if cfg.conv_path == "implicit":
-            # Same refusal for the implicit engine (it adds bf16x3/bf16x6;
-            # only native_bf16 is unimplemented -- DESIGN.md 7.4).
-            from repro.core.substrate import implicit_supported
-            if not implicit_supported(cfg.policy):
-                ap.error(
-                    f"--conv-path implicit cannot run policy "
-                    f"{cfg.policy.value!r} exactly; pass --policy "
-                    "kom_int14 | schoolbook_int16 | fp32 | bf16x3 | bf16x6")
+        if cfg.conv_path != "auto" and (args.plan or args.explore):
+            ap.error(f"--conv-path {cfg.conv_path} pins ONE engine for every "
+                     "layer; --plan/--explore choose per layer -- drop one")
+        # Fail at arg-parse time, not mid-warmup: an explicit engine choice
+        # with a policy it cannot run exactly is the same refusal
+        # substrate.conv2d raises (ONE definition, DESIGN.md 7.1).
+        from repro.core.substrate import validate_path_policy
+        try:
+            validate_path_policy(cfg.conv_path, cfg.policy)
+        except ValueError as e:
+            ap.error(f"--conv-path {e}")
         return _serve_cnn(cfg, args)
     return _serve_lm(cfg, args)
 

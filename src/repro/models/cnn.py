@@ -98,6 +98,37 @@ def cnn_reduced(cfg: CNNConfig, *, img_size: int | None = None,
                        n_classes=n_classes)
 
 
+def cnn_conv_geometries(cfg: CNNConfig) -> List[dict]:
+    """Every conv layer's geometry, in layer order (the planner's work list).
+
+    One dict per conv layer: ``{kh, kw, stride, h, cin, cout, padding}`` --
+    the exact shape tuple :func:`cnn_forward` will call ``conv2d`` with,
+    including AlexNet's VALID first layer.  This is THE walker of a
+    ``CNNConfig``'s conv spine; the tuner (``conv_layer_shapes``), the
+    planner (:mod:`repro.core.planner`) and the benchmark tables all derive
+    their layer lists from it instead of re-implementing the h/cin
+    evolution.
+    """
+    out: List[dict] = []
+    h, cin = cfg.img_size, cfg.in_channels
+    first = True
+    for spec in cfg.layers:
+        if spec[0] == "conv":
+            _, k, cout, stride = spec
+            padding = "VALID" if (cfg.name == "alexnet" and first) else "SAME"
+            oh = ((h - k) // stride + 1) if padding == "VALID" \
+                else -(-h // stride)
+            first = False
+            out.append(dict(kh=k, kw=k, stride=stride, h=h, cin=cin,
+                            cout=cout, padding=padding))
+            h, cin = oh, cout
+        elif spec[0] == "pool":
+            h = h // 2
+        else:
+            break
+    return out
+
+
 def cnn_init(cfg: CNNConfig, key, dtype=jnp.float32):
     params = []
     cin = cfg.in_channels
@@ -158,12 +189,28 @@ def cnn_quantize_params(params, cfg: CNNConfig):
     return out
 
 
-def cnn_forward(params, cfg: CNNConfig, x):
+def cnn_forward(params, cfg: CNNConfig, x, plan=None):
     """x: (n, H, W, C) image batch -> (n, n_classes) logits.
 
     ``params`` may hold float weights or cached QWeight leaves (from
     :func:`cnn_quantize_params`); both route through the same substrate.
+
+    ``plan``: an :class:`~repro.core.planner.ExecutionPlan` fixing each
+    conv layer's engine + tile schedule.  ``None`` with
+    ``cfg.conv_path == "auto"`` resolves the chain ONCE here (committed
+    artifact for this (model, policy, backend), else the heuristic plan
+    that reproduces per-call auto dispatch exactly); an explicit
+    ``cfg.conv_path`` overrides any plan.  Plan entries apply only to
+    layers actually on the cached-weight serving path -- float weights
+    under an integer policy keep the trainable im2col STE dispatch --
+    and layers the plan does not cover (e.g. a reduced twin's shrunken
+    geometries against a full-size artifact) fall back to auto.
     """
+    use_plan = cfg.conv_path == "auto"
+    if use_plan and plan is None:
+        from repro.core.planner import resolve_plan
+        plan = resolve_plan(cfg)
+    int_policy = policy_int_spec(cfg.policy) is not None
     first_conv = True
     for i, spec in enumerate(cfg.layers):
         p = params[i]
@@ -171,11 +218,18 @@ def cnn_forward(params, cfg: CNNConfig, x):
             _, k, cout, stride = spec
             padding = "VALID" if (cfg.name == "alexnet" and first_conv) else "SAME"
             first_conv = False
+            path, block = cfg.conv_path, None
+            if use_plan and plan is not None \
+                    and (not int_policy or isinstance(p["w"], QWeight)):
+                ent = plan.lookup(kh=k, kw=k, stride=stride, h=x.shape[1],
+                                  cin=x.shape[3], cout=cout, padding=padding)
+                if ent is not None:
+                    path, block = ent.path, ent.block
             # One fused call per conv layer: bias add + ReLU (and the dequant
             # scale under integer policies) ride the conv epilogue instead of
             # three HBM round-trips (DESIGN.md section 7.3).
             x = conv2d(x, p["w"], stride=stride, padding=padding,
-                       policy=cfg.policy, path=cfg.conv_path,
+                       policy=cfg.policy, path=path, block=block,
                        bias=p["b"], activation="relu")
         elif spec[0] == "pool":
             x = pool2d(x, window=2, stride=2, kind="max")

@@ -35,11 +35,15 @@ discipline on the KOM substrate:
     is sharded over its data axes via ``shard_map`` (params replicated);
     buckets are rounded up to multiples of the data-parallel degree so
     every shard sees a full slice.  Unpadding/gather stays on host.
-  * **Tuned conv tiles** -- the jitted forward's conv layers resolve their
-    Pallas tile schedules (the implicit-GEMM ``(bm, bc, bk)`` and systolic
-    ``block_h``/``block_c``) through :mod:`repro.core.tuning` at trace
-    time; ``tune=True`` runs the measured sweep for this config's layer
-    shapes at engine build and persists the argmin (DESIGN.md section 7.4).
+  * **Planned conv dispatch** -- the engine resolves a whole-network
+    :class:`~repro.core.planner.ExecutionPlan` ONCE at build (explicit
+    ``plan=`` > committed ``benchmarks/tuned/plans/<backend>.json``
+    artifact > heuristic fallback identical to per-call auto dispatch) and
+    the jitted forward serves each conv layer on its planned engine + tile
+    schedule; layers the plan leaves to the tuner still resolve their
+    Pallas tiles through :mod:`repro.core.tuning` at trace time, and
+    ``tune=True`` runs the measured sweep for this config's layer shapes
+    at engine build and persists the argmin (DESIGN.md sections 7.4/7.6).
   * **Accounting** -- per-request latency stamps from the queue plus
     per-step bucket occupancy roll up into :meth:`stats` (images/sec, p95
     latency, padding overhead), the serving analogue of
@@ -85,7 +89,8 @@ class CNNServeEngine:
     def __init__(self, cfg: CNNConfig, params, *,
                  buckets: Sequence[int] = (1, 4, 16, 64),
                  mesh=None, prequantize: bool | None = None,
-                 tune: bool = False, slo_budgets: Optional[dict] = None,
+                 tune: bool = False, plan=None,
+                 slo_budgets: Optional[dict] = None,
                  clock=None):
         self.cfg = cfg
         if tune:
@@ -105,6 +110,20 @@ class CNNServeEngine:
         if prequantize and spec is not None:
             params = cnn_quantize_params(params, cfg)
         self.params = params
+        # The whole-network ExecutionPlan, resolved ONCE at engine build
+        # (explicit `plan` > committed benchmarks/tuned/plans/<backend>.json
+        # artifact > the heuristic fallback that reproduces per-call auto
+        # dispatch exactly); the jitted forward closes over it so every
+        # conv layer's engine + tile schedule is fixed at trace time.  An
+        # explicit cfg.conv_path overrides any plan (engine A/B lanes).
+        self.plan = None
+        if cfg.conv_path == "auto":
+            from repro.core.planner import resolve_plan
+            self.plan = resolve_plan(cfg, plan)
+        elif plan is not None:
+            raise ValueError(
+                f"explicit conv_path={cfg.conv_path!r} and an ExecutionPlan "
+                "are mutually exclusive -- drop one")
         self.mesh = mesh
         self._dp_axes: tuple = ()
         dp = 1
@@ -122,10 +141,10 @@ class CNNServeEngine:
         self._forward = jax.jit(self._make_forward())
 
     def _make_forward(self):
-        cfg = self.cfg
+        cfg, plan = self.cfg, self.plan
 
         def fwd(params, x):
-            return cnn_forward(params, cfg, x)
+            return cnn_forward(params, cfg, x, plan=plan)
 
         if self.mesh is None:
             return fwd

@@ -240,9 +240,11 @@ def test_winograd_reroutes_past_growth_bound_bitwise():
 def test_auto_never_downgrades_multipass_policies(monkeypatch):
     """auto may only pick systolic for policies that engine runs exactly
     (int policies, fp32); bf16x3 etc. must not silently become native dots."""
+    import repro.core.planner as planner
     import repro.core.substrate as substrate
-    # Pretend the shape heuristics chose systolic (as on TPU).
-    monkeypatch.setattr(substrate, "select_conv_path",
+    # Pretend the planner's fallback scorer chose systolic (as on TPU);
+    # conv2d resolves auto through planner.heuristic_path at call time.
+    monkeypatch.setattr(planner, "heuristic_path",
                         lambda **kw: "systolic")
     x, w = _case(3)
     ref = conv2d_ref(x, w)

@@ -240,7 +240,10 @@ def test_winograd_vmem_model_and_candidates():
 def test_stem_cin_threshold_schema(tmp_path, monkeypatch):
     """The thin-stem dispatch threshold lives in the tuner cache (ISSUE 6
     satellite): default preserved with no entry, per-backend override read
-    by select_conv_path, malformed entries ignored."""
+    by the planner's heuristic_path (the ONE select_conv_path call site --
+    select_conv_path itself is a pure shape rule with no cache IO),
+    malformed entries ignored."""
+    from repro.core.planner import heuristic_path
     from repro.core.substrate import select_conv_path
     monkeypatch.setenv(tuning.CACHE_ENV, str(tmp_path))
     tuning._load_cache.cache_clear()
@@ -248,15 +251,17 @@ def test_stem_cin_threshold_schema(tmp_path, monkeypatch):
     assert tuning.stem_cin() == tuning.DEFAULT_STEM_CIN == 16
     thin = dict(kh=3, kw=3, stride=1, cin=8, cout=128, on_tpu=True,
                 policy="kom_int14", cached_weight=True)
-    assert select_conv_path(**thin) == "im2col"
+    assert heuristic_path(**thin) == "im2col"
     # a measured override re-routes dispatch without code changes
     cache = TuneCache(tmp_path / tuning.DEFAULT_CACHE_NAME)
     cache.put_stem(4)
     cache.save()
     tuning._load_cache.cache_clear()
     assert tuning.stem_cin() == 4
-    got = select_conv_path(**thin)
+    got = heuristic_path(**thin)
     assert got != "im2col"  # cin=8 >= 4: now a streaming/transform engine
+    # ...while the pure shape rule is unaffected by the cache (no IO)
+    assert select_conv_path(**thin) == "im2col"
     # backend-scoped: another backend's entry does not apply here
     assert tuning.stem_cin(backend="fake") == tuning.DEFAULT_STEM_CIN
     # malformed entries fall back to the default instead of poisoning
@@ -265,5 +270,5 @@ def test_stem_cin_threshold_schema(tmp_path, monkeypatch):
     tuning._load_cache.cache_clear()
     assert tuning.stem_cin() == tuning.DEFAULT_STEM_CIN
     # explicit stem_cin argument bypasses the cache entirely
-    assert select_conv_path(**thin, stem_cin=4) != "im2col"
+    assert heuristic_path(**thin, stem_cin=4) != "im2col"
     tuning._load_cache.cache_clear()
