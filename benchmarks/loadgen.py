@@ -105,21 +105,59 @@ def _slo_draw(n: int, rng) -> list:
     return list(rng.choice(names, size=n, p=probs / probs.sum()))
 
 
+def chaos_plan(seed: int):
+    """The default chaos-mode fault mix (deterministic given ``seed``).
+
+    Covers every injected failure shape the runtime handles: transient
+    faults (retry/backoff), persistent poison requests (bisection +
+    quarantine), OOM-shaped failures (degraded mode), and latency spikes
+    (deadline pressure through the warped clock).
+    """
+    from repro.serving.faults import FaultPlan
+    return FaultPlan(seed=seed, transient_rate=0.15, transient_fails=1,
+                     poison_rate=0.04, oom_rate=0.02,
+                     latency_rate=0.10, latency_s=0.020)
+
+
 def run_trace(cfg, params, arrivals: np.ndarray, slos: list, *,
-              buckets=(1, 4, 16)) -> dict:
-    """Replay one open-loop trace through a fresh engine; return its row."""
+              buckets=(1, 4, 16), fault_plan=None) -> dict:
+    """Replay one open-loop trace through a fresh engine; return its row.
+
+    With ``fault_plan`` the engine runs under deterministic fault
+    injection with the default :class:`~repro.serving.scheduler.
+    RetryPolicy`; the row then reports goodput UNDER faults plus the
+    retry/bisection/quarantine counters, and the conservation invariant
+    ``done + expired + failed == submitted`` is asserted before returning.
+    """
     from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
 
     clock = WarpClock()
-    eng = CNNServeEngine(cfg, params, buckets=buckets, clock=clock.now)
+    kw = {}
+    inj = None
+    if fault_plan is not None:
+        from repro.serving.faults import FaultInjector
+        from repro.serving.scheduler import RetryPolicy
+        inj = FaultInjector(fault_plan, clock=clock.now)
+        # backoff targets live in the injector's (skewed) clock domain;
+        # subtract the skew so warp_to lands exactly on the target
+        kw = dict(faults=inj, retry=RetryPolicy(),
+                  advance=lambda t: clock.warp_to(t - inj._skew))
+    eng = CNNServeEngine(cfg, params, buckets=buckets, clock=clock.now, **kw)
     eng.warmup()   # compiles + seeds the bucket cost model's timing history
     h, c = cfg.img_size, cfg.in_channels
     img_rng = np.random.default_rng(0)
     imgs = [img_rng.standard_normal((h, h, c)).astype(np.float32)
             for _ in range(len(arrivals))]
     i, n = 0, len(arrivals)
+    rejected = 0
     t_start = clock.now()
     while i < n or eng.has_work():
+        if eng.health == "down":
+            # chaos downed the engine mid-trace: the rest of the trace has
+            # nowhere to go; count it as rejected-at-the-door (typed
+            # Failed results already cover everything submitted)
+            rejected = n - i
+            break
         now = clock.now()
         # open loop: everything the trace says has arrived by now joins the
         # queue, regardless of what is in flight (admit-while-running)
@@ -133,10 +171,14 @@ def run_trace(cfg, params, arrivals: np.ndarray, slos: list, *,
     span = clock.now() - t_start
     s = eng.stats()
     q = eng.batcher.queue
+    submitted = q.submitted_count
+    assert len(q.done) + len(q.expired) + len(q.failed) == submitted, (
+        "conservation violated: "
+        f"{len(q.done)}+{len(q.expired)}+{len(q.failed)} != {submitted}")
     lats = [v for v in q.latencies() if v is not None]
     met = [q.timing[uid].met_deadline for uid in q.done]
     in_time = sum(1 for m in met if m is not False)
-    return {
+    row = {
         "requests": n,
         "done": s["images_done"],
         "expired": s["requests_expired"],
@@ -150,11 +192,28 @@ def run_trace(cfg, params, arrivals: np.ndarray, slos: list, *,
         "padding_fraction": round(s["padding_fraction"], 4),
         "buckets": list(eng.buckets),
     }
+    if fault_plan is not None:
+        row.update({
+            "failed": s["requests_failed"],
+            "rejected": rejected,
+            "retries": s["retries"],
+            "bisections": s["bisections"],
+            "quarantined": s["quarantined"],
+            "injected": inj.stats()["injected"],
+            "health": s["health"],
+        })
+    return row
 
 
 def run(models, policies, traces, *, n_requests: int, rate: float,
-        seed: int, emit=print) -> list:
-    """All (model, policy, trace) rows.  Deterministic trace given seed."""
+        seed: int, fault_plan=None, emit=print) -> list:
+    """All (model, policy, trace) rows.  Deterministic trace given seed.
+
+    With ``fault_plan`` every trace runs in chaos mode and its row is
+    labeled ``<trace>@chaos`` -- a distinct (model, policy, trace)
+    identity, so fault-free and under-faults goodput coexist in the same
+    payload and the perf gate judges them separately.
+    """
     from repro.configs import get_config, reduced
     from repro.core.precision import MatmulPolicy
     from repro.models.cnn import cnn_init
@@ -171,14 +230,19 @@ def run(models, policies, traces, *, n_requests: int, rate: float,
                             if trace == "poisson"
                             else bursty_trace(n_requests, rate, rng))
                 slos = _slo_draw(n_requests, rng)
-                row = dict(model=model, policy=policy, trace=trace,
+                label = trace if fault_plan is None else f"{trace}@chaos"
+                row = dict(model=model, policy=policy, trace=label,
                            rate_rps=rate, seed=seed)
-                row.update(run_trace(cfg, params, arrivals, slos))
+                row.update(run_trace(cfg, params, arrivals, slos,
+                                     fault_plan=fault_plan))
                 rows.append(row)
-                emit(f"[loadgen] {model}/{policy}/{trace}: "
+                chaos = ("" if fault_plan is None else
+                         f", {row['failed']} failed / {row['retries']} "
+                         f"retries / {row['quarantined']} quarantined")
+                emit(f"[loadgen] {model}/{policy}/{label}: "
                      f"{row['done']} done ({row['expired']} expired), "
                      f"goodput {row['goodput_rps']:.1f}/s, "
-                     f"p99 {row['p99_ms']:.1f} ms")
+                     f"p99 {row['p99_ms']:.1f} ms{chaos}")
     return rows
 
 
@@ -211,6 +275,14 @@ def main(argv=None) -> int:
     ap.add_argument("--rate", type=float, default=150.0,
                     help="offered load, requests/sec")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", action="store_true",
+                    help="chaos mode: run every trace under the default "
+                         "seeded fault mix (see chaos_plan); rows are "
+                         "labeled <trace>@chaos")
+    ap.add_argument("--fault-spec", default=None, metavar="SPEC",
+                    help="override the chaos fault mix, e.g. "
+                         "'transient=0.2,poison=0.05,oom=0.02,latency=0.1' "
+                         "(implies --faults; validated at parse time)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a standalone loadgen payload to PATH")
     ap.add_argument("--merge", default=None, metavar="PATH",
@@ -223,8 +295,18 @@ def main(argv=None) -> int:
               else ["alexnet"] if args.smoke
               else ["alexnet", "vgg16", "vgg19"])
     n_requests = args.requests or (24 if args.smoke else 96)
+    fault_plan = None
+    if args.fault_spec is not None:
+        from repro.serving.faults import FaultPlan
+        try:
+            fault_plan = FaultPlan.parse(args.fault_spec, seed=args.seed)
+        except ValueError as e:
+            ap.error(str(e))
+    elif args.faults:
+        fault_plan = chaos_plan(args.seed)
     rows = run(models, args.policies.split(","), args.traces.split(","),
-               n_requests=n_requests, rate=args.rate, seed=args.seed)
+               n_requests=n_requests, rate=args.rate, seed=args.seed,
+               fault_plan=fault_plan)
     if args.json:
         payload = {"schema": "bench-convnets/v1", "smoke": bool(args.smoke),
                    "backend": jax.default_backend(), "loadgen": rows}

@@ -254,6 +254,26 @@ def heuristic_plan(cfg, *, backend: Optional[str] = None,
                          backend=backend, entries=tuple(entries))
 
 
+def materialized_fallback_plan(plan: ExecutionPlan) -> ExecutionPlan:
+    """Reroute every conv layer to the materialized im2col path.
+
+    The degraded-mode plan: engines switch to this after OOM-shaped
+    failures, because the materialized path has the smallest live-VMEM
+    footprint per tile (no streamed patch windows, no Pallas scratch) and
+    honors EVERY policy.  Legality is the exactness contract the repo
+    already tests -- under the integer policies all conv paths are bitwise
+    equal (plan == auto == forced im2col, DESIGN.md sections 7.6/9), so a
+    request retried on the degraded plan produces logits bitwise identical
+    to the healthy plan.  Blocks are cleared so the tuner re-picks
+    im2col-feasible tiles.
+    """
+    entries = tuple(dataclasses.replace(e, path="im2col", block=None,
+                                        est_us=None, roofline_frac=None,
+                                        source="fallback")
+                    for e in plan.entries)
+    return dataclasses.replace(plan, entries=entries)
+
+
 # ---------------------------------------------------------------------------
 # The design-space explorer.
 # ---------------------------------------------------------------------------

@@ -30,7 +30,8 @@ def _serve_lm(cfg, args) -> int:
         print("engine serves decoder-only families; pick another arch")
         return 2
     params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    engine = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                         **_resilience_kwargs(args))
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
     for uid in range(args.requests):
@@ -47,9 +48,14 @@ def _serve_lm(cfg, args) -> int:
         print(f"[serve] req {uid}: prompt {list(r.prompt)} -> {r.out_tokens}")
     for uid in sorted(engine.expired):
         print(f"[serve] req {uid}: EXPIRED before admission")
-    print(f"[serve] {len(done)} requests ({len(engine.expired)} expired), "
+    for uid, flr in sorted(engine.failed.items()):
+        print(f"[serve] req {uid}: FAILED after {flr.attempts} attempts "
+              f"({flr.error})")
+    print(f"[serve] {len(done)} requests ({len(engine.expired)} expired, "
+          f"{len(engine.failed)} failed, health {engine.health}), "
           f"{n_tok} tokens in {dt:.1f}s ({n_tok/dt:.1f} tok/s)", flush=True)
-    return 0 if len(done) + len(engine.expired) == args.requests else 1
+    served = len(done) + len(engine.expired) + len(engine.failed)
+    return 0 if served == args.requests else 1
 
 
 def _request_slo_kwargs(args) -> dict:
@@ -59,6 +65,16 @@ def _request_slo_kwargs(args) -> dict:
         kw["slo"] = args.slo
     if args.deadline_ms is not None:
         kw["deadline"] = time.monotonic() + args.deadline_ms / 1e3
+    return kw
+
+
+def _resilience_kwargs(args) -> dict:
+    """Engine retry/fault-injection kwargs from the validated CLI flags."""
+    kw = {}
+    if getattr(args, "_retry", None) is not None:
+        kw["retry"] = args._retry
+    if getattr(args, "_fault_plan", None) is not None:
+        kw["faults"] = args._fault_plan
     return kw
 
 
@@ -98,7 +114,8 @@ def _serve_cnn(cfg, args) -> int:
     params = cnn_init(cfg, jax.random.PRNGKey(args.seed))
     buckets = tuple(int(b) for b in args.buckets.split(","))
     engine = CNNServeEngine(cfg, params, buckets=buckets,
-                            plan=_cnn_plan(cfg, args))
+                            plan=_cnn_plan(cfg, args),
+                            **_resilience_kwargs(args))
     engine.warmup()  # compile every bucket shape: serving is all cache hits
     rng = np.random.default_rng(args.seed)
     h, c = cfg.img_size, cfg.in_channels
@@ -117,14 +134,20 @@ def _serve_cnn(cfg, args) -> int:
     for uid, exp in sorted(engine.expired.items()):
         print(f"[serve] img {uid}: EXPIRED (deadline {exp.deadline:.3f} "
               f"< admission at {exp.expired_at:.3f})")
+    for uid, flr in sorted(engine.failed.items()):
+        print(f"[serve] img {uid}: FAILED after {flr.attempts} attempts "
+              f"({flr.error})")
     print(f"[serve] {cfg.name}/{cfg.policy.value}: "
           f"{s['images_done']} images in {dt:.2f}s wall "
           f"({s['images_per_s']:.1f} img/s batched, "
           f"p95 latency {1e3 * s['latency_p95_s']:.1f} ms, "
           f"padding {100 * s['padding_fraction']:.0f}%, "
           f"expired {s['requests_expired']}, "
+          f"failed {s['requests_failed']}, "
+          f"retries {s['retries']}, health {s['health']}, "
           f"buckets {s['bucket_counts']})", flush=True)
-    return 0 if len(done) + len(engine.expired) == args.requests else 1
+    served = len(done) + len(engine.expired) + len(engine.failed)
+    return 0 if served == args.requests else 1
 
 
 def _build_engine(cfg, args):
@@ -136,14 +159,16 @@ def _build_engine(cfg, args):
         params = cnn_init(cfg, jax.random.PRNGKey(args.seed))
         buckets = tuple(int(b) for b in args.buckets.split(","))
         eng = CNNServeEngine(cfg, params, buckets=buckets,
-                             plan=_cnn_plan(cfg, args))
+                             plan=_cnn_plan(cfg, args),
+                             **_resilience_kwargs(args))
         eng.warmup()
         return eng
     from repro.models import transformer
     from repro.serving.engine import ServeEngine
 
     params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
-    return ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    return ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                       **_resilience_kwargs(args))
 
 
 def _serve_multi(cfgs, args) -> int:
@@ -179,12 +204,24 @@ def _serve_multi(cfgs, args) -> int:
         eng = disp.engine(name)
         print(f"[serve] {name}: {len(done[name])} done, "
               f"{len(eng.request_queue.expired)} expired, "
+              f"{len(getattr(eng.request_queue, 'failed', {}))} failed, "
+              f"health {s['health'][name]}, "
               f"{s['per_model'][name]['dispatch_steps']} dispatch steps")
-    print(f"[serve] multi-model: {s['requests_done']} requests "
-          f"({s['requests_expired']} expired) across {len(cfgs)} models "
-          f"in {dt:.2f}s on one device pool", flush=True)
+    # the fleet rollup: the conservation triple + resilience counters an
+    # operator actually pages on, not just the nested per-model dicts
+    print(f"[serve] fleet: {s['requests_done']} done, "
+          f"{s['requests_expired']} expired, "
+          f"{s['requests_failed']} failed, "
+          f"{s['retries']} retries, {s['quarantined']} quarantined "
+          f"across {len(cfgs)} models in {dt:.2f}s on one device pool",
+          flush=True)
+    if s["contained"]:
+        for name, err in s["contained"].items():
+            print(f"[serve] contained: {name} downed by {err}")
     want = args.requests * len(cfgs)
-    return 0 if s["requests_done"] + s["requests_expired"] == want else 1
+    served = (s["requests_done"] + s["requests_expired"]
+              + s["requests_failed"])
+    return 0 if served == want else 1
 
 
 def main(argv=None):
@@ -220,8 +257,40 @@ def main(argv=None):
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="explicit per-request latency budget in ms "
                          "(wins over --slo's class budget)")
+    ap.add_argument("--retries", type=int, default=None, metavar="N",
+                    help="retry failed forwards up to N attempts per request "
+                         "(exponential backoff, poison-batch bisection, "
+                         "typed Failed results); default: no retry, a "
+                         "forward failure propagates")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'transient=0.1,poison=0.02,oom=0.05'; keys: "
+                         "transient, poison, oom, latency, latency_s, "
+                         "transient_fails (validated here, not mid-run); "
+                         "implies --retries 3 unless --retries is given")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # Validate the resilience flags at ARG time: a typo'd fault spec or a
+    # zero retry budget should fail here, not after model init/warmup.
+    args._retry = None
+    if args.retries is not None:
+        from repro.serving.scheduler import RetryPolicy
+        try:
+            args._retry = RetryPolicy(max_attempts=args.retries)
+        except ValueError as e:
+            ap.error(f"--retries: {e}")
+    args._fault_plan = None
+    if args.fault_plan is not None:
+        from repro.serving.faults import FaultPlan
+        try:
+            args._fault_plan = FaultPlan.parse(args.fault_plan,
+                                               seed=args.seed)
+        except ValueError as e:
+            ap.error(f"--fault-plan: {e}")
+        if args._retry is None:
+            from repro.serving.scheduler import RetryPolicy
+            args._retry = RetryPolicy()
 
     cfgs = []
     for arch in args.arch.split(","):

@@ -62,6 +62,7 @@ Typical use::
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -70,7 +71,8 @@ import numpy as np
 
 from repro.core.substrate import policy_int_spec
 from repro.models.cnn import CNNConfig, cnn_forward, cnn_quantize_params
-from repro.serving.scheduler import IncompleteRunError, Microbatcher
+from repro.serving.scheduler import (EngineDownError, IncompleteRunError,
+                                     Microbatcher, RetryPolicy)
 
 
 @dataclasses.dataclass
@@ -91,7 +93,8 @@ class CNNServeEngine:
                  mesh=None, prequantize: bool | None = None,
                  tune: bool = False, plan=None,
                  slo_budgets: Optional[dict] = None,
-                 clock=None):
+                 clock=None, retry: Optional[RetryPolicy] = None,
+                 faults=None, advance=None):
         self.cfg = cfg
         if tune:
             # Measured tile sweep for THIS config's conv layers on THIS
@@ -136,9 +139,32 @@ class CNNServeEngine:
         # buckets rounded up to the data-parallel degree: every mesh slice
         # gets a full (possibly padded) batch shard
         buckets = sorted({-(-int(b) // dp) * dp for b in buckets})
-        kw = {} if clock is None else {"clock": clock}
-        self.batcher = Microbatcher(buckets, slo_budgets=slo_budgets, **kw)
+        # -- resilience wiring (DESIGN.md section 9.8) --
+        # health ladder: healthy -> degraded (OOM drops the largest bucket,
+        # then reroutes the plan to the exact materialized fallback) ->
+        # down (nothing left to shed; pending requests failed typed).
+        self.health = "healthy"
+        self.degrade_log: List[str] = []
+        self._fallback_plan_active = False
+        self.faults = None
+        run_clock = clock
+        if faults is not None:
+            from repro.serving.faults import FaultInjector
+            inj = (faults if isinstance(faults, FaultInjector)
+                   else FaultInjector(faults, clock=(clock or time.monotonic)))
+            if inj._clock is None:
+                inj._clock = clock or time.monotonic
+            self.faults = inj
+            # latency spikes skew the injector's clock: the batcher must
+            # live in the same (warped) clock domain
+            run_clock = inj.now
+        kw = {} if run_clock is None else {"clock": run_clock}
+        self.batcher = Microbatcher(buckets, slo_budgets=slo_budgets,
+                                    retry=retry, advance=advance,
+                                    on_fault=self._on_fault, **kw)
         self._forward = jax.jit(self._make_forward())
+        self._serve_fn = (self.faults.wrap(self._run_batch)
+                          if self.faults is not None else self._run_batch)
 
     def _make_forward(self):
         cfg, plan = self.cfg, self.plan
@@ -167,6 +193,10 @@ class CNNServeEngine:
     # -- admission -----------------------------------------------------------
 
     def submit(self, req: ImageRequest) -> None:
+        if self.health == "down":
+            raise EngineDownError(
+                f"{self.cfg.name} engine is down; submit to a healthy "
+                f"engine (the dispatcher skips down engines)")
         img = np.asarray(req.image, np.float32)
         h = self.cfg.img_size
         if img.shape != (h, h, self.cfg.in_channels):
@@ -181,6 +211,11 @@ class CNNServeEngine:
         return self.batcher.queue.expired
 
     @property
+    def failed(self):
+        """Typed :class:`~repro.serving.scheduler.Failed` quarantines."""
+        return self.batcher.queue.failed
+
+    @property
     def request_queue(self):
         """The shared scheduler queue (dispatcher protocol)."""
         return self.batcher.queue
@@ -191,6 +226,53 @@ class CNNServeEngine:
     def urgency(self) -> tuple:
         """(earliest deadline, earliest submit) across pending requests."""
         return self.batcher.queue.urgency()
+
+    # -- health ---------------------------------------------------------------
+
+    def _degrade(self) -> bool:
+        """Shed capacity after an OOM-shaped failure; False = nothing left.
+
+        The ladder: retire the largest (memory-hungriest) jit bucket shape
+        while more than one remains, then reroute the whole plan to the
+        materialized im2col fallback (smallest live-VMEM footprint, honors
+        every policy, bitwise-equal under the integer policies -- DESIGN.md
+        sections 7.6/9.8) and rebuild the jitted forward.  Each rung keeps
+        the engine serving, degraded; when both are exhausted the engine
+        goes down.
+        """
+        dropped = self.batcher.drop_largest_bucket()
+        if dropped is not None:
+            self.health = "degraded"
+            self.degrade_log.append(f"dropped bucket {dropped}")
+            return True
+        if self.plan is not None and not self._fallback_plan_active:
+            from repro.core.planner import materialized_fallback_plan
+            self.plan = materialized_fallback_plan(self.plan)
+            self._fallback_plan_active = True
+            self._forward = jax.jit(self._make_forward())
+            self.health = "degraded"
+            self.degrade_log.append("rerouted plan to materialized im2col")
+            return True
+        self.mark_down("degraded-mode options exhausted after OOM")
+        return False
+
+    def _on_fault(self, kind: str, exc: BaseException, uids) -> bool:
+        """Microbatcher fault hook; True aborts the batch (engine down)."""
+        if self.health == "down":
+            return True
+        if kind != "oom":
+            return False          # transient: let the retry policy handle it
+        return not self._degrade()
+
+    def mark_down(self, reason: str = "engine marked down") -> list:
+        """Transition to ``down``: pending requests are failed TYPED.
+
+        Returns the new :class:`~repro.serving.scheduler.Failed` results;
+        nothing is silently lost (``done + expired + failed == submitted``
+        still holds) and further submits raise :class:`EngineDownError`.
+        """
+        self.health = "down"
+        return self.batcher.queue.fail_pending(EngineDownError(reason))
 
     # -- execution -----------------------------------------------------------
 
@@ -217,7 +299,9 @@ class CNNServeEngine:
 
     def step(self) -> List[ImageRequest]:
         """Serve one microbatch; returns the requests completed by it."""
-        completed = self.batcher.step(self._run_batch)
+        if self.health == "down":
+            raise EngineDownError(f"{self.cfg.name} engine is down")
+        completed = self.batcher.step(self._serve_fn)
         out = []
         for req, logits in completed:
             req.logits = logits
@@ -253,4 +337,8 @@ class CNNServeEngine:
         s["images_per_s"] = s.pop("throughput_rps")
         s["buckets"] = self.batcher.buckets
         s["data_parallel"] = self.dp
+        s["health"] = self.health
+        s["degrade_log"] = list(self.degrade_log)
+        if self.faults is not None:
+            s["faults"] = self.faults.stats()
         return s

@@ -27,7 +27,9 @@ import numpy as np
 from repro.core.substrate import policy_int_spec
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.serving.scheduler import IncompleteRunError, RequestQueue
+from repro.serving.scheduler import (EngineDownError, IncompleteRunError,
+                                     RequestQueue, RetryPolicy,
+                                     classify_failure, wait_until)
 from repro.serving.weight_quant import quantize_params_inline
 
 
@@ -46,7 +48,9 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, rng_seed: int = 0,
                  prequantize: bool | None = None,
-                 slo_budgets: Optional[dict] = None, clock=None):
+                 slo_budgets: Optional[dict] = None, clock=None,
+                 retry: Optional[RetryPolicy] = None,
+                 faults=None, advance=None):
         if cfg.family in ("encdec",):
             raise NotImplementedError("engine serves decoder-only families")
         self.cfg = cfg
@@ -76,7 +80,33 @@ class ServeEngine:
         # EDF admission with FIFO tie-break, done/expired ledgers and
         # latency stamps shared with the CNN engine rather than
         # re-implemented per engine.
-        kw = {} if clock is None else {"clock": clock}
+        # -- resilience wiring (DESIGN.md section 9.8) --
+        # health ladder: healthy -> degraded (OOM halves the admission slot
+        # cap) -> down (cap at 1 and still OOMing; active + pending
+        # requests failed typed).
+        self.health = "healthy"
+        self.degrade_log: List[str] = []
+        self._slot_cap = slots
+        self.retry = retry
+        self._advance = advance
+        self.retries = 0
+        self.bisections = 0
+        self.quarantined = 0
+        self.fault_counts: Dict[str, int] = {"transient": 0, "oom": 0}
+        self.faults = None
+        run_clock = clock
+        if faults is not None:
+            import time as _time
+
+            from repro.serving.faults import FaultInjector
+            inj = (faults if isinstance(faults, FaultInjector)
+                   else FaultInjector(faults,
+                                      clock=(clock or _time.monotonic)))
+            if inj._clock is None:
+                inj._clock = clock or _time.monotonic
+            self.faults = inj
+            run_clock = inj.now   # latency skew shared with the queue clock
+        kw = {} if run_clock is None else {"clock": run_clock}
         self._rq = RequestQueue(slo_budgets=slo_budgets, **kw)
         self._rng = np.random.default_rng(rng_seed)
         self._decode = jax.jit(
@@ -103,6 +133,11 @@ class ServeEngine:
         return self._rq.expired
 
     @property
+    def failed(self) -> Dict[int, object]:
+        """Typed :class:`~repro.serving.scheduler.Failed` quarantines."""
+        return self._rq.failed
+
+    @property
     def request_queue(self) -> RequestQueue:
         """The shared scheduler queue (dispatcher protocol)."""
         return self._rq
@@ -115,19 +150,97 @@ class ServeEngine:
         return self._rq.urgency()
 
     def submit(self, req: Request):
+        if self.health == "down":
+            raise EngineDownError(
+                "engine is down; submit to a healthy engine "
+                "(the dispatcher skips down engines)")
         req.out_tokens = []
         self._rq.submit(req, deadline=req.deadline, slo=req.slo)
 
     def _admit(self):
         # Continuous admission: reject overdue requests (typed Expired
-        # results) then fill free slots earliest-deadline-first.
+        # results) then fill free slots earliest-deadline-first.  Degraded
+        # mode shrinks the admission window to the first `_slot_cap` slots
+        # (less concurrent load); occupants beyond the cap finish normally.
         self._rq.expire_overdue()
-        for s in range(self.slots):
+        for s in range(min(self.slots, self._slot_cap)):
             if self.active[s] is None:
                 admitted = self._rq.take(1, order="edf")
                 if not admitted:
                     break
                 self._prefill_slot(s, admitted[0])
+
+    # -- health ---------------------------------------------------------------
+
+    def _degrade(self) -> bool:
+        """Shed capacity after an OOM-shaped failure; False = nothing left.
+
+        The decode batch shape is fixed (slots is a jit constant), so the
+        rung here is admission concurrency: halve the slot cap.  At a cap
+        of 1 with OOMs still arriving there is nothing left to shed and
+        the engine goes down.
+        """
+        if self._slot_cap > 1:
+            self._slot_cap = max(1, self._slot_cap // 2)
+            self.health = "degraded"
+            self.degrade_log.append(f"slot cap halved to {self._slot_cap}")
+            return True
+        self.mark_down("degraded-mode options exhausted after OOM")
+        return False
+
+    def mark_down(self, reason: str = "engine marked down") -> list:
+        """Transition to ``down``: active + pending requests failed TYPED.
+
+        Returns the new :class:`~repro.serving.scheduler.Failed` results;
+        ``done + expired + failed == submitted`` still holds and further
+        submits raise :class:`EngineDownError`.
+        """
+        self.health = "down"
+        err = EngineDownError(reason)
+        out = []
+        for s, req in enumerate(self.active):
+            if req is not None:
+                out.append(self._rq.fail(req, error=err))
+                self.active[s] = None
+        out.extend(self._rq.fail_pending(err))
+        return out
+
+    def _record_fault(self, exc: BaseException, uids) -> str:
+        """Classify + bookkeep one failed decode; fatal errors re-raise."""
+        kind = classify_failure(exc)
+        if kind == "fatal":
+            raise exc
+        now = self._rq.now()
+        self.fault_counts[kind] = self.fault_counts.get(kind, 0) + 1
+        for uid in uids:
+            self._rq.record_attempt(uid, now, exc)
+        return kind
+
+    def _backoff(self, fails: int, uids) -> None:
+        """Back off on the injected clock, capped by the earliest deadline."""
+        self.retries += 1
+        now = self._rq.now()
+        target = now + self.retry.backoff(fails)
+        deadlines = [self._rq.timing[u].deadline for u in uids
+                     if self._rq.timing[u].deadline is not None]
+        if deadlines:
+            target = min(target, min(deadlines))
+        wait_until(self._rq.now, target, self._advance)
+
+    def _expire_slots(self, slot_ids: List[int]) -> List[int]:
+        """Expire active slots whose deadline passed during backoff."""
+        now = self._rq.now()
+        keep = []
+        for s in slot_ids:
+            req = self.active[s]
+            # same overdue rule as expire_overdue: deadline <= now
+            d = self._rq.timing[req.uid].deadline
+            if d is not None and d <= now:
+                self._rq.expire(req, now)
+                self.active[s] = None
+            else:
+                keep.append(s)
+        return keep
 
     def _prefill_slot(self, slot: int, req: Request):
         """Run the prompt through the decode path token-by-token.
@@ -151,11 +264,47 @@ class ServeEngine:
         for t in req.prompt:
             tok = np.zeros((self.slots, 1), np.int32)
             tok[slot, 0] = t
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(tok),
-                jnp.int32(self.pos[slot]), mask_j,
-            )
-            self.pos[slot] += 1
+            fails = 0
+            while True:
+                # Retry-safe: the cache is only committed on success, and a
+                # retried token rewrites the same position, so a prefill
+                # that eventually succeeds is bitwise identical to a
+                # fault-free one.
+                try:
+                    if self.faults is not None:
+                        self.faults.check((req.uid,))
+                    logits, cache = self._decode(
+                        self.params, self.cache, jnp.asarray(tok),
+                        jnp.int32(self.pos[slot]), mask_j,
+                    )
+                    if self.faults is not None:
+                        self.faults.lag()
+                except BaseException as exc:
+                    kind = self._record_fault(exc, (req.uid,))
+                    fails += 1
+                    if kind == "oom" and not self._degrade():
+                        return    # mark_down already failed this request
+                    if self.health == "down":
+                        return
+                    if self.retry is None:
+                        # pre-retry contract: propagate; the request is
+                        # failed typed so it is not silently lost mid-slot
+                        self._rq.fail(req, error=exc)
+                        self.active[slot] = None
+                        raise
+                    if (self._rq.timing[req.uid].attempts
+                            >= self.retry.max_attempts):
+                        self._rq.fail(req, error=exc)
+                        self.quarantined += 1
+                        self.active[slot] = None
+                        return
+                    self._backoff(fails, (req.uid,))
+                    if not self._expire_slots([slot]):
+                        return
+                    continue
+                self.cache = cache
+                self.pos[slot] += 1
+                break
 
     # -- decode --------------------------------------------------------------
 
@@ -170,6 +319,8 @@ class ServeEngine:
 
     def step(self):
         """One engine step: decode one token for every active slot."""
+        if self.health == "down":
+            raise EngineDownError("engine is down")
         self._admit()
         if not any(r is not None for r in self.active):
             return False
@@ -188,15 +339,75 @@ class ServeEngine:
             if req is not None:
                 groups.setdefault(int(self.pos[s]), []).append(s)
         for pos, slot_ids in groups.items():
+            self._step_group(pos, slot_ids, tok)
+            if self.health == "down":
+                break
+        return True
+
+    def _step_group(self, pos: int, slot_ids: List[int], tok: np.ndarray,
+                    suspect: bool = False) -> None:
+        """Decode one token for the slots at ``pos``; retry/bisect faults.
+
+        Mirrors :meth:`Microbatcher._serve`: fatal errors propagate, a
+        failing multi-slot group is bisected after ``bisect_after``
+        consecutive failures (the write mask makes any slot subset a legal
+        decode), and a slot that exhausts its attempt budget ALONE is
+        quarantined typed.  The cache is only committed on success, so
+        retries never double-write a position.
+        """
+        fails = 0
+        slot_ids = list(slot_ids)
+        while True:
+            if not slot_ids:
+                return
+            uids = tuple(self.active[s].uid for s in slot_ids)
             t = np.zeros((self.slots, 1), np.int32)
             mask = np.zeros((self.slots,), bool)
             for s in slot_ids:
                 t[s, 0] = tok[s, 0]
                 mask[s] = True
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(t), jnp.int32(pos),
-                jnp.asarray(mask),
-            )
+            try:
+                if self.faults is not None:
+                    self.faults.check(uids)
+                logits, cache = self._decode(
+                    self.params, self.cache, jnp.asarray(t), jnp.int32(pos),
+                    jnp.asarray(mask),
+                )
+                if self.faults is not None:
+                    self.faults.lag()
+            except BaseException as exc:
+                kind = self._record_fault(exc, uids)
+                fails += 1
+                if kind == "oom" and not self._degrade():
+                    return        # mark_down already failed these requests
+                if self.health == "down":
+                    return
+                if self.retry is None:
+                    raise          # pre-retry contract: propagate as-is
+                if len(slot_ids) == 1:
+                    s = slot_ids[0]
+                    req = self.active[s]
+                    if (self._rq.timing[req.uid].attempts
+                            >= self.retry.max_attempts):
+                        # exhausted its budget serving ALONE: quarantine
+                        self._rq.fail(req, error=exc)
+                        self.quarantined += 1
+                        self.active[s] = None
+                        return
+                elif fails >= (1 if suspect else self.retry.bisect_after):
+                    # hunt the poison slot by bisection; the other half
+                    # still decodes this step
+                    self.bisections += 1
+                    mid = len(slot_ids) // 2
+                    self._step_group(pos, slot_ids[:mid], tok, suspect=True)
+                    if self.health != "down":
+                        self._step_group(pos, slot_ids[mid:], tok,
+                                         suspect=True)
+                    return
+                self._backoff(fails, uids)
+                slot_ids = self._expire_slots(slot_ids)
+                continue
+            self.cache = cache
             logits = np.asarray(logits).reshape(self.slots, -1)
             for s in slot_ids:
                 req = self.active[s]
@@ -207,7 +418,7 @@ class ServeEngine:
                         or self.pos[s] >= self.max_len - 1):
                     self._rq.finish(req)
                     self.active[s] = None
-        return True
+            return
 
     def run(self, max_steps: int = 10_000):
         """Serve until queue and slots drain; raise if max_steps cuts it off.
@@ -225,3 +436,24 @@ class ServeEngine:
                 [r.uid for r in self.active if r is not None]
             raise IncompleteRunError(self._rq.done, stranded, max_steps)
         return self._rq.done
+
+    # -- accounting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Request/resilience roll-up (the CNN engine's stats analogue)."""
+        s = {
+            "requests_done": len(self._rq.done),
+            "requests_expired": len(self._rq.expired),
+            "requests_failed": len(self._rq.failed),
+            "retries": self.retries,
+            "bisections": self.bisections,
+            "quarantined": self.quarantined,
+            "fault_counts": dict(self.fault_counts),
+            "health": self.health,
+            "degrade_log": list(self.degrade_log),
+            "slots": self.slots,
+            "slot_cap": self._slot_cap,
+        }
+        if self.faults is not None:
+            s["faults"] = self.faults.stats()
+        return s

@@ -1,0 +1,160 @@
+"""serving/faults.py: deterministic fault plans, the injector, classification.
+
+No models here -- these prove the fault substrate itself: per-uid fault
+decisions are a pure function of (seed, uid) so chaos runs replay
+identically whatever the batching schedule did, the parser rejects bad
+specs at validation time, and classify_failure maps every failure shape
+(injected or organic) onto the retry semantics.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.faults import (FaultInjector, FaultPlan, OOMFault,
+                                  PoisonFault, TransientFault)
+from repro.serving.scheduler import (BatchContractError, RetryPolicy,
+                                     classify_failure)
+
+
+# -- FaultPlan declaration + parsing ----------------------------------------
+
+def test_fault_plan_validates_rates():
+    with pytest.raises(ValueError, match="transient_rate"):
+        FaultPlan(transient_rate=1.5)
+    with pytest.raises(ValueError, match="poison_rate"):
+        FaultPlan(poison_rate=-0.1)
+    with pytest.raises(ValueError, match="transient_fails"):
+        FaultPlan(transient_fails=0)
+    with pytest.raises(ValueError, match="latency_s"):
+        FaultPlan(latency_s=-1.0)
+
+
+def test_fault_plan_parse_spec():
+    p = FaultPlan.parse("transient=0.1,poison=0.02,oom=0.05,latency=0.2",
+                        seed=7)
+    assert p.seed == 7
+    assert p.transient_rate == pytest.approx(0.1)
+    assert p.poison_rate == pytest.approx(0.02)
+    assert p.oom_rate == pytest.approx(0.05)
+    assert p.latency_rate == pytest.approx(0.2)
+    # long-form keys work too
+    p2 = FaultPlan.parse("transient_fails=3,latency_s=0.5")
+    assert p2.transient_fails == 3 and p2.latency_s == 0.5
+    # empty spec is a no-fault plan
+    assert FaultPlan.parse("") == FaultPlan()
+
+
+def test_fault_plan_parse_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown fault spec key"):
+        FaultPlan.parse("bogus=1")
+    with pytest.raises(ValueError, match="malformed"):
+        FaultPlan.parse("transient")
+    with pytest.raises(ValueError, match="bad value"):
+        FaultPlan.parse("poison=lots")
+    with pytest.raises(ValueError, match="oom_rate"):
+        FaultPlan.parse("oom=2.0")   # parsed, then rejected by validation
+
+
+# -- per-uid determinism ----------------------------------------------------
+
+def test_fault_decisions_are_schedule_independent():
+    """Whether uid N is poisoned/transient depends only on (seed, uid):
+    two injectors from the same plan agree for every uid regardless of
+    query order, and a re-created injector replays identically."""
+    plan = FaultPlan(seed=3, transient_rate=0.3, poison_rate=0.2)
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    uids = list(range(50))
+    fwd = [(a.is_poison(u), a.is_transient(u)) for u in uids]
+    rev = [(b.is_poison(u), b.is_transient(u)) for u in reversed(uids)]
+    assert fwd == list(reversed(rev))
+    # the mix actually fires both ways at these rates over 50 uids
+    assert any(p for p, _ in fwd) and not all(p for p, _ in fwd)
+
+
+def test_fault_decisions_depend_on_seed():
+    uids = list(range(200))
+    one = [FaultInjector(FaultPlan(seed=1, poison_rate=0.3)).is_poison(u)
+           for u in uids]
+    two = [FaultInjector(FaultPlan(seed=2, poison_rate=0.3)).is_poison(u)
+           for u in uids]
+    assert one != two
+
+
+def test_forced_poison_uids():
+    inj = FaultInjector(FaultPlan(seed=0, poison_uids=(17,)))
+    assert inj.is_poison(17)
+    with pytest.raises(PoisonFault, match="uid 17"):
+        inj.check((1, 17, 3))
+
+
+# -- the wrapped forward ----------------------------------------------------
+
+def test_wrap_declares_wants_uids_and_injects():
+    plan = FaultPlan(seed=0, poison_uids=(2,))
+    inj = FaultInjector(plan, clock=lambda: 0.0)
+    calls = []
+    fwd = inj.wrap(lambda batch: calls.append(1) or batch * 2)
+    assert getattr(fwd, "wants_uids", False)
+    with pytest.raises(PoisonFault):
+        fwd(np.ones((2, 1)), uids=(1, 2))
+    assert calls == []        # fault fires BEFORE the real forward runs
+    out = fwd(np.ones((2, 1)), uids=(1, 3))
+    assert np.array_equal(out, np.full((2, 1), 2.0)) and calls == [1]
+    assert inj.stats()["injected"]["poison"] == 1
+
+
+def test_transient_fault_heals_after_budget():
+    inj = FaultInjector(FaultPlan(seed=0, transient_rate=1.0,
+                                  transient_fails=2))
+    for _ in range(2):
+        with pytest.raises(TransientFault):
+            inj.check((5,))
+    inj.check((5,))           # healed: no raise
+    assert inj.stats()["injected"]["transient"] == 2
+
+
+def test_oom_fault_is_oom_shaped():
+    inj = FaultInjector(FaultPlan(seed=0, oom_rate=1.0))
+    with pytest.raises(OOMFault) as ei:
+        inj.check(())
+    assert classify_failure(ei.value) == "oom"
+    assert "RESOURCE_EXHAUSTED" in str(ei.value)
+
+
+def test_latency_spike_skews_the_wrapped_clock():
+    t = [100.0]
+    inj = FaultInjector(FaultPlan(seed=0, latency_rate=1.0, latency_s=0.5),
+                        clock=lambda: t[0])
+    assert inj.now() == pytest.approx(100.0)
+    fwd = inj.wrap(lambda b: b)
+    fwd(np.zeros((1, 1)), uids=(0,))
+    assert inj.now() == pytest.approx(100.5)
+    fwd(np.zeros((1, 1)), uids=(0,))
+    assert inj.now() == pytest.approx(101.0)   # skew accumulates
+    assert inj.stats()["clock_skew_s"] == pytest.approx(1.0)
+
+
+# -- classification + policy ------------------------------------------------
+
+def test_classify_failure_taxonomy():
+    assert classify_failure(KeyboardInterrupt()) == "fatal"
+    assert classify_failure(SystemExit()) == "fatal"
+    assert classify_failure(BatchContractError("rows exceed bucket")) == "fatal"
+    assert classify_failure(MemoryError()) == "oom"
+    assert classify_failure(RuntimeError("RESOURCE_EXHAUSTED: boo")) == "oom"
+    assert classify_failure(RuntimeError("device ran out of memory")) == "oom"
+    assert classify_failure(RuntimeError("socket reset")) == "transient"
+    assert classify_failure(ValueError("weird shape")) == "transient"
+
+
+def test_retry_policy_backoff_and_validation():
+    p = RetryPolicy(max_attempts=4, backoff_base=0.01, backoff_mult=2.0,
+                    backoff_cap=0.05)
+    assert p.backoff(1) == pytest.approx(0.01)
+    assert p.backoff(2) == pytest.approx(0.02)
+    assert p.backoff(3) == pytest.approx(0.04)
+    assert p.backoff(4) == pytest.approx(0.05)   # capped
+    assert p.backoff(10) == pytest.approx(0.05)
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="bisect_after"):
+        RetryPolicy(bisect_after=0)

@@ -219,6 +219,40 @@ def test_uniform_slowdown_calibrates_across_mixed_row_kinds():
     assert report["calibration"] == pytest.approx(0.5, rel=1e-3)
 
 
+def test_chaos_rows_get_the_wider_bar():
+    """Goodput under fault injection wobbles with the fault draw, so
+    ``<trace>@chaos`` rows are judged at the CHAOS_SLACK-widened bar --
+    the same wobble on the fault-free trace still fails."""
+    from benchmarks.perf_gate import CHAOS_SLACK, is_chaos
+
+    key = ("loadgen", "alexnet", "kom_int14", "poisson@chaos",
+           "goodput_rps")
+    assert is_chaos(key)
+    assert not is_chaos(("loadgen", "alexnet", "kom_int14", "poisson",
+                         "goodput_rps"))
+    jitter = 0.80                          # below 0.85, above 0.85 * slack
+    assert 0.85 * CHAOS_SLACK < jitter < 0.85
+    base = _payload(
+        serving=LG_BASE["serving"],
+        loadgen=[_loadgen("poisson", 120.0, 3.0, 6.0, 8.0),
+                 _loadgen("poisson@chaos", 110.0, 3.0, 6.0, 8.0)],
+    )
+
+    def wobble(trace):
+        g = 110.0 * jitter if trace == "poisson@chaos" else 120.0 * jitter
+        chaos_only = _loadgen(trace, g, 3.0, 6.0, 8.0)
+        keep = [r for r in base["loadgen"] if r["trace"] != trace]
+        return _payload(serving=LG_BASE["serving"],
+                        loadgen=keep + [chaos_only])
+
+    assert gate(base, wobble("poisson@chaos"))["status"] == "pass"
+    report = gate(base, wobble("poisson"))
+    assert report["status"] == "fail"
+    failed = {tuple(r["key"]) for r in report["failures"]}
+    assert ("loadgen", "alexnet", "kom_int14", "poisson",
+            "goodput_rps") in failed
+
+
 def test_cli_exit_codes(tmp_path, capsys):
     base_f = tmp_path / "base.json"
     base_f.write_text(json.dumps(BASE))

@@ -1,0 +1,270 @@
+"""Retry semantics in the Microbatcher: backoff, bisection, quarantine.
+
+All stub forwards and fake clocks -- no device math.  The contract under
+test is DESIGN.md section 9.8: every admitted request reaches exactly one
+ledger (``done + expired + failed == submitted``), attempts survive
+re-queues, backoff runs on the injected clock capped by the EDF deadline,
+and a poison request is isolated by bisection while its innocent
+batch-mates still serve.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.scheduler import (
+    BatchContractError,
+    Failed,
+    Microbatcher,
+    RetryPolicy,
+)
+
+
+@dataclasses.dataclass
+class Req:
+    uid: int
+
+
+class Clock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance_to(self, target):
+        self.t = max(self.t, target)
+
+
+def _mb(buckets=(1, 2, 4), retry=RetryPolicy(), clock=None, **kw):
+    clock = clock or Clock()
+    return clock, Microbatcher(buckets, clock=clock,
+                               retry=retry, advance=clock.advance_to, **kw)
+
+
+def _payload(uid):
+    return np.full((2,), float(uid))
+
+
+def _conserved(mb):
+    q = mb.queue
+    return len(q.done) + len(q.expired) + len(q.failed) == q.submitted_count
+
+
+# -- transient retry ---------------------------------------------------------
+
+def test_transient_failure_retried_within_step():
+    clock, mb = _mb(retry=RetryPolicy(max_attempts=5, backoff_base=0.01))
+    mb.submit(Req(7), _payload(7))
+    boom = [2]    # fail twice, then heal
+
+    def fwd(batch):
+        if boom[0]:
+            boom[0] -= 1
+            raise RuntimeError("flaky interconnect")
+        return batch * 10.0
+
+    out = mb.step(fwd)
+    assert [(r.uid, row[0]) for r, row in out] == [(7, 70.0)]
+    assert mb.retries == 2
+    assert mb.queue.timing[7].attempts == 2
+    assert mb.fault_counts["transient"] == 2
+    assert list(mb.queue.done) == [7] and not mb.queue.failed
+    assert _conserved(mb)
+
+
+def test_backoff_waits_on_injected_clock():
+    clock, mb = _mb(retry=RetryPolicy(max_attempts=5, backoff_base=0.01,
+                                      backoff_mult=2.0, backoff_cap=1.0))
+    mb.submit(Req(0), _payload(0))
+    boom = [2]
+
+    def fwd(batch):
+        if boom[0]:
+            boom[0] -= 1
+            raise RuntimeError("flaky")
+        return batch
+
+    mb.step(fwd)
+    # two backoffs on the injected clock: 0.01 then 0.02, no time.sleep
+    assert clock.t == pytest.approx(0.03)
+
+
+def test_backoff_capped_by_edf_deadline_then_expires():
+    """An admitted request never backs off past its deadline: the wait is
+    capped there, and landing on it yields a typed Expired -- not Failed,
+    not a silent loss, not an extra doomed retry."""
+    clock, mb = _mb(retry=RetryPolicy(max_attempts=50, backoff_base=10.0))
+    mb.submit(Req(1), _payload(1), deadline=0.5)
+
+    def fwd(batch):
+        raise RuntimeError("always down")
+
+    out = mb.step(fwd)
+    assert out == []
+    assert clock.t == pytest.approx(0.5)       # capped at the deadline
+    assert list(mb.queue.expired) == [1] and not mb.queue.failed
+    assert _conserved(mb)
+
+
+# -- quarantine --------------------------------------------------------------
+
+def test_singleton_quarantine_with_attempt_history():
+    clock, mb = _mb(retry=RetryPolicy(max_attempts=3, backoff_base=0.01))
+    mb.submit(Req(4), _payload(4))
+
+    def fwd(batch):
+        raise RuntimeError("poisoned payload")
+
+    out = mb.step(fwd)
+    assert out == []
+    assert mb.quarantined == 1
+    f = mb.queue.failed[4]
+    assert isinstance(f, Failed)
+    assert f.attempts == 3
+    assert len(f.attempt_history) == 3
+    assert all("poisoned payload" in err for _, err in f.attempt_history)
+    assert "RuntimeError" in f.error
+    assert f.request.uid == 4
+    assert _conserved(mb)
+    # the queue refuses a resubmit of a failed uid by name
+    with pytest.raises(ValueError, match="failed"):
+        mb.submit(Req(4), _payload(4))
+
+
+def test_bisection_isolates_poison_and_serves_innocents():
+    """A batch of 4 with one poison member: repeated failure splits the
+    batch, the poison uid is cornered alone and quarantined, and all three
+    innocents serve with correct outputs."""
+    clock, mb = _mb(buckets=(1, 2, 4),
+                    retry=RetryPolicy(max_attempts=3, backoff_base=0.001,
+                                      bisect_after=2))
+    for uid in range(4):
+        mb.submit(Req(uid), _payload(uid))
+
+    def fwd(batch, *, uids=()):
+        if 2 in uids:
+            raise RuntimeError("poison request")
+        return batch * 10.0
+
+    fwd.wants_uids = True
+    served = {}
+    while len(mb.queue):
+        for r, row in mb.step(fwd):
+            served[r.uid] = row[0]
+    assert served == {0: 0.0, 1: 10.0, 3: 30.0}
+    assert list(mb.queue.failed) == [2]
+    assert mb.queue.failed[2].attempts >= 3
+    assert mb.bisections >= 1
+    assert mb.quarantined == 1
+    assert _conserved(mb)
+
+
+# -- classification: fatal errors never burn the retry budget ----------------
+
+def test_contract_error_propagates_with_requests_requeued():
+    clock, mb = _mb(retry=RetryPolicy(max_attempts=5))
+    mb.submit(Req(0), _payload(0))
+
+    def fwd(batch):
+        return batch[:0]     # wrong leading dim -> BatchContractError
+
+    with pytest.raises(BatchContractError, match="leading dim"):
+        mb.step(fwd)
+    # fatal: not retried, not failed -- re-queued intact
+    assert [r.uid for r in mb.queue.pending] == [0]
+    assert not mb.queue.failed and mb.retries == 0
+
+
+def test_keyboard_interrupt_propagates():
+    clock, mb = _mb(retry=RetryPolicy(max_attempts=5))
+    mb.submit(Req(0), _payload(0))
+
+    def fwd(batch):
+        raise KeyboardInterrupt()
+
+    with pytest.raises(KeyboardInterrupt):
+        mb.step(fwd)
+    assert [r.uid for r in mb.queue.pending] == [0]
+    assert mb.queue.timing[0].attempts == 0
+
+
+def test_no_retry_policy_preserves_requeue_and_reraise():
+    """retry=None is the pre-retry contract byte-for-byte: front-requeue
+    plus re-raise, attempt counters untouched."""
+    clock = Clock()
+    mb = Microbatcher((1, 4), clock=clock)      # no retry, no advance
+    mb.submit(Req(0), _payload(0))
+
+    def fwd(batch):
+        raise RuntimeError("device OOM")
+
+    with pytest.raises(RuntimeError, match="device OOM"):
+        mb.step(fwd)
+    assert [r.uid for r in mb.queue.pending] == [0]
+    assert not mb.queue.failed
+    # ...but the attempt WAS recorded, so history survives the requeue
+    assert mb.queue.timing[0].attempts == 1
+
+
+# -- degraded-mode plumbing --------------------------------------------------
+
+def test_on_fault_giveup_fails_batch_typed():
+    seen = []
+
+    def on_fault(kind, exc, uids):
+        seen.append((kind, tuple(uids)))
+        return True          # engine went down: abort, don't retry
+
+    clock = Clock()
+    mb = Microbatcher((1, 2), clock=clock, retry=RetryPolicy(),
+                      advance=clock.advance_to, on_fault=on_fault)
+    mb.submit(Req(0), _payload(0))
+    mb.submit(Req(1), _payload(1))
+
+    def fwd(batch):
+        raise RuntimeError("RESOURCE_EXHAUSTED")
+
+    out = mb.step(fwd)
+    assert out == []
+    assert seen == [("oom", (0, 1))]
+    assert sorted(mb.queue.failed) == [0, 1]
+    assert mb.fault_counts["oom"] == 1
+    assert _conserved(mb)
+
+
+def test_drop_largest_bucket_splits_oversized_group():
+    """Degraded mode mid-retry: an admitted group larger than the shrunk
+    bucket set is split (no failure implied) and every request serves."""
+    def on_fault(kind, exc, uids):
+        mb.drop_largest_bucket()     # 4 is gone; group of 3 must split
+        return False
+
+    clock = Clock()
+    mb = Microbatcher((1, 2, 4), clock=clock, retry=RetryPolicy(),
+                      advance=clock.advance_to, on_fault=on_fault)
+    for uid in range(3):
+        mb.submit(Req(uid), _payload(uid))
+    boom = [1]
+
+    def fwd(batch):
+        if boom[0]:
+            boom[0] -= 1
+            raise RuntimeError("RESOURCE_EXHAUSTED: bucket too big")
+        return batch
+
+    served = []
+    while len(mb.queue):
+        served += [r.uid for r, _ in mb.step(fwd)]
+    assert sorted(served) == [0, 1, 2]
+    assert mb.buckets == (1, 2)
+    assert max(b for b, cnt in mb.bucket_counts.items() if cnt) <= 2
+    assert _conserved(mb)
+
+
+def test_stats_carries_resilience_counters():
+    clock, mb = _mb()
+    s = mb.stats()
+    for key in ("requests_failed", "retries", "bisections", "quarantined",
+                "fault_counts"):
+        assert key in s, key
