@@ -25,6 +25,13 @@ median (dominated by untouched paths) stays put; a slow runner shifts
 everything and cancels.  ``--absolute`` skips calibration for same-machine
 comparisons (local full runs against the committed record).
 
+Traffic rows (``hbm_model_bytes``, from the whole-network fusion traffic
+model) are deterministic arithmetic, not measurements: they are judged
+absolutely (lower-is-better, no calibration, no slack) AND excluded from
+the calibration median -- a block of exactly-1.0 ratios would otherwise
+poison the machine-speed estimate on any runner slower or faster than
+the baseline machine.
+
 Fewer than ``--min-rows`` common rows means the records are not
 comparable (schema drift, wrong file) -- the gate SKIPS rather than
 passes vacuously, and says so.
@@ -60,8 +67,23 @@ CHAOS_SLACK = LATENCY_SLACK
 
 
 def lower_is_better(key: Key) -> bool:
-    """True for rows where a SMALLER value is the improvement (latency)."""
-    return key[0] == "loadgen" and key[-1] in LOWER_IS_BETTER
+    """True for rows where a SMALLER value is the improvement (latency,
+    modeled HBM bytes)."""
+    return (key[0] == "traffic"
+            or (key[0] == "loadgen" and key[-1] in LOWER_IS_BETTER))
+
+
+def is_deterministic(key: Key) -> bool:
+    """True for rows that are MODEL outputs, not measurements.
+
+    Traffic rows (``hbm_model_bytes``) are machine-independent arithmetic:
+    they are judged ABSOLUTELY (no machine calibration applies to them)
+    and -- critically -- excluded from the calibration median.  Folding
+    their exactly-1.0 ratios into the median would drag the estimated
+    machine-speed factor toward 1.0 on a slow runner and flag every
+    honest measured row as a regression.
+    """
+    return key[0] == "traffic"
 
 
 def is_chaos(key: Key) -> bool:
@@ -94,6 +116,10 @@ def bench_rows(payload: dict) -> Dict[Key, float]:
             if r.get(metric):
                 rows[("loadgen", r["model"], r["policy"], r["trace"],
                       metric)] = float(r[metric])
+    for r in payload.get("traffic", []):
+        if r.get("fused_bytes"):
+            rows[("traffic", r["model"], r["policy"],
+                  "hbm_model_bytes")] = float(r["fused_bytes"])
     return rows
 
 
@@ -117,11 +143,15 @@ def gate(baseline: dict, new: dict, *, threshold: float = DEFAULT_THRESHOLD,
     # (baseline/new), and the one calibration median judges both kinds
     ratios = {k: (base_rows[k] / new_rows[k] if lower_is_better(k)
                   else new_rows[k] / base_rows[k]) for k in common}
-    calibration = 1.0 if absolute else statistics.median(ratios.values())
+    measured = [v for k, v in ratios.items() if not is_deterministic(k)]
+    calibration = 1.0 if absolute or not measured \
+        else statistics.median(measured)
     rows, failures = [], []
     for k in common:
-        rel = ratios[k] / calibration
-        bar = (threshold * min(LATENCY_SLACK if lower_is_better(k) else 1.0,
+        rel = ratios[k] / (1.0 if is_deterministic(k) else calibration)
+        bar = (threshold * min(LATENCY_SLACK if (lower_is_better(k)
+                                                 and not is_deterministic(k))
+                               else 1.0,
                                CHAOS_SLACK if is_chaos(k) else 1.0))
         row = {"key": list(k), "baseline": base_rows[k], "new": new_rows[k],
                "ratio": round(ratios[k], 4), "relative": round(rel, 4),
@@ -142,6 +172,8 @@ def _fmt_key(key) -> str:
 def _unit(key) -> str:
     if key[0] == "loadgen":
         return "ms" if key[-1] in LOWER_IS_BETTER else "req/s"
+    if key[0] == "traffic":
+        return "bytes"
     return "img/s"
 
 

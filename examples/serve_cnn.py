@@ -16,10 +16,18 @@ The CNN serving path (DESIGN.md section 9) in one script:
     overhead -- the serving-side counterpart of the per-layer cost rows in
     ``benchmarks/table_convnets.py``.
 
+  * ``--explore`` prints the per-layer plan summary before serving --
+    one line per conv geometry with the chosen engine, tile block and
+    epilogue ``fusion`` (``bias_relu`` / ``pool`` / ``pool_quant``, the
+    cross-layer fused dataflow of DESIGN.md section 7.7); add
+    ``--requant`` to let the explorer pick the pool_quant handoff.
+
 Run:  PYTHONPATH=src python examples/serve_cnn.py
       PYTHONPATH=src python examples/serve_cnn.py --arch vgg16 --requests 12
       PYTHONPATH=src python examples/serve_cnn.py --arch alexnet \\
           --policy kom_int14 --conv-path im2col --buckets 1,4,8
+      PYTHONPATH=src python examples/serve_cnn.py --arch vgg16 \\
+          --policy kom_int14 --explore --model-only --requant
 """
 import sys
 

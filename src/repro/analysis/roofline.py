@@ -156,7 +156,8 @@ def conv_mult_counts(path: str, *, kh, kw, stride, h, cin, cout,
 
 def conv_layer_roofline(path: str, *, kh, kw, stride, h, cin, cout,
                         variant: str = "karatsuba", base_bits: int = 7,
-                        n: int = 1) -> Dict[str, float]:
+                        n: int = 1, fusion: str = "bias_relu",
+                        handoff_in: bool = False) -> Dict[str, float]:
     """v5e roofline floor for one conv layer on engine ``path`` (seconds).
 
     compute_s prices the engine's wide multiplies (2 flops each) times the
@@ -166,6 +167,12 @@ def conv_layer_roofline(path: str, *, kh, kw, stride, h, cin, cout,
     the perfect-overlap assumption the step-time roofline above uses.
     Benchmark layer records divide this into the measured wall to report
     an achieved-vs-roofline fraction per (layer, path).
+
+    ``fusion``/``handoff_in`` thread through to the traffic model: a
+    pool/pool_quant epilogue shrinks the output write and a handoff input
+    halves the A-side reads, moving the memory_s floor (the multiply
+    count is unchanged -- fusion is a dataflow choice, not an arithmetic
+    one).
     """
     from repro.core.tuning import conv_hbm_bytes
 
@@ -176,7 +183,8 @@ def conv_layer_roofline(path: str, *, kh, kw, stride, h, cin, cout,
     compute_s = 2.0 * counts["mults"] * (passes or 1) / peak
     memory_s = conv_hbm_bytes(path, kh=kh, kw=kw, stride=stride, h=h,
                               cin=cin, cout=cout, variant=variant,
-                              base_bits=base_bits, n=n) / V5E["hbm_bw"]
+                              base_bits=base_bits, n=n, fusion=fusion,
+                              handoff_in=handoff_in) / V5E["hbm_bw"]
     return {"compute_s": compute_s, "memory_s": memory_s,
             "roofline_s": max(compute_s, memory_s), **counts}
 

@@ -1,0 +1,139 @@
+"""Whole-network HBM traffic model: per-layer bytes under a fusion plan.
+
+:func:`repro.core.tuning.conv_hbm_bytes` models ONE conv call.  This module
+walks a whole CNN (:func:`repro.models.cnn.cnn_layer_topology`) under an
+:class:`~repro.core.planner.ExecutionPlan` and prices what each layer's
+chosen ``fusion`` actually moves (DESIGN.md 7.7):
+
+* an unfused maxpool is its own HBM round-trip (read the full f32 conv
+  output, write the pooled quarter back);
+* ``fusion="pool"`` folds that pool into the conv epilogue, so only the
+  pooled f32 tensor is ever written;
+* ``fusion="pool_quant"`` additionally emits the NEXT layer's quantized
+  activations -- padded int16 values plus the f32 tile-scale grid -- and
+  the consumer's A-side reads halve (``handoff_in``).
+
+The effective fusion at each conv POSITION mirrors ``cnn_forward``'s
+runtime rule exactly: plan entries are keyed by (deduped) geometry, so a
+pool fusion only fires where the topology has a maxpool next, and
+pool_quant only where an eligible 3x3/s1 consumer follows under an integer
+policy.  ``model_traffic(cfg, plan, fused=False)`` prices the UNFUSED
+reference pipeline for the same plan -- the pair is the modeled side of
+``table_convnets``' modeled-vs-measured traffic rows and the perf gate's
+``hbm_model_bytes`` rows.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.planner import _policy_variant, geometry_key, resolve_plan
+from repro.core.substrate import policy_int_spec
+from repro.core.tuning import conv_hbm_bytes
+from repro.models.cnn import cnn_layer_topology
+
+_GKEYS = ("kh", "kw", "stride", "h", "cin", "cout", "padding")
+
+
+def _pool_pass_bytes(t: dict, n: int) -> int:
+    """HBM round-trip of the standalone 2x2/s2 maxpool after conv ``t``."""
+    ho = ((t["h"] - t["kh"]) // t["stride"] + 1) if t["padding"] == "VALID" \
+        else -(-t["h"] // t["stride"])
+    hp = max(ho // 2, 1)
+    c = t["cout"]
+    return (n * ho * ho * c + n * hp * hp * c) * 4
+
+
+def _handoff_pass_bytes(t: dict, n: int) -> int:
+    """HBM round-trip of the standalone handoff_quantize after the pool."""
+    ho = ((t["h"] - t["kh"]) // t["stride"] + 1) if t["padding"] == "VALID" \
+        else -(-t["h"] // t["stride"])
+    hp = max(ho // 2, 1)
+    c = t["cout"]
+    read = n * hp * hp * c * 4
+    write = (n * (hp + 2) * (hp + 2) * c * 2
+             + n * -(-hp // 2) * -(-hp // 2) * 4)
+    return read + write
+
+
+def model_traffic(cfg, plan=None, *, n: int = 1, fused: bool = True) -> Dict:
+    """Per-layer and total modeled HBM bytes for one forward pass of ``cfg``.
+
+    ``plan`` resolves through the standard chain (explicit > committed >
+    heuristic).  ``fused=False`` prices the unfused reference pipeline for
+    the SAME plan: every fusion demoted to ``bias_relu``, each following
+    maxpool (and, for pool_quant entries, the handoff quantization) run as
+    separate HBM round-trips.  Returns::
+
+        {"model", "policy", "fused", "n", "layers": [per-position rows],
+         "total_bytes", "pooled_total_bytes"}
+
+    where ``pooled_total_bytes`` sums only the pool-followed conv
+    positions (conv + pool + handoff bytes) -- the slice the >=30%%
+    fused-vs-unfused reduction claim is made on.
+    """
+    plan = resolve_plan(cfg, plan)
+    variant, base_bits = _policy_variant(cfg.policy)
+    int_policy = policy_int_spec(cfg.policy) is not None
+    topo = cnn_layer_topology(cfg)
+    rows: List[dict] = []
+    handoff_next_in = False  # the previous position emitted a handoff
+    total = pooled_total = 0
+    for t in topo:
+        key = geometry_key(**{k: t[k] for k in _GKEYS})
+        ent = plan.by_key.get(key)
+        path = ent.path if ent is not None else "im2col"
+        fusion = ent.fusion if ent is not None else "bias_relu"
+        handoff_in = handoff_next_in
+        if handoff_in:
+            # A QActivation input is an implicit-engine contract --
+            # cnn_forward forces the path at the consuming position.
+            path = "implicit"
+        do_pool = (fused and fusion in ("pool", "pool_quant")
+                   and path == "implicit" and t["pool_after"])
+        do_quant = (do_pool and fusion == "pool_quant" and int_policy
+                    and t["handoff_next"])
+        eff = "pool_quant" if do_quant else ("pool" if do_pool else (
+            fusion if fusion in ("none", "bias_relu") else "bias_relu"))
+        shape = {k: t[k] for k in ("kh", "kw", "stride", "h", "cin", "cout")}
+        conv_bytes = conv_hbm_bytes(path, variant=variant,
+                                    base_bits=base_bits, n=n, fusion=eff,
+                                    handoff_in=handoff_in, **shape)
+        pool_bytes = _pool_pass_bytes(t, n) \
+            if (t["pool_after"] and not do_pool) else 0
+        # The unfused reference still quantizes the handoff when the plan
+        # asked for pool_quant (shared recipe, bitwise contract) -- as its
+        # own pass.
+        unfused_quant = (not do_quant and fusion == "pool_quant"
+                         and int_policy and t["handoff_next"])
+        quant_bytes = _handoff_pass_bytes(t, n) if unfused_quant else 0
+        layer_total = conv_bytes + pool_bytes + quant_bytes
+        rows.append(dict(key=key, path=path, fusion=eff,
+                         handoff_in=handoff_in, pool_after=t["pool_after"],
+                         conv_bytes=conv_bytes, pool_bytes=pool_bytes,
+                         quant_bytes=quant_bytes, total_bytes=layer_total))
+        total += layer_total
+        if t["pool_after"]:
+            pooled_total += layer_total
+        handoff_next_in = do_quant or unfused_quant
+    return {"model": cfg.name,
+            "policy": getattr(cfg.policy, "value", cfg.policy),
+            "fused": fused, "n": n, "layers": rows,
+            "total_bytes": total, "pooled_total_bytes": pooled_total}
+
+
+def fusion_traffic_report(cfg, plan=None, *, n: int = 1) -> Dict:
+    """Fused-vs-unfused modeled traffic for one (model, plan): the summary
+    the benchmark table and the perf gate's ``hbm_model_bytes`` rows print.
+    """
+    f = model_traffic(cfg, plan, n=n, fused=True)
+    u = model_traffic(cfg, plan, n=n, fused=False)
+    def _red(a, b):
+        return round(1.0 - a / b, 4) if b else 0.0
+    return {"model": f["model"], "policy": f["policy"], "n": n,
+            "fused_bytes": f["total_bytes"],
+            "unfused_bytes": u["total_bytes"],
+            "reduction": _red(f["total_bytes"], u["total_bytes"]),
+            "pooled_fused_bytes": f["pooled_total_bytes"],
+            "pooled_unfused_bytes": u["pooled_total_bytes"],
+            "pooled_reduction": _red(f["pooled_total_bytes"],
+                                     u["pooled_total_bytes"])}

@@ -54,7 +54,9 @@ import pathlib
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from .substrate import (
+    FUSIONS,
     INT_POLICY_SPECS,
+    path_supports_fusion,
     path_supports_policy,
     policy_int_spec,
     select_conv_path,
@@ -86,7 +88,9 @@ class LayerPlan:
     key: str                 # geometry key, :func:`geometry_key`
     path: str                # im2col | systolic | implicit | winograd
     block: Optional[tuple]   # tile schedule for `path` (None: tuner/default)
-    fusion: str = "bias_relu"        # "bias_relu" | "none"
+    fusion: str = "bias_relu"        # one of substrate.FUSIONS: "none" |
+    #   "bias_relu" | "pool" | "pool_quant" (pool fusions: implicit only,
+    #   applied where the topology has a maxpool next -- DESIGN.md 7.7)
     est_us: Optional[float] = None   # scored cost (measured or modeled)
     hbm_bytes: Optional[int] = None  # modeled HBM traffic per image
     roofline_us: Optional[float] = None
@@ -266,10 +270,21 @@ def materialized_fallback_plan(plan: ExecutionPlan) -> ExecutionPlan:
     request retried on the degraded plan produces logits bitwise identical
     to the healthy plan.  Blocks are cleared so the tuner re-picks
     im2col-feasible tiles.
+
+    Pool fusions are downgraded to ``bias_relu``: im2col has no pooled
+    epilogue (``path_supports_fusion``), so the pool runs as its own
+    ``pool2d`` pass.  For ``"pool"`` plans that is still bitwise (max is
+    exact selection); a ``"pool_quant"`` plan is the ONE case where the
+    degraded plan's logits may differ bitwise from the healthy plan's,
+    because the healthy plan's handoff quantization recipe (DESIGN.md
+    7.7) no longer runs -- a documented carve-out of the degrade
+    contract.
     """
-    entries = tuple(dataclasses.replace(e, path="im2col", block=None,
-                                        est_us=None, roofline_frac=None,
-                                        source="fallback")
+    entries = tuple(dataclasses.replace(
+        e, path="im2col", block=None, est_us=None, roofline_frac=None,
+        fusion="bias_relu" if e.fusion in ("pool", "pool_quant")
+        else e.fusion,
+        source="fallback")
                     for e in plan.entries)
     return dataclasses.replace(plan, entries=entries)
 
@@ -382,7 +397,7 @@ def _measure_paths(paths, *, kh, kw, stride, h, cin, cout, padding, policy,
 
 
 def explore(cfg, *, model_only: bool = False, backend: Optional[str] = None,
-            iters: int = 3, tune_tiles: bool = True,
+            iters: int = 3, tune_tiles: bool = True, requant: bool = False,
             verbose: bool = False) -> ExecutionPlan:
     """Jointly search path x tile x fusion per conv layer of ``cfg``.
 
@@ -393,13 +408,25 @@ def explore(cfg, *, model_only: bool = False, backend: Optional[str] = None,
     public ``conv2d`` on THIS backend and the winning engine's tile
     schedule is refined with the tuner's measured sweep.
 
+    The fusion axis is decided from the model topology
+    (:func:`repro.models.cnn.cnn_layer_topology`): an implicit-path layer
+    whose next layer is the 2x2/s2 maxpool gets ``fusion="pool"`` (bitwise
+    free, ~4x smaller output write -- DESIGN.md 7.7).  With
+    ``requant=True`` a pool-fused layer feeding an eligible 3x3/s1
+    consumer under an integer policy upgrades to ``"pool_quant"`` -- the
+    conv epilogue also emits the NEXT layer's quantized activations.
+    ``pool_quant`` is a quantization-recipe change (the consumer reads
+    handoff-quantized ints rather than re-quantizing f32), so it is
+    opt-in: plans built with ``requant=False`` stay bitwise identical to
+    per-call auto dispatch.
+
     Every conv layer gets an entry -- layers whose candidates all fail to
     score fall back to the heuristic with ``source="default"`` and are
     logged, so a committed plan cannot hide a silent coverage gap (the old
     ``tune_config`` loop skipped un-tunable layers silently).
     """
     from repro.analysis.roofline import conv_layer_roofline
-    from repro.models.cnn import cnn_conv_geometries
+    from repro.models.cnn import cnn_conv_geometries, cnn_layer_topology
 
     from .tuning import conv_hbm_bytes, resolve_block, tune_layer
 
@@ -407,8 +434,27 @@ def explore(cfg, *, model_only: bool = False, backend: Optional[str] = None,
         import jax
         backend = jax.default_backend()
     variant, base_bits = _policy_variant(cfg.policy)
+    is_int = getattr(cfg.policy, "value", cfg.policy) in INT_POLICY_SPECS
+    topo = cnn_layer_topology(cfg)
+    pool_keys = {geometry_key(**{k: t[k] for k in
+                                 ("kh", "kw", "stride", "h", "cin", "cout",
+                                  "padding")})
+                 for t in topo if t["pool_after"]}
+    # (producer key, consumer key) handoff pairs: position i's pool_quant
+    # output is position i+1's int input.  Producers precede consumers in
+    # geometry order, so `planned` below is filled by the time a consumer
+    # key is scored.
+    def _tkey(t):
+        return geometry_key(**{k: t[k] for k in
+                               ("kh", "kw", "stride", "h", "cin", "cout",
+                                "padding")})
+    handoff_pairs = [( _tkey(topo[i]), _tkey(topo[i + 1]))
+                     for i in range(len(topo) - 1)
+                     if topo[i]["handoff_next"]]
+    producer_keys = {p for p, _ in handoff_pairs}
     fallback = heuristic_plan(cfg, backend=backend)
     entries: List[LayerPlan] = []
+    planned: Dict[str, str] = {}
     seen = set()
     for g in cnn_conv_geometries(cfg):
         key = geometry_key(**g)
@@ -445,6 +491,17 @@ def explore(cfg, *, model_only: bool = False, backend: Optional[str] = None,
                   f"falling back to heuristic path {ent.path!r} "
                   f"(source=default)")
             best_path, est_us, source = ent.path, None, "default"
+        # Fusion axis: topology-driven.  The pooled epilogue is an
+        # implicit-engine contract and strictly shrinks the output write,
+        # so any pool-followed implicit layer takes it; pool_quant
+        # (requant-gated) additionally needs an eligible consumer.
+        if best_path == "implicit" and key in pool_keys:
+            fusion = "pool"
+            if requant and is_int and key in producer_keys:
+                fusion = "pool_quant"
+        planned[key] = fusion
+        handoff_in = any(planned.get(p) == "pool_quant"
+                         for p, c in handoff_pairs if c == key)
         block = None
         if best_path in TUNABLE_KINDS:
             if not model_only and tune_tiles:
@@ -460,7 +517,8 @@ def explore(cfg, *, model_only: bool = False, backend: Optional[str] = None,
             key=key, path=best_path, block=block, fusion=fusion,
             est_us=round(est_us, 3) if est_us is not None else None,
             hbm_bytes=conv_hbm_bytes(best_path, variant=variant,
-                                     base_bits=base_bits, **shape),
+                                     base_bits=base_bits, fusion=fusion,
+                                     handoff_in=handoff_in, **shape),
             roofline_us=round(roof_us, 3) if roof_us is not None else None,
             roofline_frac=(round(roof_us / est_us, 6)
                            if source == "measured" and est_us else None),
@@ -612,11 +670,16 @@ def check(paths: Optional[Iterable[os.PathLike]] = None) -> List[str]:
     the model resolves in the registry, every conv layer geometry of the
     full-size config has an entry (``source`` tags make partial coverage
     an error, not a silent gap), each entry's engine runs the plan's
-    policy exactly, tile blocks pass the tuner's VMEM feasibility model,
-    and the exactness bound of the chosen engine holds (< 2^31).
+    policy exactly, its ``fusion`` is one the engine can implement
+    (``path_supports_fusion`` -- pool_quant on the systolic path must
+    fail) AND one the model topology supports (pool fusions only where a
+    maxpool actually follows; pool_quant only under an integer policy
+    with an eligible handoff consumer), tile blocks pass the tuner's VMEM
+    feasibility model under that fusion, and the exactness bound of the
+    chosen engine holds (< 2^31).
     """
     from repro.configs import get_config
-    from repro.models.cnn import cnn_conv_geometries
+    from repro.models.cnn import cnn_conv_geometries, cnn_layer_topology
 
     from .tuning import feasible
 
@@ -645,6 +708,13 @@ def check(paths: Optional[Iterable[os.PathLike]] = None) -> List[str]:
                 continue
             cfg = cfg.replace(policy=_as_policy(plan.policy, errors, where))
             variant, base_bits = _policy_variant(plan.policy)
+            is_int = plan.policy in INT_POLICY_SPECS
+            topo = cnn_layer_topology(cfg)
+            _gkeys = ("kh", "kw", "stride", "h", "cin", "cout", "padding")
+            pool_keys = {geometry_key(**{k: t[k] for k in _gkeys})
+                         for t in topo if t["pool_after"]}
+            producer_keys = {geometry_key(**{k: t[k] for k in _gkeys})
+                             for t in topo if t["handoff_next"]}
             want = {}
             for g in cnn_conv_geometries(cfg):
                 want.setdefault(geometry_key(**g), g)
@@ -661,6 +731,30 @@ def check(paths: Optional[Iterable[os.PathLike]] = None) -> List[str]:
                     errors.append(f"{where}/{key}: path {ent.path!r} cannot "
                                   f"run policy {plan.policy!r} exactly")
                     continue
+                if ent.fusion not in FUSIONS:
+                    errors.append(f"{where}/{key}: unknown fusion "
+                                  f"{ent.fusion!r} (expected one of "
+                                  f"{list(FUSIONS)})")
+                    continue
+                if not path_supports_fusion(ent.path, ent.fusion):
+                    errors.append(
+                        f"{where}/{key}: fusion {ent.fusion!r} is not "
+                        f"implementable by path {ent.path!r} (pooled "
+                        "epilogue is implicit-engine only)")
+                if ent.fusion in ("pool", "pool_quant") \
+                        and key not in pool_keys:
+                    errors.append(
+                        f"{where}/{key}: fusion {ent.fusion!r} but no "
+                        f"maxpool follows this geometry in {plan.model}")
+                if ent.fusion == "pool_quant":
+                    if not is_int:
+                        errors.append(
+                            f"{where}/{key}: pool_quant needs an integer "
+                            f"policy, plan is {plan.policy!r}")
+                    elif key not in producer_keys:
+                        errors.append(
+                            f"{where}/{key}: pool_quant but no eligible "
+                            "3x3/s1 handoff consumer follows")
                 bound = _entry_bound(ent.path, kh=g["kh"], kw=g["kw"],
                                      cin=g["cin"], variant=variant,
                                      base_bits=base_bits)
@@ -669,11 +763,15 @@ def check(paths: Optional[Iterable[os.PathLike]] = None) -> List[str]:
                         f"{where}/{key}: {ent.path} accumulation bound "
                         f"{bound:.3g} wraps int32")
                 if ent.path in TUNABLE_KINDS and ent.block is not None:
+                    fus = ent.fusion if ent.fusion in FUSIONS \
+                        and path_supports_fusion(ent.path, ent.fusion) \
+                        else "bias_relu"
                     ok, why = feasible(
                         ent.path, kh=g["kh"], kw=g["kw"],
                         stride=g["stride"], h=g["h"], cin=g["cin"],
                         cout=g["cout"], variant=variant,
-                        base_bits=base_bits, block=tuple(ent.block))
+                        base_bits=base_bits, block=tuple(ent.block),
+                        fusion=fus)
                     if not ok:
                         errors.append(f"{where}/{key}: block "
                                       f"{list(ent.block)} -- {why}")
@@ -709,6 +807,10 @@ def main(argv=None) -> int:
     ap.add_argument("--policies", nargs="*",
                     default=["kom_int14", "schoolbook_int16"])
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--requant", action="store_true",
+                    help="allow pool_quant fusion (the cross-layer handoff "
+                         "quantization recipe -- changes the consumer's "
+                         "activation quantization, see DESIGN.md 7.7)")
     ap.add_argument("--out", default=None,
                     help="artifact path (default benchmarks/tuned/plans/"
                          "<backend>.json)")
@@ -734,11 +836,13 @@ def main(argv=None) -> int:
                 print(f"[planner] exploring {name}|{pv} "
                       f"({'cost model' if args.model_only else 'measured'})")
                 plan = explore(cfg, model_only=args.model_only,
-                               iters=args.iters, verbose=args.verbose)
+                               iters=args.iters, requant=args.requant,
+                               verbose=args.verbose)
                 for e in plan.entries:
                     blk = list(e.block) if e.block else "-"
                     print(f"  {e.key}: {e.path} block={blk} "
-                          f"est_us={e.est_us} source={e.source}")
+                          f"fusion={e.fusion} est_us={e.est_us} "
+                          f"source={e.source}")
                 plans.append(plan)
         out = save_plans(plans, path=args.out)
         print(f"[planner] wrote {out}")

@@ -98,6 +98,37 @@ def path_supports_policy(path: str, policy) -> bool:
     raise ValueError(f"unknown conv path: {path!r}")
 
 
+#: Epilogue fusion levels a plan entry may record (DESIGN.md section 7.7).
+#: "bias_relu" is the PR-3 default (dequant+bias+relu in one write);
+#: "none" models the unfused three-round-trip epilogue; "pool" folds the
+#: following 2x2/s2 (or 3x3/s2) maxpool into the conv's epilogue before the
+#: HBM writeback; "pool_quant" additionally quantizes the pooled tile with
+#: the NEXT layer's tile-granular scale grid, handing the downstream conv a
+#: :class:`QActivation` (int16 values + scale grid) instead of f32.
+FUSIONS = ("none", "bias_relu", "pool", "pool_quant")
+
+
+def path_supports_fusion(path: str, fusion: str) -> bool:
+    """True iff conv engine ``path`` implements epilogue level ``fusion``.
+
+    THE path x fusion capability table, the fusion analogue of
+    :func:`path_supports_policy` -- ``conv2d``'s kwarg guards, the
+    planner's candidate axis and ``planner --check``'s artifact
+    validation all consult this one definition.  Every engine fuses
+    dequant+bias+relu ("bias_relu", and trivially "none"); only the
+    implicit-GEMM engine pools (and hands off quantized activations) in
+    its epilogue -- its dual row-block halo binding is what resolves pool
+    windows straddling row-block seams (DESIGN.md section 7.7).
+    """
+    if fusion not in FUSIONS:
+        raise ValueError(f"unknown fusion: {fusion!r}")
+    if path in ("auto", "im2col", "systolic", "winograd"):
+        return fusion in ("none", "bias_relu")
+    if path == "implicit":
+        return True
+    raise ValueError(f"unknown conv path: {path!r}")
+
+
 def validate_path_policy(path: str, policy) -> None:
     """Raise ValueError when an EXPLICIT ``path`` cannot run ``policy`` exactly.
 
@@ -404,6 +435,54 @@ def dequantize_weight(w: QWeight) -> jax.Array:
     return w.values.astype(jnp.float32) * w.scale
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["values", "scale"],
+    meta_fields=["base_bits", "h", "w"],
+)
+@dataclasses.dataclass(frozen=True)
+class QActivation:
+    """A pre-quantized activation handed between fused conv layers.
+
+    Produced by the ``pool_quant`` epilogue fusion (DESIGN.md section 7.7):
+    the conv that FEEDS a ``3x3/s1/SAME`` int layer quantizes its pooled
+    output once per pixel with the consumer's tile-granular scale plan
+    (DESIGN.md section 7.5), so the consumer reads int16 + a small scale
+    grid from HBM instead of f32.
+
+    ``values`` is the consumer's PADDED input, already SAME-padded for the
+    3x3/s1 conv, quantized per pixel: shape (n, h+2, w+2, c) int16, where
+    pixel (py, px) used the 4x4/s2 cell scale
+    ``scale[n, min(py//2, th-1), min(px//2, tw-1)]`` (every pixel sits
+    inside its cell's 4x4 amax window, so |q| <= kom_qmax(base_bits)).
+    ``scale`` is that (n, th, tw) f32 grid with th=ceil(h/2), tw=ceil(w/2).
+    ``h``/``w`` are the true UNPADDED spatial dims (static, like
+    ``base_bits``), so plan lookups and shape checks see the logical
+    activation.  Padding rows/cols quantize to exactly 0 (round(0/s) == 0),
+    which is why storing the padded tensor is bitwise-equivalent to
+    re-padding an unpadded one with integer zeros.
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    base_bits: int = 7
+    h: int = 0
+    w: int = 0
+
+    @property
+    def shape(self):
+        n = self.values.shape[0]
+        return (n, self.h, self.w, self.values.shape[3])
+
+    @property
+    def ndim(self):
+        return 4
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+
 @jax.custom_vjp
 def _inference_only(x):
     """Identity whose backward pass raises: quantized round/clip would
@@ -590,6 +669,9 @@ def conv2d(
     bias: jax.Array | None = None,
     activation: Optional[str] = None,
     interpret: bool | None = None,
+    pool: tuple | None = None,
+    quantize_next: int | None = None,
+    k_pipeline: bool = True,
 ):
     """NHWC conv behind one policy-driven entry point, epilogue fused.
 
@@ -615,6 +697,16 @@ def conv2d(
     engine choice with an unimplemented policy raises through
     :func:`validate_path_policy` rather than silently downgrading to
     native dots.
+
+    The implicit engine's deeper epilogue fusions (DESIGN.md section 7.7):
+    ``pool=(window, pstride, ppad)`` folds the FOLLOWING maxpool into the
+    conv epilogue (the output is the pooled tensor); ``quantize_next=b``
+    additionally quantizes the (pooled) output with the next 3x3/s1/SAME
+    layer's tile-granular scale plan at ``base_bits=b``, returning a
+    :class:`QActivation`.  A QActivation ``x`` input is the matching
+    consumer side and runs on the implicit engine only.  ``k_pipeline``
+    toggles the implicit kernel's double-buffered DMA pipelining across
+    K steps (planner-visible; a no-op off-TPU).
     """
     # Lazy imports: systolic/kernels import this module for the limb core,
     # and the planner imports this module for the dispatch primitives.
@@ -623,6 +715,14 @@ def conv2d(
         conv2d_implicit, conv2d_systolic, conv2d_winograd)
 
     kh, kw, cin, cout = w.shape
+    if isinstance(x, QActivation):
+        if path in ("auto", "implicit"):
+            path = "implicit"
+        else:
+            raise ValueError(
+                f"path={path!r} cannot consume a QActivation: pre-quantized "
+                "handoff activations are an implicit-engine contract "
+                "(DESIGN.md section 7.7)")
     if path == "auto":
         from .planner import heuristic_path
         path = heuristic_path(kh=kh, kw=kw, stride=stride, cin=cin,
@@ -633,6 +733,13 @@ def conv2d(
         # exactly -- reroute to im2col, which honors every policy.
         if not path_supports_policy(path, policy):
             path = "im2col"
+    if pool is not None or quantize_next is not None:
+        want = "pool_quant" if quantize_next is not None else "pool"
+        if not path_supports_fusion(path, want):
+            raise ValueError(
+                f"path={path!r} does not implement the {want!r} epilogue "
+                "fusion; only the implicit engine pools/quantizes in its "
+                "epilogue (DESIGN.md section 7.7)")
     if path == "im2col":
         return conv2d_im2col(x, w, stride=stride, padding=padding,
                              policy=policy, bias=bias, activation=activation)
@@ -663,6 +770,7 @@ def conv2d(
             x, w, stride=stride, padding=padding, block=block,
             variant=variant, base_bits=base_bits,
             bias=bias, activation=activation, interpret=interpret,
+            pool=pool, quantize_next=quantize_next, k_pipeline=k_pipeline,
         )
     if path == "winograd":
         variant, base_bits = spec

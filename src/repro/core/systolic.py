@@ -128,7 +128,8 @@ def conv2d_im2col(
     return out
 
 
-def pool2d(x: jax.Array, *, window: int, stride: int, kind: str = "max") -> jax.Array:
+def pool2d(x: jax.Array, *, window: int, stride: int, kind: str = "max",
+           padding: str = "VALID") -> jax.Array:
     """NHWC pooling on the same engine (reduce cells instead of MAC cells)."""
     if kind == "max":
         init, op = -jnp.inf, lax.max
@@ -142,7 +143,7 @@ def pool2d(x: jax.Array, *, window: int, stride: int, kind: str = "max") -> jax.
         op,
         window_dimensions=(1, window, window, 1),
         window_strides=(1, stride, stride, 1),
-        padding="VALID",
+        padding=padding,
     )
     if kind == "avg":
         out = out / (window * window)

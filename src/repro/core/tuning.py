@@ -82,24 +82,34 @@ def _max_cin_block(kh, kw, variant, base_bits):
 # ---------------------------------------------------------------------------
 
 def implicit_vmem_bytes(*, kh, kw, stride, w_img, cin, cout, bm, bc, bk,
-                        variant) -> int:
+                        variant, fusion: str = "bias_relu") -> int:
     """VMEM working set of one implicit-GEMM grid step (model, not measured).
 
     Dual f32 halo row-blocks + streamed weight block (int16 for the limb
     variants) + output block + scratch accumulators (3x int32 + f32 group
     accumulator for integer variants, one f32 otherwise), with double
-    buffering on the pipelined operands.
+    buffering on the pipelined operands.  A ``pool``/``pool_quant`` fusion
+    prices the pooled epilogue: one overhang conv row on the scratch
+    accumulator (the 3x2 window's dual-halo borrow), the activation scale
+    grid bound TWICE (this row block + the next, so a pool window may
+    straddle the seam), and the pooled (bm/2, wo/2) output tile in place
+    of the full conv tile.
     """
     integer = variant in _INT_VARIANTS
+    pooled = fusion in ("pool", "pool_quant")
     wp = w_img + kw  # upper bound on the SAME-padded width
     wo = max((wp - kw) // stride + 1, 1)
     bk = min(bk, cin)
     bc = min(bc, cout)
-    x_blk = 2 * _tile_bytes((bm * stride, wp, bk), 4)
+    bm_e = bm + 1 if pooled else bm  # overhang row of the pooled epilogue
+    x_blk = 2 * _tile_bytes((bm_e * stride, wp, bk), 4)
     w_blk = _tile_bytes((kh * kw * bk, bc), 2 if integer else 4)
-    o_blk = _tile_bytes((bm * wo, bc), 4)
-    acc = (4 if integer else 1) * _tile_bytes((bm * wo, bc), 4)
-    scales = (_tile_bytes((bm, wo), 4) + _tile_bytes((1, bc), 4)) if integer else 0
+    o_rows, o_cols = (max(bm // 2, 1), max(wo // 2, 1)) if pooled \
+        else (bm, wo)
+    o_blk = _tile_bytes((o_rows * o_cols, bc), 4)
+    acc = (4 if integer else 1) * _tile_bytes((bm_e * wo, bc), 4)
+    scales = ((2 if pooled else 1) * _tile_bytes((bm_e, wo), 4)
+              + _tile_bytes((1, bc), 4)) if integer else 0
     return 2 * (x_blk + w_blk) + 2 * o_blk + acc + scales
 
 
@@ -141,8 +151,17 @@ def winograd_vmem_bytes(*, kh, kw, stride, w_img, cin, cout, bt, bc,
 
 
 def feasible(kind: str, *, kh, kw, stride, h, cin, cout, variant,
-             base_bits, block) -> tuple[bool, str]:
-    """(ok, reason): halo rule, wrap-free group rule, VMEM budget."""
+             base_bits, block, fusion: str = "bias_relu"
+             ) -> tuple[bool, str]:
+    """(ok, reason): halo rule, wrap-free group rule, VMEM budget.
+
+    ``fusion``: the planned epilogue.  Pool fusions are an implicit-engine
+    contract (:func:`repro.core.substrate.path_supports_fusion`) and add
+    the pooled-tile/scale-grid terms to the implicit VMEM model.
+    """
+    if fusion in ("pool", "pool_quant") and kind != "implicit":
+        return False, (f"fusion {fusion!r} needs the implicit engine's "
+                       f"pooled epilogue, not {kind!r}")
     if kind == "winograd":
         bt, bc = block
         if kh != 3 or kw != 3 or stride != 1:
@@ -167,7 +186,7 @@ def feasible(kind: str, *, kh, kw, stride, h, cin, cout, variant,
                 return False, f"bk={bk}: one K step would wrap int32 (cap {cap})"
         used = implicit_vmem_bytes(kh=kh, kw=kw, stride=stride, w_img=h,
                                    cin=cin, cout=cout, bm=bm, bc=bc, bk=bk,
-                                   variant=variant)
+                                   variant=variant, fusion=fusion)
     elif kind == "systolic":
         block_h, block_c = block
         if block_h * stride < kh - stride:
@@ -226,7 +245,8 @@ def default_block(kind: str, *, kh, kw, stride, h, cin, cout, variant,
 
 
 def conv_hbm_bytes(path: str, *, kh, kw, stride, h, cin, cout, variant,
-                   base_bits, n: int = 1) -> int:
+                   base_bits, n: int = 1, fusion: str = "bias_relu",
+                   handoff_in: bool = False) -> int:
     """Modeled HBM traffic of one conv call (bytes, batch ``n``, SAME pads).
 
     Both paths are modeled as tiled GEMMs that re-read their A source once
@@ -237,14 +257,47 @@ def conv_hbm_bytes(path: str, *, kh, kw, stride, h, cin, cout, variant,
     the compact NHWC input itself, read twice per pass for the dual
     halo row-blocks.  The absolute numbers are a model, not a measurement;
     the RATIO is the benchmark's HBM-bytes-per-image delta.
+
+    ``fusion`` changes what the epilogue writes back (DESIGN.md 7.7):
+
+    * ``"bias_relu"`` -- the fused default: one f32 output write.
+    * ``"none"`` -- the unfused epilogue re-reads and re-writes the raw
+      conv output for the separate bias+relu pass (+2x output bytes).
+    * ``"pool"`` -- the 2x2/s2 maxpool runs on the output tile in VMEM, so
+      only the POOLED f32 tensor reaches HBM (~1/4 the output bytes).
+    * ``"pool_quant"`` -- the pooled output leaves as the next layer's
+      handoff: consumer-padded int16 values plus the f32 tile-scale grid
+      (~1/8 the f32 bytes).
+
+    ``handoff_in`` models the A side of a handoff CONSUMER: the input is
+    read as padded int16 values + the scale grid instead of f32 (halves
+    every A-source term), and the per-patch activation-scale stream
+    disappears (the cell grid rides the A side).
     """
     integer = variant in _INT_VARIANTS
     ho = -(-h // stride)
     wo = ho
     m = n * ho * wo
     kdim = kh * kw * cin
-    x_bytes = n * h * h * cin * 4
+    if handoff_in:
+        x_bytes = (n * (h + 2) * (h + 2) * cin * 2
+                   + n * -(-h // 2) * -(-h // 2) * 4)
+    else:
+        x_bytes = n * h * h * cin * 4
     out_bytes = m * cout * 4
+    extra = 0
+    if fusion == "none":
+        extra = 2 * out_bytes      # separate bias+relu pass round-trip
+    elif fusion in ("pool", "pool_quant"):
+        hp, wp = max(ho // 2, 1), max(wo // 2, 1)   # 2x2/s2 VALID
+        if fusion == "pool":
+            out_bytes = n * hp * wp * cout * 4
+        else:
+            out_bytes = (n * (hp + 2) * (wp + 2) * cout * 2      # int16
+                         + n * -(-hp // 2) * -(-wp // 2) * 4)    # scale grid
+    elif fusion != "bias_relu":
+        raise ValueError(f"unknown fusion {fusion!r}")
+    out_bytes += extra
     w_elt = 2 if integer else 4
     w_bytes = kdim * cout * w_elt
     if path == "im2col":
@@ -260,7 +313,7 @@ def conv_hbm_bytes(path: str, *, kh, kw, stride, h, cin, cout, variant,
                                   base_bits=base_bits)
         cout_blocks = -(-cout // min(bc, cout))
         row_blocks = n * max(-(-ho // bm), 1)
-        scales = m * 4 if integer else 0
+        scales = m * 4 if integer and not handoff_in else 0
         return (2 * x_bytes * cout_blocks              # dual halo row blocks
                 + w_bytes * row_blocks + out_bytes + scales)
     if path == "systolic":
@@ -273,13 +326,16 @@ def conv_hbm_bytes(path: str, *, kh, kw, stride, h, cin, cout, variant,
         # 16 transformed taps replace the 9 spatial taps, shipped as TWO
         # int16 limb planes; the A source is still the compact NHWC input
         # (dual halo row blocks), and the tile-granular scale grid is a
-        # quarter the size of the implicit path's per-patch scales.
+        # quarter the size of the implicit path's per-patch scales.  The
+        # kernel grid runs batch INNERMOST, so the weight planes are
+        # fetched once per row block and stay resident across the batch:
+        # row_blocks deliberately has NO xN factor.
         bt, bc = default_block("winograd", kh=kh, kw=kw, stride=stride, h=h,
                                cin=cin, cout=cout, variant=variant,
                                base_bits=base_bits)
         th = max(-(-ho // 2), 1)
         cout_blocks = -(-cout // min(bc, cout))
-        row_blocks = n * max(-(-th // bt), 1)
+        row_blocks = max(-(-th // bt), 1)
         wino_w_bytes = 2 * 16 * cin * cout * 2
         scales = n * th * max(-(-wo // 2), 1) * 4 + cout * 4
         return (2 * x_bytes * cout_blocks

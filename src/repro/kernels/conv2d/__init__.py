@@ -1,2 +1,3 @@
-from .ops import conv2d_implicit, conv2d_systolic, conv2d_winograd
+from .ops import (conv2d_implicit, conv2d_systolic, conv2d_winograd,
+                  handoff_quantize)
 from .ref import conv2d_ref

@@ -42,6 +42,23 @@ Float variants stream the same dataflow: ``native`` does f32 dots into one
 f32 accumulator; ``bf16x3``/``bf16x6`` run the multi-pass bf16 emulation
 schedules per tap -- the bf16 policies no longer materialize patches
 either.
+
+Fused dataflow epilogue (DESIGN.md section 7.7): with ``pool=(pw, ps)``
+the kernel maxpools the dequantized output tile in VMEM before the HBM
+writeback -- the grid's row axis then walks POOLED row blocks, each
+kernel invocation dequantizing ``bm + (pw - ps)`` conv rows (the pool
+window's overhang past the block comes from the same dual row-block halo
+binding that feeds the conv taps, so windows straddling the row-block
+seam are exact).  Rows past the true conv height are masked to -inf
+before the max.  With ``cell_scale`` given, the input is the PREVIOUS
+layer's ``pool_quant`` handoff: already-quantized int16 pixels plus their
+per-pixel (cell-upsampled) scales; each tap then skips quantization
+entirely -- exact int dot, immediate recombine, and a fused multiply by
+the tap's scale plane into the f32 accumulator (K-step outer, taps
+inner, the accumulation order the lax mirror reproduces bitwise).
+``pipeline=True`` declares the grid's spatial axes parallel and the K
+axis arbitrary via ``dimension_semantics``, letting Mosaic double-buffer
+the next K step's A/B tile DMAs behind the current limb passes.
 """
 from __future__ import annotations
 
@@ -113,24 +130,38 @@ def group_spans(cin: int, block_cin: int, fold_every: int) -> tuple:
 
 def _implicit_kernel(
     *refs, kh, kw, stride, bm, wo, variant, base_bits, qmax, nk, fold_every,
-    has_scale,
+    has_scale, handoff, pool, out_rows,
 ):
     it = iter(refs)
     x0_ref, x1_ref, w_ref = next(it), next(it), next(it)
-    ascale_ref = next(it) if has_scale else None
-    wscale_ref = next(it) if has_scale else None
+    if handoff:
+        s0_ref, s1_ref = next(it), next(it)
+        wscale_ref = next(it)
+        ascale_refs = None
+    else:
+        s0_ref = s1_ref = None
+        if has_scale:
+            ascale_refs = (next(it),) if pool is None else (next(it), next(it))
+            wscale_ref = next(it)
+        else:
+            ascale_refs, wscale_ref = None, None
     o_ref = next(it)
     integer = variant in INT_VARIANTS
-    if integer:
+    if integer and not handoff:
         acc_hh, acc_mid, acc_ll, acc_f = next(it), next(it), next(it), next(it)
     else:
         acc_f = next(it)
+    # Conv rows this invocation must produce: the pool fusion's window
+    # overhang past the row block ((pw - ps) extra rows) reads the SAME
+    # dual halo binding the conv taps already need.
+    bm_eff = bm if pool is None else bm + (pool[0] - pool[1])
     k = pl.program_id(3)
+    row_block = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         acc_f[...] = jnp.zeros_like(acc_f)
-        if integer:
+        if integer and not handoff:
             acc_hh[...] = jnp.zeros_like(acc_hh)
             acc_mid[...] = jnp.zeros_like(acc_mid)
             acc_ll[...] = jnp.zeros_like(acc_ll)
@@ -142,21 +173,39 @@ def _implicit_kernel(
     def taps():
         for dy in range(kh):
             for dx in range(kw):
-                yield jax.lax.slice(
+                yield dy, dx, jax.lax.slice(
                     x,
                     (dy, dx, 0),
-                    (dy + (bm - 1) * stride + 1,
+                    (dy + (bm_eff - 1) * stride + 1,
                      dx + (wo - 1) * stride + 1, x.shape[2]),
                     (stride, stride, 1),
-                ), w_ref[dy, dx]  # (bm, wo, bk), (bk, bc)
+                ), w_ref[dy, dx]  # (bm_eff, wo, bk), (bk, bc)
 
-    if variant == "native":
-        for rows, wtap in taps():
+    if handoff:
+        # Pre-quantized handoff input (pool_quant producer upstream): the
+        # pixels arrive as ints with per-pixel cell scales, so each tap is
+        # an exact int dot recombined IMMEDIATELY and folded into acc_f
+        # through the tap's scale plane -- K-step outer, taps inner, the
+        # f32 accumulation order the lax mirror reproduces bitwise.
+        sx = jnp.concatenate([s0_ref[0], s1_ref[0]], axis=0)  # (2*bm*s, Wp)
+        for dy, dx, rows, wtap in taps():
+            q = rows.astype(jnp.int32)
+            stap = jax.lax.slice(
+                sx, (dy, dx),
+                (dy + (bm_eff - 1) * stride + 1, dx + (wo - 1) * stride + 1),
+                (stride, stride))  # (bm_eff, wo)
+            p_hh, p_mid, p_ll = limb_partials(
+                q, wtap, _CIN_DNUMS, variant=variant, base_bits=base_bits)
+            rec = limb_recombine(p_hh, p_mid, p_ll,
+                                 base_bits=base_bits, dtype=jnp.float32)
+            acc_f[...] += stap[..., None] * rec
+    elif variant == "native":
+        for _, _, rows, wtap in taps():
             acc_f[...] += jax.lax.dot_general(
                 rows, wtap, _CIN_DNUMS, preferred_element_type=jnp.float32)
     elif variant in _BF16_PAIRS:
         terms, pairs = _BF16_PAIRS[variant]
-        for rows, wtap in taps():
+        for _, _, rows, wtap in taps():
             als, bls = float_split(rows, terms), float_split(wtap, terms)
             for i, j in pairs:
                 acc_f[...] += jax.lax.dot_general(
@@ -166,8 +215,8 @@ def _implicit_kernel(
         # Per-PATCH quantization of the gathered rows, in VMEM: the same
         # scale granularity the materialized path gets from per-row quant on
         # the patch matrix, with neither matrix ever written to HBM.
-        s = ascale_ref[0][..., None]  # (bm, wo, 1)
-        for rows, wtap in taps():
+        s = _scale_rows(ascale_refs, bm_eff)[..., None]  # (bm_eff, wo, 1)
+        for _, _, rows, wtap in taps():
             q = jnp.clip(jnp.round(rows / s), -qmax, qmax).astype(jnp.int32)
             p_hh, p_mid, p_ll = limb_partials(
                 q, wtap, _CIN_DNUMS, variant=variant, base_bits=base_bits)
@@ -177,8 +226,8 @@ def _implicit_kernel(
 
         # The per-K-block recombine schedule: fold the exact int32 partials
         # into the f32 group accumulator every `fold_every` steps (and on
-        # the last).  Single-group layers hit this exactly once -- the
-        # one-recombine contract (grep-tested single call site).
+        # the last).  Single-group layers hit this exactly once (grep-tested
+        # call site, alongside the handoff path's per-tap recombine above).
         @pl.when(jnp.logical_or((k + 1) % fold_every == 0, k == nk - 1))
         def _fold():
             acc_f[...] += limb_recombine(
@@ -191,14 +240,46 @@ def _implicit_kernel(
     @pl.when(k == nk - 1)
     def _emit():
         out = acc_f[...]
-        if has_scale:
+        if handoff:
+            # Activation scales were folded per tap; only the per-channel
+            # weight scale remains.
+            out = out * wscale_ref[...]
+        elif has_scale:
             # Dequant epilogue: per-patch x per-channel scale product, the
             # same two f32 multiplies (s_row*s_col, then raw*t) as the
             # materialized GEMM's dequant -- bias/activation live one level
             # up (ops wrapper) for the bitwise fused==unfused contract.
-            t = ascale_ref[0][..., None] * wscale_ref[...]  # (bm, wo, bc)
+            t = _scale_rows(ascale_refs, bm_eff)[..., None] * wscale_ref[...]
             out = out * t
+        if pool is not None:
+            pw, ps = pool
+            bm_p, wo_p = bm // ps, (wo - pw) // ps + 1
+            # Conv rows past the true output height hold row-padding
+            # garbage; mask them to -inf so they can never win the max
+            # (pooled rows made ONLY of masked rows are sliced off by the
+            # wrapper).
+            ridx = row_block * bm + jax.lax.broadcasted_iota(
+                jnp.int32, out.shape, 0)
+            out = jnp.where(ridx < out_rows, out, -jnp.inf)
+            pooled = None
+            for py in range(pw):
+                for px in range(pw):
+                    m = jax.lax.slice(
+                        out, (py, px, 0),
+                        (py + (bm_p - 1) * ps + 1,
+                         px + (wo_p - 1) * ps + 1, out.shape[2]),
+                        (ps, ps, 1))
+                    pooled = m if pooled is None else jnp.maximum(pooled, m)
+            out = pooled
         o_ref[0] = out
+
+
+def _scale_rows(ascale_refs, bm_eff):
+    """First bm_eff per-patch scale rows from the (dual, under pool) binding."""
+    if len(ascale_refs) == 1:
+        return ascale_refs[0][0]
+    s = jnp.concatenate([ascale_refs[0][0], ascale_refs[1][0]], axis=0)
+    return jax.lax.slice(s, (0, 0), (bm_eff, s.shape[1]))
 
 
 def conv2d_implicit_raw(
@@ -215,6 +296,10 @@ def conv2d_implicit_raw(
     wscale: jax.Array | None = None,
     fold_every: int | None = None,
     true_cin: int | None = None,
+    pool: tuple[int, int] | None = None,
+    out_rows: int | None = None,
+    cell_scale: jax.Array | None = None,
+    pipeline: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """x: (N, H, W, Cin) pre-padded NHWC; w: (KH, KW, Cin, Cout).
@@ -230,6 +315,18 @@ def conv2d_implicit_raw(
     count when the caller zero-padded Cin up to a bk multiple -- padded
     channels contribute exact zeros, so the wrap-free model must not count
     them.  Returns (N, out_h, WO, Cout) f32.
+
+    ``pool=(pw, ps)`` fuses a VALID pw x pw / stride-ps maxpool into the
+    epilogue: the return becomes (N, (out_h/bm)*(bm/ps), (WO-pw)//ps+1,
+    Cout) with ``out_rows`` (the TRUE conv height before row padding)
+    masking padded conv rows out of the max.  Needs bm % ps == 0 and the
+    window overhang inside the dual halo: (bm+(pw-ps)-1)*stride + kh <=
+    2*bm*stride.  ``cell_scale`` (N, H, W) switches the input to a
+    pre-quantized handoff (int values in ``x``, per-pixel scales here;
+    ``ascale`` must be None).  ``pipeline`` marks the K grid axis
+    arbitrary/spatial axes parallel so Mosaic double-buffers the next K
+    step's DMAs behind the current passes (TPU-only knob; harmless
+    elsewhere).
     """
     n, h, wdim, cin = x.shape
     kh, kw, _, cout = w.shape
@@ -239,14 +336,19 @@ def conv2d_implicit_raw(
     bc = min(bc, cout)
     bk = min(bk, cin)
     integer = variant in INT_VARIANTS
+    handoff = cell_scale is not None
     ho = out_h if out_h is not None else (h - kh) // stride + 1
     wo = (wdim - kw) // stride + 1
     assert ho % bm == 0, (ho, bm)
     assert cout % bc == 0, (cout, bc)
     assert cin % bk == 0, (cin, bk)
     assert bm * stride >= kh - stride, "halo: need bm*stride >= kh-stride"
+    if handoff:
+        assert integer and ascale is None
+        assert cell_scale.shape == (n, h, wdim), cell_scale.shape
+        assert wscale is not None and wscale.shape == (1, cout)
     nk = cin // bk
-    if integer:
+    if integer and not handoff:
         if fold_every is None:
             fold_every = recombine_schedule(kh, kw, true_cin, bk,
                                             variant=variant,
@@ -257,7 +359,20 @@ def conv2d_implicit_raw(
         assert limb_term_bound(variant, base_bits) * kh * kw * group_terms \
             < 2**31, "recombine group too deep for wrap-free int32 accumulation"
     else:
+        # Handoff recombines every tap immediately: one K step (kh*kw*bk
+        # terms) is the whole int32 accumulation window.
         fold_every = nk
+        if handoff:
+            assert limb_term_bound(variant, base_bits) * kh * kw * bk < 2**31
+    bm_eff, bm_p, wo_p = bm, bm, wo
+    if pool is not None:
+        pw, ps = pool
+        assert bm % ps == 0, (bm, ps)
+        bm_eff = bm + (pw - ps)
+        bm_p, wo_p = bm // ps, (wo - pw) // ps + 1
+        assert out_rows is not None and 0 < out_rows <= ho
+        assert (bm_eff - 1) * stride + kh <= 2 * bm * stride, \
+            "pool overhang must fit the dual row-block halo"
     n_row_blocks = ho // bm
     row_rows = bm * stride
     assert h >= (n_row_blocks + 1) * row_rows, "need one spare halo block"
@@ -267,7 +382,8 @@ def conv2d_implicit_raw(
         _implicit_kernel,
         kh=kh, kw=kw, stride=stride, bm=bm, wo=wo, variant=variant,
         base_bits=base_bits, qmax=qmax, nk=nk, fold_every=fold_every,
-        has_scale=ascale is not None,
+        has_scale=ascale is not None, handoff=handoff, pool=pool,
+        out_rows=out_rows,
     )
     in_specs = [
         pl.BlockSpec((1, row_rows, wdim, bk), lambda b, i, j, c: (b, i, 0, c)),
@@ -278,20 +394,51 @@ def conv2d_implicit_raw(
         pl.BlockSpec((kh, kw, bk, bc), lambda b, i, j, c: (0, 0, c, j)),
     ]
     operands = [x, x, w]  # x bound twice: row blocks i and i+1 form the halo
-    if ascale is not None:
+    if handoff:
+        # Per-pixel scales ride the same dual row-block halo binding as x.
+        in_specs.append(pl.BlockSpec(
+            (1, row_rows, wdim), lambda b, i, j, c: (b, i, 0)))
+        in_specs.append(pl.BlockSpec(
+            (1, row_rows, wdim),
+            lambda b, i, j, c, nb=nin_blocks: (b, jnp.minimum(i + 1, nb - 1), 0),
+        ))
+        in_specs.append(pl.BlockSpec((1, bc), lambda b, i, j, c: (0, j)))
+        sc = cell_scale.astype(jnp.float32)
+        operands += [sc, sc, wscale.astype(jnp.float32)]
+    elif ascale is not None:
         assert ascale.shape == (n, ho, wo), (ascale.shape, (n, ho, wo))
         assert wscale is not None and wscale.shape == (1, cout)
         in_specs.append(pl.BlockSpec((1, bm, wo), lambda b, i, j, c: (b, i, 0)))
+        if pool is not None:
+            # The pool overhang's conv rows need the NEXT row block's
+            # per-patch scales too -- dual-bind like x.
+            in_specs.append(pl.BlockSpec(
+                (1, bm, wo),
+                lambda b, i, j, c, nb=n_row_blocks: (b, jnp.minimum(i + 1, nb - 1), 0),
+            ))
         in_specs.append(pl.BlockSpec((1, bc), lambda b, i, j, c: (0, j)))
-        operands += [ascale.astype(jnp.float32), wscale.astype(jnp.float32)]
-    scratch = [pltpu.VMEM((bm, wo, bc), jnp.int32) for _ in range(3)] if integer else []
-    scratch.append(pltpu.VMEM((bm, wo, bc), jnp.float32))
+        asc = ascale.astype(jnp.float32)
+        operands += ([asc, asc] if pool is not None else [asc])
+        operands.append(wscale.astype(jnp.float32))
+    if integer and not handoff:
+        scratch = [pltpu.VMEM((bm_eff, wo, bc), jnp.int32) for _ in range(3)]
+    else:
+        scratch = []
+    scratch.append(pltpu.VMEM((bm_eff, wo, bc), jnp.float32))
+    kwargs = {}
+    if pipeline and not interpret:
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bm, wo, bc), lambda b, i, j, c: (b, i, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), jnp.float32),
+        out_specs=pl.BlockSpec(
+            (1, bm_p, wo_p, bc), lambda b, i, j, c: (b, i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, n_row_blocks * bm_p, wo_p, cout), jnp.float32),
         scratch_shapes=scratch,
         interpret=interpret,
+        **kwargs,
     )(*operands)

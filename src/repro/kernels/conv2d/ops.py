@@ -40,6 +40,7 @@ from jax import lax
 
 from repro.core.karatsuba import bf16xn_dot_general
 from repro.core.substrate import (
+    QActivation,
     QWeight,
     balanced_split,
     conv_pads,
@@ -332,6 +333,91 @@ def _stream_conv_int(xp, w_vals, ascale, spans, *, stride, ho, wo, variant,
     return acc
 
 
+def _cell_scales(grid, hp, wp):
+    """Upsample the (n, th, tw) tile scale grid to per-PIXEL scales.
+
+    Pixel (py, px) of the padded input takes the scale of 4x4/s2 tile
+    ``(min(py//2, th-1), min(px//2, tw-1))`` -- every pixel sits inside its
+    tile's amax window (the windows overlap by 2), so quantizing with the
+    cell scale can never clip past qmax.  This is the handoff analogue of
+    :func:`~repro.kernels.conv2d.winograd.tile_scales_upsampled`, which
+    upsamples to per-OUTPUT-position scales instead.
+    """
+    th, tw = grid.shape[1], grid.shape[2]
+    ri = jnp.minimum(jnp.arange(hp) // 2, th - 1)
+    ci = jnp.minimum(jnp.arange(wp) // 2, tw - 1)
+    return grid[:, ri][:, :, ci]
+
+
+@functools.partial(jax.jit, static_argnames=("base_bits",))
+def handoff_quantize(x: jax.Array, *, base_bits: int) -> QActivation:
+    """Quantize an activation ONCE per pixel for a 3x3/s1/SAME int consumer.
+
+    THE producer half of the ``pool_quant`` handoff (DESIGN.md section
+    7.7), shared verbatim by the fused epilogue and the unfused reference
+    pipeline so the bitwise contract is definitional: SAME-pad for the
+    consumer's 3x3/s1 conv, build the consumer's 4x4/s2 tile-granular
+    scale grid (PR 6's scale plan -- computable from this tensor alone),
+    round each cell scale UP to a power of two, and round/clip each
+    PADDED pixel with its cell's scale.  Padding pixels quantize to
+    exactly 0, so storing the padded int tensor equals re-padding an
+    unpadded one with integer zeros.
+
+    Power-of-two scales are what make the consumer's per-tap
+    scale-and-accumulate FMA-immune: a multiply by 2^e is EXACT in f32,
+    so ``fl(s*rec + acc)`` equals ``fl(fl(s*rec) + acc)`` whether or not
+    a backend contracts the multiply-add -- without this, the kernel and
+    its lax mirror drift an ulp apart at XLA:CPU's whim.  The cost is at
+    most one extra doubling of the quantization step vs the raw tile
+    scale, priced into the ``pool_quant`` exactness note (the fusion is
+    requant-gated in the planner precisely because it changes the
+    quantization recipe).
+    """
+    qmax = kom_qmax(base_bits)
+    n, h, w, c = x.shape
+    _, _, pads = conv_pads(h, w, 3, 3, 1, "SAME")
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), pads[0], pads[1], (0, 0)))
+    grid = tile_scale_grid(xp, qmax, -(-h // 2), -(-w // 2))
+    # Round up to 2^e: frexp gives grid = m * 2^e with m in [0.5, 1), so
+    # 2^e is the smallest power of two >= grid.
+    _, e = jnp.frexp(grid)
+    grid = jnp.ldexp(jnp.float32(1.0), e)
+    cs = _cell_scales(grid, xp.shape[1], xp.shape[2])
+    q = jnp.clip(jnp.round(xp / cs[..., None]), -qmax, qmax).astype(jnp.int16)
+    return QActivation(values=q, scale=grid, base_bits=base_bits, h=h, w=w)
+
+
+def _stream_conv_handoff(qp, cs, w_vals, *, bk, variant, base_bits):
+    """The lax mirror of the handoff-input implicit kernel, bitwise.
+
+    The input arrives pre-quantized (int16 pixels + per-pixel cell
+    scales), so there is nothing to quantize and nothing to fold: each
+    (K-chunk, tap) contributes one exact int32 limb dot, recombined
+    immediately and scaled by the tap's slice of the cell-scale plane.
+    The f32 accumulation order -- K-chunk outer, taps inner -- is the
+    kernel's grid order, reproduced here term by term.
+    """
+    kh, kw = w_vals.shape[:2]
+    n, hp, wp, cin = qp.shape
+    ho, wo = hp - kh + 1, wp - kw + 1
+    acc = None
+    for c0 in range(0, cin, bk):
+        c1 = min(c0 + bk, cin)
+        for dy in range(kh):
+            for dx in range(kw):
+                rows = lax.slice(qp, (0, dy, dx, c0),
+                                 (n, dy + ho, dx + wo, c1))
+                hh, mid, ll = _limb_partials_f32(
+                    rows.astype(jnp.int32), w_vals[dy, dx, c0:c1],
+                    variant=variant, base_bits=base_bits)
+                rec = limb_recombine(hh, mid, ll, base_bits=base_bits,
+                                     dtype=jnp.float32)
+                stap = lax.slice(cs, (0, dy, dx), (n, dy + ho, dx + wo))
+                g = stap[..., None] * rec
+                acc = g if acc is None else acc + g
+    return acc
+
+
 def _stream_conv_float(xp, w, *, stride, ho, wo, variant):
     """Float mirror: per-tap streamed dots (native f32 or bf16xN passes)."""
     kh, kw = w.shape[:2]
@@ -361,10 +447,11 @@ def _stream_conv_float(xp, w, *, stride, ho, wo, variant):
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "variant", "base_bits",
-                     "block", "fold_every", "use_pallas", "interpret"),
+                     "block", "fold_every", "use_pallas", "interpret",
+                     "pool", "k_pipeline"),
 )
 def _conv2d_implicit_core(
-    x: jax.Array,
+    x,
     w,
     *,
     stride: int,
@@ -375,6 +462,8 @@ def _conv2d_implicit_core(
     fold_every: int | None,
     use_pallas: bool | None,
     interpret: bool | None,
+    pool: tuple[int, int, str] | None = None,
+    k_pipeline: bool = True,
 ) -> jax.Array:
     """The jitted body of :func:`conv2d_implicit`, WITHOUT the epilogue.
 
@@ -384,10 +473,22 @@ def _conv2d_implicit_core(
     multiply and the bias add into one FMA -- which would skip the
     multiply's own rounding and break the bitwise fused==unfused contract
     (XLA:CPU contracts mul+add even across lax.optimization_barrier).
+
+    ``pool=(pw, ps, ppad)`` maxpools the dequantized output INSIDE this
+    scope, before the boundary -- in the kernel's VMEM epilogue on TPU
+    (VALID pools whose row blocks divide by ps; anything else falls back
+    to a reduce_window on the kernel output in the same jit scope), a
+    reduce_window in the mirror.  fp max is exact selection, so pooling
+    here then bias/relu outside equals bias/relu then pool bitwise (the
+    bias is per-channel constant over a window and relu is monotone) --
+    the ordering DESIGN.md section 7.7 documents.  ``x`` may be a
+    :class:`QActivation` handoff (pre-quantized pixels + cell scale grid)
+    from an upstream ``pool_quant`` epilogue.
     """
     if variant == "kom":
         variant = "karatsuba"
     integer = variant in INT_VARIANTS
+    handoff_in = isinstance(x, QActivation)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if interpret is None:
@@ -421,12 +522,28 @@ def _conv2d_implicit_core(
     if integer and fold_every is None:
         fold_every = recombine_schedule(kh, kw, cin, bk, variant=variant,
                                         base_bits=base_bits)
-    x = x.astype(jnp.float32)
+    if not handoff_in:
+        x = x.astype(jnp.float32)
+
+    kernel_pool = None
+    if pool is not None and use_pallas and pool[2] == "VALID" \
+            and bm % pool[1] == 0 \
+            and (bm + pool[0] - pool[1] - 1) * stride + kh <= 2 * bm * stride:
+        kernel_pool = (pool[0], pool[1])
 
     if not use_pallas:
         ho, wo, pads = conv_pads(h, wdim, kh, kw, stride, padding)
-        xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
-        if integer:
+        if handoff_in:
+            # Pre-quantized handoff: the producer already SAME-padded and
+            # quantized; contract the ints with per-(K-chunk, tap)
+            # recombine-and-scale -- the kernel's accumulation order.
+            cs = _cell_scales(x.scale, h + 2, wdim + 2)
+            raw = _stream_conv_handoff(
+                x.values, cs, w_vals, bk=bk, variant=variant,
+                base_bits=base_bits)
+            out = raw * w_scale
+        elif integer:
+            xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
             if winograd_scale_eligible(kh, kw, stride, cin, variant=variant,
                                        base_bits=base_bits):
                 # Winograd-eligible layers share the tile-granular scale
@@ -444,22 +561,34 @@ def _conv2d_implicit_core(
             # GEMM: t = s_patch * s_channel, then raw * t.
             out = raw * (ascale[..., None] * w_scale)
         else:
+            xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
             out = _stream_conv_float(xp, w_vals, stride=stride, ho=ho, wo=wo,
                                      variant=variant)
     else:
         while bm * stride < kh - stride:  # halo feasibility
             bm *= 2
         ho, wo, ho_pad, pads = _plan(h, wdim, kh, kw, stride, padding, bm)
-        xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
-        ascale = wsc = None
-        if integer:
-            if winograd_scale_eligible(kh, kw, stride, cin, variant=variant,
-                                       base_bits=base_bits):
-                s_tile = tile_scale_grid(xp, qmax, -(-ho_pad // 2),
-                                         -(-wo // 2))
-                ascale = tile_scales_upsampled(s_tile, ho_pad, wo)
-            else:
-                ascale = _patch_scales(xp, kh, kw, stride, qmax)[:, :ho_pad]
+        ascale = cs = wsc = None
+        if handoff_in:
+            # The producer's padded int tensor only needs the spare-halo
+            # row padding on top; integer zero rows (scale 0) contribute
+            # exact zero to every partial and are sliced away.
+            extra = (ho_pad // bm + 1) * bm * stride - (h + 2)
+            xp = jnp.pad(x.values, ((0, 0), (0, max(extra, 0)), (0, 0),
+                                    (0, 0)))
+            cs = jnp.pad(_cell_scales(x.scale, h + 2, wdim + 2),
+                         ((0, 0), (0, max(extra, 0)), (0, 0)))
+        else:
+            xp = jnp.pad(x, ((0, 0), pads[0], pads[1], (0, 0)))
+            if integer:
+                if winograd_scale_eligible(kh, kw, stride, cin,
+                                           variant=variant,
+                                           base_bits=base_bits):
+                    s_tile = tile_scale_grid(xp, qmax, -(-ho_pad // 2),
+                                             -(-wo // 2))
+                    ascale = tile_scales_upsampled(s_tile, ho_pad, wo)
+                else:
+                    ascale = _patch_scales(xp, kh, kw, stride, qmax)[:, :ho_pad]
         pk = (-cin) % bk
         if pk:  # zero channels contribute exact zeros to every partial
             xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, pk)))
@@ -476,14 +605,28 @@ def _conv2d_implicit_core(
             xp, w_vals, stride=stride, out_h=ho_pad, block=(bm, bc, bk),
             variant=variant, base_bits=base_bits, qmax=qmax,
             ascale=ascale, wscale=wsc, fold_every=fold_every,
-            true_cin=cin, interpret=interpret,
+            true_cin=cin, cell_scale=cs, pool=kernel_pool, out_rows=ho,
+            pipeline=k_pipeline, interpret=interpret,
         )
+        if kernel_pool is not None:
+            pw_, ps_ = kernel_pool
+            hp = (ho - pw_) // ps_ + 1
+            wp = (wo - pw_) // ps_ + 1
+            return raw[:, :hp, :wp, :cout]
         out = raw[:, :ho, :wo, :cout]
+    if pool is not None:
+        # Mirror / fallback pooling, same jit scope (same HBM boundary as
+        # the kernel epilogue): max over identical f32 values is exact
+        # selection, bitwise however it is evaluated.
+        pw_, ps_, ppad = pool
+        out = lax.reduce_window(out, -jnp.inf, lax.max,
+                                (1, pw_, pw_, 1), (1, ps_, ps_, 1),
+                                padding=ppad)
     return out
 
 
 def conv2d_implicit(
-    x: jax.Array,
+    x,
     w,
     *,
     stride: int = 1,
@@ -496,7 +639,10 @@ def conv2d_implicit(
     fold_every: int | None = None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
-) -> jax.Array:
+    pool: tuple | None = None,
+    quantize_next: int | None = None,
+    k_pipeline: bool = True,
+):
     """NHWC conv as an implicit GEMM: the patch matrix never exists in HBM.
 
     ``variant``: "native" (f32 dots), "bf16x3"/"bf16x6" (multi-pass bf16
@@ -523,24 +669,59 @@ def conv2d_implicit(
     lax program with identical group boundaries -- bitwise equal for the
     integer variants, so CPU CI/serving exercise the real schedule at XLA
     speed instead of interpret-mode Pallas.
+
+    Fused dataflow (DESIGN.md section 7.7): ``pool=(pw, ps[, ppad])``
+    folds the FOLLOWING maxpool into the epilogue (pool inside the core,
+    bias/relu on the pooled tensor here -- bitwise equal to pooling after
+    bias/relu because max is exact selection and relu monotone);
+    ``quantize_next=b`` then hands the result to the next 3x3/s1/SAME int
+    layer as a :class:`QActivation` via the shared :func:`handoff_quantize`.
+    A QActivation ``x`` is the consumer side: pre-quantized pixels + cell
+    scales, contracted with per-(K-chunk, tap) recombine-and-scale.
+    ``k_pipeline`` toggles the kernel's double-buffered K-step DMA
+    pipelining (planner-visible; no-op off-TPU).
     """
     v = "karatsuba" if variant == "kom" else variant
+    handoff_in = isinstance(x, QActivation)
+    if handoff_in:
+        if v not in INT_VARIANTS:
+            raise ValueError(
+                "QActivation input requires an integer limb variant")
+        if not isinstance(w, QWeight):
+            raise ValueError(
+                "QActivation input requires a cached QWeight (the handoff "
+                "is a serving-path contract)")
+        if (w.shape[0], w.shape[1], stride, padding) != (3, 3, 1, "SAME"):
+            raise ValueError(
+                "QActivation was quantized for a 3x3/s1/SAME consumer; got "
+                f"k={w.shape[0]}x{w.shape[1]} s{stride} {padding}")
+        if x.base_bits != w.base_bits:
+            raise ValueError(
+                f"handoff base_bits {x.base_bits} != weight base_bits "
+                f"{w.base_bits}: producer and consumer must share a policy")
     if v in INT_VARIANTS and not isinstance(w, QWeight):
         # Quantize float weights HERE, outside the jitted core, so an
         # on-the-fly call is bitwise identical to the cached-QWeight call
         # (inside the jit, XLA rewrites the /qmax division to a reciprocal
         # multiply and the scales drift an ulp from quantize_weight's).
         w = quantize_weight(w, base_bits=base_bits)
+    pool_t = None
+    if pool is not None:
+        pool_t = (int(pool[0]), int(pool[1]),
+                  pool[2] if len(pool) > 2 else "VALID")
     out = _conv2d_implicit_core(
         x, w, stride=stride, padding=padding, variant=variant,
         base_bits=base_bits, block=block, fold_every=fold_every,
-        use_pallas=use_pallas, interpret=interpret)
+        use_pallas=use_pallas, interpret=interpret, pool=pool_t,
+        k_pipeline=k_pipeline)
     if bias is not None:
         out = out + bias
     if activation == "relu":
         out = jax.nn.relu(out)
     elif activation is not None:
         raise ValueError(f"unknown activation: {activation!r}")
+    if quantize_next is not None:
+        out = handoff_quantize(out, base_bits=int(quantize_next))
     return out
 
 

@@ -483,28 +483,34 @@ def conv2d_winograd_raw(
     nin_blocks = h // (2 * bt)
     assert ascale is not None and ascale.shape == (n, th, tw)
     assert wscale is not None and wscale.shape == (1, cout)
-    grid = (n, n_row_blocks, cout // bc)
+    # Batch INNERMOST: for a fixed (row block, cout block) the int16 weight
+    # planes' block indices are constant across all N batch steps, so Pallas
+    # keeps them resident instead of re-fetching them per image -- weight
+    # traffic amortizes over the batch (conv_hbm_bytes models row_blocks
+    # without the xN factor to match).  The kernel body reads no program_id,
+    # so the iteration order is otherwise free.
+    grid = (n_row_blocks, cout // bc, n)
     kernel = functools.partial(
         _winograd_kernel, bt=bt, tw=tw, variant=variant,
         base_bits=base_bits, qmax=qmax)
     in_specs = [
-        pl.BlockSpec((1, 2 * bt, wdim, cin), lambda b, i, j: (b, i, 0, 0)),
+        pl.BlockSpec((1, 2 * bt, wdim, cin), lambda i, j, b: (b, i, 0, 0)),
         pl.BlockSpec(
             (1, 2 * bt, wdim, cin),
-            lambda b, i, j, nb=nin_blocks: (b, jnp.minimum(i + 1, nb - 1),
+            lambda i, j, b, nb=nin_blocks: (b, jnp.minimum(i + 1, nb - 1),
                                             0, 0),
         ),
-        pl.BlockSpec((4, 4, cin, bc), lambda b, i, j: (0, 0, 0, j)),
-        pl.BlockSpec((4, 4, cin, bc), lambda b, i, j: (0, 0, 0, j)),
-        pl.BlockSpec((1, bt, tw), lambda b, i, j: (b, i, 0)),
-        pl.BlockSpec((1, bc), lambda b, i, j: (0, j)),
+        pl.BlockSpec((4, 4, cin, bc), lambda i, j, b: (0, 0, 0, j)),
+        pl.BlockSpec((4, 4, cin, bc), lambda i, j, b: (0, 0, 0, j)),
+        pl.BlockSpec((1, bt, tw), lambda i, j, b: (b, i, 0)),
+        pl.BlockSpec((1, bc), lambda i, j, b: (0, j)),
     ]
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 2 * bt, 2 * tw, bc),
-                               lambda b, i, j: (b, i, 0, j)),
+                               lambda i, j, b: (b, i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((n, 2 * th, 2 * tw, cout),
                                        jnp.float32),
         interpret=interpret,

@@ -89,11 +89,12 @@ def _cnn_plan(cfg, args):
     """
     if getattr(args, "explore", False):
         from repro.core.planner import explore
-        plan = explore(cfg, model_only=getattr(args, "model_only", False))
+        plan = explore(cfg, model_only=getattr(args, "model_only", False),
+                       requant=getattr(args, "requant", False))
         for e in plan.entries:
             print(f"[serve] plan {e.key}: {e.path} block="
-                  f"{list(e.block) if e.block else '-'} est_us={e.est_us} "
-                  f"({e.source})")
+                  f"{list(e.block) if e.block else '-'} "
+                  f"fusion={e.fusion} est_us={e.est_us} ({e.source})")
         return plan
     if getattr(args, "plan", None):
         from repro.core.planner import load_plans, plan_key
@@ -103,7 +104,12 @@ def _cnn_plan(cfg, args):
             raise SystemExit(
                 f"--plan {args.plan}: no plan for {key!r} "
                 f"(has {sorted(plans)})")
-        return plans[key]
+        plan = plans[key]
+        for e in plan.entries:
+            print(f"[serve] plan {e.key}: {e.path} block="
+                  f"{list(e.block) if e.block else '-'} "
+                  f"fusion={e.fusion} ({e.source})")
+        return plan
     return None
 
 
@@ -249,6 +255,10 @@ def main(argv=None):
     ap.add_argument("--model-only", action="store_true",
                     help="with --explore: score by the roofline cost model "
                          "instead of measuring (no warmup execution)")
+    ap.add_argument("--requant", action="store_true",
+                    help="with --explore: allow the pool_quant epilogue "
+                         "fusion (cross-layer handoff quantization, "
+                         "DESIGN.md 7.7)")
     ap.add_argument("--policy", default=None)
     ap.add_argument("--slo", default=None,
                     help="SLO class per request: interactive | standard | "

@@ -24,8 +24,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.precision import MatmulPolicy, policy_linear
-from repro.core.substrate import QWeight, conv2d, policy_int_spec, quantize_weight
+from repro.core.substrate import (QActivation, QWeight, conv2d,
+                                  policy_int_spec, quantize_weight)
 from repro.core.systolic import pool2d
+
+#: Thin-stem floor for the pool_quant handoff: a consumer thinner than this
+#: is on the im2col stem path anyway (see ``select_conv_path``), so the
+#: producer must not hand it pre-quantized activations.
+HANDOFF_MIN_CIN = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +135,36 @@ def cnn_conv_geometries(cfg: CNNConfig) -> List[dict]:
     return out
 
 
+def cnn_layer_topology(cfg: CNNConfig) -> List[dict]:
+    """:func:`cnn_conv_geometries` plus the fusion-relevant adjacency.
+
+    Per conv POSITION (not per deduped geometry): the geometry dict plus
+    ``pool_after`` (the next layer is the 2x2/s2 maxpool, so the ``pool``
+    epilogue fusion applies here) and ``handoff_next`` (additionally, the
+    conv AFTER that pool is a 3x3/s1/SAME layer wide enough for the
+    ``pool_quant`` handoff).  The planner's fusion axis, ``planner
+    --check``'s applicability validation and the whole-network traffic
+    model all read this one walker instead of re-deriving adjacency.
+    """
+    geoms = cnn_conv_geometries(cfg)
+    out: List[dict] = []
+    gi = 0
+    for i, spec in enumerate(cfg.layers):
+        if spec[0] != "conv":
+            continue
+        g = geoms[gi]
+        gi += 1
+        pool_after = i + 1 < len(cfg.layers) and cfg.layers[i + 1] == ("pool",)
+        nxt = cfg.layers[i + 2] if pool_after and i + 2 < len(cfg.layers) \
+            else None
+        handoff_next = bool(
+            pool_after and nxt is not None and nxt[0] == "conv"
+            and nxt[1] == 3 and nxt[3] == 1 and g["cout"] >= HANDOFF_MIN_CIN)
+        out.append({**g, "pool_after": pool_after,
+                    "handoff_next": handoff_next})
+    return out
+
+
 def cnn_init(cfg: CNNConfig, key, dtype=jnp.float32):
     params = []
     cin = cfg.in_channels
@@ -189,7 +225,24 @@ def cnn_quantize_params(params, cfg: CNNConfig):
     return out
 
 
-def cnn_forward(params, cfg: CNNConfig, x, plan=None):
+def _handoff_consumer_ok(cfg: CNNConfig, params, i: int) -> bool:
+    """True iff conv position ``i``'s pool_quant handoff has a taker.
+
+    The layer after position ``i``'s pool must be a 3x3/s1/SAME conv on
+    the cached-QWeight serving path with cin >= HANDOFF_MIN_CIN -- the
+    shape/policy conditions under which :func:`conv2d` accepts a
+    :class:`QActivation`.
+    """
+    j = i + 2
+    if j >= len(cfg.layers) or cfg.layers[j][0] != "conv":
+        return False
+    _, k2, _, stride2 = cfg.layers[j]
+    _, _, cout_i, _ = cfg.layers[i]
+    return (k2 == 3 and stride2 == 1 and cout_i >= HANDOFF_MIN_CIN
+            and isinstance(params[j]["w"], QWeight))
+
+
+def cnn_forward(params, cfg: CNNConfig, x, plan=None, *, fuse=True):
     """x: (n, H, W, C) image batch -> (n, n_classes) logits.
 
     ``params`` may hold float weights or cached QWeight leaves (from
@@ -205,34 +258,74 @@ def cnn_forward(params, cfg: CNNConfig, x, plan=None):
     under an integer policy keep the trainable im2col STE dispatch --
     and layers the plan does not cover (e.g. a reduced twin's shrunken
     geometries against a full-size artifact) fall back to auto.
+
+    Plan entries with ``fusion`` "pool"/"pool_quant" fold the FOLLOWING
+    maxpool (and the next layer's activation quantization) into the conv
+    epilogue where the fusion actually applies: plan entries are keyed by
+    geometry, which dedups positions, so the fusion only fires at
+    positions the topology supports (implicit path, a pool next, and for
+    pool_quant an eligible 3x3/s1 consumer -- DESIGN.md section 7.7).
+    ``fuse=False`` runs the UNFUSED reference pipeline for the same plan
+    (separate conv -> pool2d -> handoff_quantize calls); the two are
+    bitwise equal, which the fused-dataflow tests assert per model.
     """
     use_plan = cfg.conv_path == "auto"
     if use_plan and plan is None:
         from repro.core.planner import resolve_plan
         plan = resolve_plan(cfg)
-    int_policy = policy_int_spec(cfg.policy) is not None
+    spec_int = policy_int_spec(cfg.policy)
+    int_policy = spec_int is not None
     first_conv = True
+    skip_pool = False        # the previous conv already pooled in-epilogue
+    quant_after_pool = None  # unfused reference: quantize after pool2d
     for i, spec in enumerate(cfg.layers):
         p = params[i]
         if spec[0] == "conv":
             _, k, cout, stride = spec
             padding = "VALID" if (cfg.name == "alexnet" and first_conv) else "SAME"
             first_conv = False
-            path, block = cfg.conv_path, None
+            path, block, fusion = cfg.conv_path, None, "bias_relu"
             if use_plan and plan is not None \
                     and (not int_policy or isinstance(p["w"], QWeight)):
                 ent = plan.lookup(kh=k, kw=k, stride=stride, h=x.shape[1],
                                   cin=x.shape[3], cout=cout, padding=padding)
                 if ent is not None:
-                    path, block = ent.path, ent.block
+                    path, block, fusion = ent.path, ent.block, ent.fusion
+            if isinstance(x, QActivation):
+                # A handoff input is an implicit-engine contract; the
+                # entry's block still applies when it planned implicit.
+                if path != "implicit":
+                    path, block = "implicit", None
+            do_pool = (fusion in ("pool", "pool_quant") and path == "implicit"
+                       and i + 1 < len(cfg.layers)
+                       and cfg.layers[i + 1] == ("pool",))
+            do_quant = (do_pool and fusion == "pool_quant" and int_policy
+                        and _handoff_consumer_ok(cfg, params, i))
             # One fused call per conv layer: bias add + ReLU (and the dequant
             # scale under integer policies) ride the conv epilogue instead of
             # three HBM round-trips (DESIGN.md section 7.3).
-            x = conv2d(x, p["w"], stride=stride, padding=padding,
-                       policy=cfg.policy, path=path, block=block,
-                       bias=p["b"], activation="relu")
+            if fuse and do_pool:
+                x = conv2d(x, p["w"], stride=stride, padding=padding,
+                           policy=cfg.policy, path=path, block=block,
+                           bias=p["b"], activation="relu",
+                           pool=(2, 2, "VALID"),
+                           quantize_next=spec_int[1] if do_quant else None)
+                skip_pool = True
+            else:
+                x = conv2d(x, p["w"], stride=stride, padding=padding,
+                           policy=cfg.policy, path=path, block=block,
+                           bias=p["b"], activation="relu")
+                if do_pool and do_quant:
+                    quant_after_pool = spec_int[1]
         elif spec[0] == "pool":
-            x = pool2d(x, window=2, stride=2, kind="max")
+            if skip_pool:
+                skip_pool = False
+            else:
+                x = pool2d(x, window=2, stride=2, kind="max")
+                if quant_after_pool is not None:
+                    from repro.kernels.conv2d import handoff_quantize
+                    x = handoff_quantize(x, base_bits=quant_after_pool)
+                    quant_after_pool = None
         else:
             if x.ndim == 4:
                 x = x.reshape(x.shape[0], -1)

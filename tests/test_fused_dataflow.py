@@ -1,0 +1,413 @@
+"""Cross-layer fused dataflow (DESIGN.md 7.7): pooled conv epilogue,
+pool_quant handoff, traffic model, planner fusion axis, perf-gate rows.
+
+The contracts under test:
+
+1. **Pool fusion is bitwise invisible.**  `conv2d(..., pool=...)` equals
+   the unfused conv -> bias/relu -> `pool2d` chain bit for bit -- max is
+   exact selection, bias a per-channel constant over the window, relu
+   monotone.  Covered: odd and even H/W, VALID and SAME pools, a 3x2
+   window straddling the dual-halo row-block seam, both int policies,
+   eager and jitted, interpret-mode Pallas kernel vs lax mirror.
+2. **The handoff is one shared recipe.**  The fused pool_quant epilogue
+   and the unfused conv -> pool2d -> `handoff_quantize` -> conv chain
+   produce bitwise-identical downstream outputs (producer and reference
+   share ONE quantizer), per model through `cnn_forward(fuse=...)` and
+   the serving engine.
+3. **The traffic model prices the fusion honestly** (>=30% modeled HBM
+   reduction on VGG16's pooled conv layers; winograd weight traffic
+   amortizes over batch after the batch-innermost grid reorder).
+4. **The planner validates the fusion axis** (`planner.check`:
+   pool_quant on systolic must fail; pool fusion on a geometry no pool
+   follows must fail) and the degraded-mode plan downgrades pool fusions.
+5. **Perf-gate traffic rows are deterministic**: judged absolutely and
+   excluded from the machine calibration median.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import MatmulPolicy
+from repro.core.substrate import (
+    FUSIONS,
+    QActivation,
+    conv2d,
+    path_supports_fusion,
+    policy_int_spec,
+    quantize_weight,
+)
+from repro.core.systolic import pool2d
+from repro.core.tuning import conv_hbm_bytes, feasible
+from repro.kernels.conv2d import handoff_quantize
+from repro.kernels.conv2d.ops import conv2d_implicit
+from repro.models.cnn import (
+    cnn_forward,
+    cnn_init,
+    cnn_layer_topology,
+    cnn_quantize_params,
+    cnn_reduced,
+)
+
+POLICIES = [MatmulPolicy.KOM_INT14, MatmulPolicy.SCHOOLBOOK_INT16]
+
+
+def _case(h, cin, cout, *, k=3, n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, h, h, cin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, k, cin, cout)) * 0.1,
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_normal((cout,)), jnp.float32)
+    return x, w, b
+
+
+# -- 1. pool fusion: fused == unfused, kernel == mirror -----------------------
+
+@pytest.mark.parametrize("pol", POLICIES)
+@pytest.mark.parametrize("h,pool", [
+    (12, (2, 2, "VALID")),    # even feature map, the serving pool
+    (9, (2, 2, "VALID")),     # odd H/W: last row/col dropped by VALID
+    (9, (2, 2, "SAME")),      # SAME pool: reduce_window fallback in-jit
+    (11, (3, 2, "VALID")),    # 3x2 window: crosses conv-row-block seams
+])
+def test_pool_fused_bitwise_equals_unfused(pol, h, pool):
+    variant, base_bits = policy_int_spec(pol)
+    x, w, b = _case(h, cin=16, cout=16)
+    qw = quantize_weight(w, base_bits=base_bits)
+    fused = conv2d(x, qw, stride=1, padding="SAME", policy=pol,
+                   path="implicit", bias=b, activation="relu", pool=pool)
+    ref = pool2d(conv2d(x, qw, stride=1, padding="SAME", policy=pol,
+                        path="implicit", bias=b, activation="relu"),
+                 window=pool[0], stride=pool[1], kind="max",
+                 padding=pool[2])
+    assert fused.shape == ref.shape
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+    # jitted caller: same bits (the pool runs inside the core jit already)
+    jf = jax.jit(lambda a, q: conv2d(
+        a, q, stride=1, padding="SAME", policy=pol, path="implicit",
+        bias=b, activation="relu", pool=pool))(x, qw)
+    np.testing.assert_array_equal(np.asarray(jf), np.asarray(ref))
+
+
+@pytest.mark.parametrize("variant,base_bits",
+                         [("karatsuba", 7), ("schoolbook", 8)])
+@pytest.mark.parametrize("h,pool,block", [
+    (12, (2, 2, "VALID"), (4, 128, 8)),
+    # 21 conv rows over bm=4 blocks: the 3-row window at pooled row 1
+    # needs conv rows 2..4 -- rows 2,3 from block 0, row 4 from block 1
+    # (the dual-halo overhang row) -- the seam-straddle case.
+    (21, (3, 2, "VALID"), (4, 128, 16)),
+    (17, (2, 2, "SAME"), (4, 128, 16)),   # SAME: in-jit fallback path
+])
+def test_pool_kernel_bitwise_equals_mirror(variant, base_bits, h, pool,
+                                           block):
+    x, w, b = _case(h, cin=16, cout=16, n=1)
+    qw = quantize_weight(w, base_bits=base_bits)
+    kw = dict(stride=1, padding="SAME", variant=variant, block=block,
+              bias=b, activation="relu", pool=pool)
+    mir = conv2d_implicit(x, qw, use_pallas=False, **kw)
+    ker = conv2d_implicit(x, qw, use_pallas=True, interpret=True, **kw)
+    np.testing.assert_array_equal(np.asarray(mir), np.asarray(ker))
+
+
+def test_k_pipeline_toggle_is_bitwise_noop():
+    """dimension_semantics reorders DMA, never results: toggling the
+    K-step pipeline changes no bits (kernel and mirror alike)."""
+    x, w, b = _case(12, cin=32, cout=16, n=1)
+    qw = quantize_weight(w)
+    kw = dict(stride=1, padding="SAME", variant="karatsuba",
+              block=(8, 128, 8), bias=b, activation="relu")
+    for use_pallas in (False, True):
+        extra = {"interpret": True} if use_pallas else {}
+        on = conv2d_implicit(x, qw, use_pallas=use_pallas,
+                             k_pipeline=True, **kw, **extra)
+        off = conv2d_implicit(x, qw, use_pallas=use_pallas,
+                              k_pipeline=False, **kw, **extra)
+        np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+
+
+def test_pool2d_same_padding():
+    x = jnp.arange(2 * 5 * 5 * 3, dtype=jnp.float32).reshape(2, 5, 5, 3)
+    out = pool2d(x, window=2, stride=2, kind="max", padding="SAME")
+    assert out.shape == (2, 3, 3, 3)
+    ref = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                (1, 2, 2, 1), "SAME")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# -- 2. the pool_quant handoff ------------------------------------------------
+
+@pytest.mark.parametrize("pol", POLICIES)
+@pytest.mark.parametrize("h", [12, 9])   # even + odd producer maps
+def test_handoff_fused_equals_unfused_chain(pol, h):
+    """Fused producer epilogue (pool + quantize_next) feeding the handoff
+    consumer == the explicit conv -> pool2d -> handoff_quantize -> conv
+    chain, bit for bit -- producer and reference share handoff_quantize."""
+    variant, base_bits = policy_int_spec(pol)
+    x, w1, b1 = _case(h, cin=16, cout=16)
+    _, w2, b2 = _case(h, cin=16, cout=16, seed=1)
+    q1 = quantize_weight(w1, base_bits=base_bits)
+    q2 = quantize_weight(w2, base_bits=base_bits)
+
+    def consume(qact):
+        return conv2d(qact, q2, stride=1, padding="SAME", policy=pol,
+                      path="implicit", bias=b2, activation="relu")
+
+    fused_q = conv2d(x, q1, stride=1, padding="SAME", policy=pol,
+                     path="implicit", bias=b1, activation="relu",
+                     pool=(2, 2, "VALID"), quantize_next=base_bits)
+    assert isinstance(fused_q, QActivation)
+    y = conv2d(x, q1, stride=1, padding="SAME", policy=pol,
+               path="implicit", bias=b1, activation="relu")
+    y = pool2d(y, window=2, stride=2, kind="max")
+    ref_q = handoff_quantize(y, base_bits=base_bits)
+    np.testing.assert_array_equal(np.asarray(fused_q.values),
+                                  np.asarray(ref_q.values))
+    np.testing.assert_array_equal(np.asarray(fused_q.scale),
+                                  np.asarray(ref_q.scale))
+    np.testing.assert_array_equal(np.asarray(consume(fused_q)),
+                                  np.asarray(consume(ref_q)))
+
+
+def test_handoff_cell_scales_are_powers_of_two():
+    """The handoff grid rounds tile scales UP to powers of two, making the
+    consumer's scale-multiply exact in f32 (FMA-contraction immune)."""
+    x, _, _ = _case(10, cin=16, cout=16)
+    q = handoff_quantize(x, base_bits=7)
+    s = np.asarray(q.scale)
+    m, e = np.frexp(s)
+    np.testing.assert_array_equal(m, np.full_like(m, 0.5))
+    assert np.abs(np.asarray(q.values)).max() <= 8127
+
+
+@pytest.mark.parametrize("pol", POLICIES)
+@pytest.mark.parametrize("name", ["alexnet", "vgg16", "vgg19"])
+def test_model_fused_bitwise_equals_unfused(name, pol):
+    """Whole-network: cnn_forward under a requant plan, fused vs the
+    unfused reference pipeline for the SAME plan -- bitwise, eager and
+    jitted, and through the serving engine."""
+    from repro.core.planner import explore
+    from repro.serving.cnn_engine import CNNServeEngine, ImageRequest
+
+    cfg = cnn_reduced(get_config(name)).replace(policy=pol)
+    plan = explore(cfg, model_only=True, requant=True)
+    assert any(e.fusion == "pool_quant" for e in plan.entries), \
+        f"{name}: requant plan fused nothing -- test is vacuous"
+    params = cnn_init(cfg, jax.random.PRNGKey(0))
+    qp = cnn_quantize_params(params, cfg)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(
+        (2, cfg.img_size, cfg.img_size, cfg.in_channels)), jnp.float32)
+    fused = cnn_forward(qp, cfg, x, plan=plan, fuse=True)
+    ref = cnn_forward(qp, cfg, x, plan=plan, fuse=False)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+    # jit can contract FMAs differently from eager, so the fused==unfused
+    # contract is judged WITHIN each execution mode, never across modes
+    jf = jax.jit(lambda p, a: cnn_forward(p, cfg, a, plan=plan,
+                                          fuse=True))(qp, x)
+    ju = jax.jit(lambda p, a: cnn_forward(p, cfg, a, plan=plan,
+                                          fuse=False))(qp, x)
+    np.testing.assert_array_equal(np.asarray(jf), np.asarray(ju))
+    eng = CNNServeEngine(cfg, params, buckets=(2,), plan=plan)
+    for uid in range(2):
+        eng.submit(ImageRequest(uid=uid, image=np.asarray(x[uid])))
+    outs = eng.run()
+    for uid in range(2):
+        np.testing.assert_array_equal(outs[uid].logits,
+                                      np.asarray(jf[uid]))
+
+
+# -- 3. traffic model ---------------------------------------------------------
+
+def test_vgg16_pooled_traffic_reduction():
+    """The acceptance bar: >=30% modeled HBM reduction on VGG16's pooled
+    conv layers under the fused plan (full-size geometry)."""
+    from repro.analysis.traffic import fusion_traffic_report
+    from repro.core.planner import explore
+
+    cfg = get_config("vgg16").replace(policy=MatmulPolicy.KOM_INT14)
+    plan = explore(cfg, model_only=True, requant=True)
+    rep = fusion_traffic_report(cfg, plan)
+    assert rep["pooled_reduction"] >= 0.30, rep
+    assert rep["fused_bytes"] < rep["unfused_bytes"]
+
+
+def test_traffic_model_fused_never_worse_per_layer():
+    from repro.analysis.traffic import model_traffic
+    from repro.core.planner import explore
+
+    cfg = get_config("vgg16").replace(policy=MatmulPolicy.KOM_INT14)
+    plan = explore(cfg, model_only=True, requant=True)
+    f = model_traffic(cfg, plan, fused=True)
+    u = model_traffic(cfg, plan, fused=False)
+    for fr, ur in zip(f["layers"], u["layers"]):
+        assert fr["total_bytes"] <= ur["total_bytes"], (fr, ur)
+
+
+def test_winograd_hbm_bytes_amortize_over_batch():
+    """Regression (satellite 1): the winograd traffic model's weight term
+    must NOT scale with batch -- the grid runs batch innermost, weight
+    planes stay resident.  Per-image bytes at n=8 must be strictly below
+    n=1, by at least the weight re-read the old model double-counted."""
+    kw = dict(kh=3, kw=3, stride=1, h=28, cin=512, cout=512,
+              variant="karatsuba", base_bits=7)
+    b1 = conv_hbm_bytes("winograd", n=1, **kw)
+    b8 = conv_hbm_bytes("winograd", n=8, **kw)
+    assert b8 < 8 * b1
+    wino_w_bytes = 2 * 16 * kw["cin"] * kw["cout"] * 2
+    assert 8 * b1 - b8 >= 7 * wino_w_bytes
+
+
+def test_winograd_batched_conv_still_exact():
+    """The grid reorder behind the amortization must not change results:
+    batched winograd == the materialized im2col reference, bitwise."""
+    x, w, _ = _case(12, cin=16, cout=16, n=3)
+    qw = quantize_weight(w)
+    pol = MatmulPolicy.KOM_INT14
+    wino = conv2d(x, qw, stride=1, padding="SAME", policy=pol,
+                  path="winograd")
+    ref = conv2d(x, qw, stride=1, padding="SAME", policy=pol,
+                 path="im2col")
+    np.testing.assert_array_equal(np.asarray(wino), np.asarray(ref))
+
+
+def test_conv_hbm_bytes_fusion_axis():
+    kw = dict(kh=3, kw=3, stride=1, h=56, cin=128, cout=128,
+              variant="karatsuba", base_bits=7)
+    base = conv_hbm_bytes("implicit", fusion="bias_relu", **kw)
+    none = conv_hbm_bytes("implicit", fusion="none", **kw)
+    pool = conv_hbm_bytes("implicit", fusion="pool", **kw)
+    pq = conv_hbm_bytes("implicit", fusion="pool_quant", **kw)
+    assert none > base > pool > pq
+    hin = conv_hbm_bytes("implicit", fusion="bias_relu", handoff_in=True,
+                         **kw)
+    assert hin < base
+    with pytest.raises(ValueError, match="unknown fusion"):
+        conv_hbm_bytes("implicit", fusion="maxout", **kw)
+
+
+# -- 4. planner: fusion validation, capability table, degrade -----------------
+
+def test_path_supports_fusion_table():
+    for f in FUSIONS:
+        assert path_supports_fusion("implicit", f)
+    for p in ("im2col", "systolic", "winograd", "auto"):
+        assert path_supports_fusion(p, "bias_relu")
+        assert path_supports_fusion(p, "none")
+        assert not path_supports_fusion(p, "pool")
+        assert not path_supports_fusion(p, "pool_quant")
+    with pytest.raises(ValueError):
+        path_supports_fusion("implicit", "maxout")
+
+
+def test_feasible_rejects_pool_fusion_off_implicit():
+    ok, why = feasible("systolic", kh=3, kw=3, stride=1, h=28, cin=64,
+                       cout=128, variant="karatsuba", base_bits=7,
+                       block=(8, 128), fusion="pool_quant")
+    assert not ok and "implicit" in why
+
+
+def test_planner_check_flags_fusion_violations(tmp_path):
+    """A committed artifact carrying pool_quant on systolic, a pool fusion
+    where no pool follows, or an unknown fusion must fail `check`."""
+    from repro.core.planner import check, explore, save_plans
+
+    cfg = get_config("vgg16").replace(policy=MatmulPolicy.KOM_INT14)
+    plan = explore(cfg, model_only=True, requant=True, backend="cpu")
+    by_fusion = {e.fusion: e for e in plan.entries}
+    assert "pool_quant" in by_fusion and "bias_relu" in by_fusion
+    entries = []
+    for e in plan.entries:
+        if e is by_fusion["pool_quant"]:
+            # pool_quant on an engine with no pooled epilogue
+            entries.append(dataclasses.replace(e, path="systolic",
+                                               block=(8, 128)))
+        elif e is by_fusion["bias_relu"]:
+            # bias_relu entries here are NOT pool-followed geometries
+            entries.append(dataclasses.replace(e, fusion="pool"))
+        else:
+            entries.append(e)
+    bad = dataclasses.replace(plan, entries=tuple(entries))
+    path = save_plans([bad], path=tmp_path / "cpu.json")
+    errors = check([path])
+    assert any("not implementable by path 'systolic'" in e for e in errors)
+    assert any("no maxpool follows" in e for e in errors)
+    # unknown fusion string (own dir: the file stem is the backend stamp)
+    worse = dataclasses.replace(plan, entries=tuple(
+        dataclasses.replace(e, fusion="maxout") for e in plan.entries))
+    path2 = save_plans([worse], path=tmp_path / "sub" / "cpu.json")
+    errors2 = check([path2])
+    assert any("unknown fusion" in e for e in errors2)
+    # the explorer's own requant plan is violation-free
+    good = save_plans([plan], path=tmp_path / "good" / "cpu.json")
+    assert check([good]) == []
+
+
+def test_materialized_fallback_downgrades_pool_fusions():
+    from repro.core.planner import explore, materialized_fallback_plan
+
+    cfg = cnn_reduced(get_config("vgg16")).replace(
+        policy=MatmulPolicy.KOM_INT14)
+    plan = explore(cfg, model_only=True, requant=True)
+    fb = materialized_fallback_plan(plan)
+    assert all(e.path == "im2col" for e in fb.entries)
+    assert all(e.fusion not in ("pool", "pool_quant") for e in fb.entries)
+
+
+def test_topology_walker_marks_handoffs():
+    cfg = get_config("vgg16")
+    topo = cnn_layer_topology(cfg)
+    assert len(topo) == 13
+    # conv1_2, conv2_2, conv3_3, conv4_3, conv5_3 are pool-followed
+    assert sum(t["pool_after"] for t in topo) == 5
+    # all but the last (FC follows its pool) have a 3x3/s1 consumer
+    assert sum(t["handoff_next"] for t in topo) == 4
+    assert not topo[-1]["handoff_next"]
+
+
+# -- 5. perf gate: deterministic traffic rows ---------------------------------
+
+def _payload(serving, traffic):
+    return {"serving": [dict(model=m, path=p, policy="kom_int14",
+                             images_per_s=v) for (m, p, v) in serving],
+            "layers": [], "loadgen": [],
+            "traffic": [dict(model=m, policy="kom_int14", fused_bytes=v)
+                        for (m, v) in traffic]}
+
+
+def test_perf_gate_traffic_rows_do_not_poison_calibration():
+    """A 2x-slower runner: every measured row halves, traffic rows are
+    bit-identical.  With traffic excluded from the median the gate
+    calibrates to 0.5 and passes; folding them in would flag every
+    measured row."""
+    from benchmarks.perf_gate import gate
+
+    serving_base = [("a", "auto", 100.0), ("a", "plan", 110.0),
+                    ("b", "auto", 50.0), ("b", "plan", 55.0)]
+    serving_new = [(m, p, v * 0.5) for (m, p, v) in serving_base]
+    traffic = [("a", 1e8), ("b", 2e8)]
+    base = _payload(serving_base, traffic)
+    new = _payload(serving_new, traffic)
+    report = gate(base, new, min_rows=3)
+    assert report["status"] == "pass", report["failures"]
+    assert report["calibration"] == 0.5
+
+
+def test_perf_gate_traffic_regression_fails_absolutely():
+    """Modeled bytes growing 40% fails even when every measured row is
+    healthy -- deterministic rows get no machine-calibration excuse."""
+    from benchmarks.perf_gate import gate
+
+    serving = [("a", "auto", 100.0), ("a", "plan", 110.0),
+               ("b", "auto", 50.0), ("b", "plan", 55.0)]
+    base = _payload(serving, [("a", 1e8)])
+    new = _payload(serving, [("a", 1.4e8)])
+    report = gate(base, new, min_rows=3)
+    assert report["status"] == "fail"
+    keys = [tuple(f["key"]) for f in report["failures"]]
+    assert ("traffic", "a", "kom_int14", "hbm_model_bytes") in keys

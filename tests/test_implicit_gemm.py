@@ -64,11 +64,14 @@ def _case(k, s=1, h=14, cin=8, cout=8, n=1, seed=0):
 # -- 1. no patch matrix -------------------------------------------------------
 
 def test_implicit_kernel_grep_contract():
-    """One limb_recombine call site (the fold), shared limb_partials, no
-    local digit split, and no patch materialization anywhere on the path."""
+    """Two limb_recombine call sites -- the per-K-block fold and the
+    handoff path's per-tap recombine (scales fold per tap, DESIGN.md 7.7)
+    -- shared limb_partials, no local digit split, and no patch
+    materialization anywhere on the path."""
     text = KERNEL_FILE.read_text()
-    assert text.count("limb_recombine(") == 1, (
-        "the implicit kernel must recombine through ONE fold call site")
+    assert text.count("limb_recombine(") == 2, (
+        "the implicit kernel recombines through exactly TWO call sites: "
+        "the per-K-block fold and the handoff per-tap recombine")
     assert "limb_partials(" in text
     assert "conv_general_dilated_patches" not in text
     ops_text = OPS_FILE.read_text()
